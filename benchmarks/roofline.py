@@ -1,0 +1,120 @@
+"""Roofline report: reads ``experiments/dryrun/*.json`` into the
+EXPERIMENTS.md section-Roofline table and picks hillclimb candidates.
+
+Terms (TPU v5e): compute = flops / 197e12, memory = hbm_bytes / 819e9,
+collective = collective_bytes / 50e9 — all per chip per step, from the
+HLO walker (while-loop trip counts included).
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline [--md out.md]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+
+def load(tag: str = ""):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        r = json.load(open(f))
+        if r.get("tag", "") != tag:
+            continue
+        recs.append(r)
+    return recs
+
+
+def fmt_s(x):
+    if x is None:
+        return "-"
+    if x >= 1.0:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}us"
+
+
+def table(recs, *, multi_pod=False):
+    lines = [
+        "| arch | shape | compute | memory | collective | dominant | "
+        "peak GB/dev | useful-flops frac | note |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r["multi_pod"] != multi_pod:
+            continue
+        if r["status"] == "skipped":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | - | - | - | - | - | - | "
+                f"SKIP: {r['skip_reason'][:60]} |")
+            continue
+        t = r["roofline_terms_s"]
+        uf = r.get("useful_flops_fraction")
+        peak = r["memory_analysis"]["peak_estimate_bytes_per_device"] / 1e9
+        dom = r["dominant_term"].replace("_s", "")
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_s(t['compute_s'])} | "
+            f"{fmt_s(t['memory_s'])} | {fmt_s(t['collective_s'])} | "
+            f"{dom} | {peak:.1f} | "
+            f"{uf:.2f} | |" if uf is not None else
+            f"| {r['arch']} | {r['shape']} | {fmt_s(t['compute_s'])} | "
+            f"{fmt_s(t['memory_s'])} | {fmt_s(t['collective_s'])} | "
+            f"{dom} | {peak:.1f} | - | |")
+    return "\n".join(lines)
+
+
+def hillclimb_candidates(recs):
+    """worst roofline fraction, most collective-bound, most
+    paper-representative (serving/decode — the slate-managed phase)."""
+    ok = [r for r in recs if r["status"] == "ok" and not r["multi_pod"]]
+
+    def frac(r):
+        t = r["roofline_terms_s"]
+        dom = max(t.values())
+        return (r["model_flops_per_device"] / 197e12) / dom if dom else 0
+
+    worst = min(ok, key=frac)
+    coll = max(ok, key=lambda r:
+               r["roofline_terms_s"]["collective_s"]
+               / max(sum(r["roofline_terms_s"].values()), 1e-12))
+    serving = [r for r in ok if r["shape"] in ("decode_32k", "long_500k")]
+    rep = max(serving, key=lambda r: sum(r["roofline_terms_s"].values()))
+    return {"worst_roofline_fraction": (worst, frac(worst)),
+            "most_collective_bound": (coll, None),
+            "paper_representative_serving": (rep, frac(rep))}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--md")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+    recs = load(args.tag)
+    if not recs:
+        print("no dryrun records found — run repro.launch.dryrun --all")
+        sys.exit(1)
+    out = []
+    out.append("### Single-pod (16,16) = 256 chips\n")
+    out.append(table(recs, multi_pod=False))
+    out.append("\n### Multi-pod (2,16,16) = 512 chips\n")
+    out.append(table(recs, multi_pod=True))
+    cands = hillclimb_candidates(recs)
+    out.append("\n### Hillclimb candidates\n")
+    for kind, (r, f) in cands.items():
+        extra = f" (roofline fraction {f:.3f})" if f is not None else ""
+        out.append(f"- **{kind}**: {r['arch']} x {r['shape']}{extra}; "
+                   f"dominant={r['dominant_term']}")
+    text = "\n".join(out)
+    print(text)
+    if args.md:
+        with open(args.md, "w") as f:
+            f.write(text + "\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,389 @@
+"""Post-SPMD HLO cost walker.
+
+``compiled.cost_analysis()`` counts while-loop bodies ONCE (verified
+empirically), which under-counts scan-over-layers models by ~n_layers x.
+This walker parses ``compiled.as_text()`` (post-partitioning, per-device
+shapes, collectives materialized) and:
+
+  - multiplies while bodies by their trip count — XLA records it as
+    ``backend_config={"known_trip_count":{"n":"N"}}``;
+  - counts matmul FLOPs from dot shapes + contracting dims (fusion
+    internals included — dots can live inside fusions);
+  - sums collective bytes by kind (all-gather / all-reduce /
+    reduce-scatter / all-to-all / collective-permute);
+  - approximates HBM traffic as operand+output bytes of fusion-BOUNDARY
+    ops only (fusion internals never touch HBM).
+
+All numbers are PER DEVICE (the partitioned module).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f8e4m3b11fnuz": 1, "f8e5m2fnuz": 1, "f8e4m3fnuz": 1, "token": 0,
+    "opaque": 0, "f8e3m4": 1, "f8e4m3": 1, "f8e8m0fnu": 1, "s2": 1, "u2": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
+_OPND_RE = re.compile(r"%([\w.\-]+)")
+_CALLS_RE = re.compile(r"calls=%([\w.\-]+)")
+_COND_BODY_RE = re.compile(r"condition=%([\w.\-]+), body=%([\w.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_ENTRY_RE = re.compile(r"^ENTRY\s+%([\w.\-]+)")
+_HEAD_RE = re.compile(r"^(?:ENTRY\s+)?%([\w.\-]+)\s*\(.*\)\s*->.*\{")
+
+COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+
+_SKIP_BYTES = {"parameter", "constant", "get-tuple-element", "tuple",
+               "bitcast", "after-all", "iota", "partition-id",
+               "replica-id"}
+
+# ops that read/write only a window of a big operand: charging the full
+# operand per while-iteration would overcount scan xs slicing by the trip
+# count (verified on the xLSTM cell: 50x inflation)
+_SLICING = {"dynamic-slice", "gather", "slice"}
+_UPDATING = {"dynamic-update-slice", "scatter"}
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _numel(type_str: str) -> int:
+    dims = _shape_dims(type_str)
+    if dims is None:
+        return 0
+    n = 1
+    for d in dims:
+        n *= d
+    return n
+
+
+def _shape_dims(type_str: str) -> Optional[List[int]]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return None
+    dims = m.group(2)
+    return [int(d) for d in dims.split(",")] if dims else []
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_bytes: Dict[str, float] = field(default_factory=dict)
+
+    def __iadd__(self, o: "Cost"):
+        self.flops += o.flops
+        self.hbm_bytes += o.hbm_bytes
+        for k, v in o.collective_bytes.items():
+            self.collective_bytes[k] = self.collective_bytes.get(k, 0.0) + v
+        return self
+
+    def scaled(self, f: float) -> "Cost":
+        return Cost(self.flops * f, self.hbm_bytes * f,
+                    {k: v * f for k, v in self.collective_bytes.items()})
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return sum(self.collective_bytes.values())
+
+    def as_dict(self) -> Dict:
+        return {"flops": self.flops, "hbm_bytes": self.hbm_bytes,
+                "collective_bytes": dict(self.collective_bytes),
+                "collective_bytes_total": self.total_collective_bytes}
+
+
+@dataclass
+class _Op:
+    name: str
+    rest: str
+    out_type: str
+    opcode: str
+    operands: List[str]
+    is_root: bool = False
+
+
+class _Computation:
+    def __init__(self, name: str, lines: List[str]):
+        self.name = name
+        self.ops: List[_Op] = []
+        self.types: Dict[str, str] = {}
+        self.root: "_Op" = None
+        for ln in lines:
+            m = _DEF_RE.match(ln)
+            if not m:
+                continue
+            is_root = ln.lstrip().startswith("ROOT")
+            name_, rest = m.group(1), m.group(2)
+            if rest.startswith("("):
+                # tuple type: balanced-paren scan (types may contain
+                # /*index=N*/ comments, which defeat regexes)
+                depth = 0
+                j = 0
+                for j, ch in enumerate(rest):
+                    if ch == "(":
+                        depth += 1
+                    elif ch == ")":
+                        depth -= 1
+                        if depth == 0:
+                            break
+                out_type = rest[:j + 1]
+                om = re.match(r"\s*([\w\-]+)\(", rest[j + 1:])
+                opcode = om.group(1) if om else ""
+                opcode_pos = j + 1
+            else:
+                tm = re.match(r"([a-z0-9]+\[[0-9,]*\]\S*)\s+"
+                              r"([\w\-]+)\(", rest)
+                if tm:
+                    out_type, opcode = tm.group(1), tm.group(2)
+                    opcode_pos = tm.start(2)
+                else:
+                    parts = rest.split()
+                    out_type = parts[0] if parts else ""
+                    opcode = parts[1].split("(")[0] if len(parts) > 1 \
+                        else ""
+                    opcode_pos = 0
+            lparen = rest.find("(", opcode_pos)
+            args = ""
+            if lparen >= 0:
+                depth, j = 0, lparen
+                for j in range(lparen, len(rest)):
+                    if rest[j] == "(":
+                        depth += 1
+                    elif rest[j] == ")":
+                        depth -= 1
+                        if depth == 0:
+                            break
+                args = rest[lparen + 1:j]
+            operands = _OPND_RE.findall(args)
+            op = _Op(name=name_, rest=rest, out_type=out_type,
+                     opcode=opcode, operands=operands, is_root=is_root)
+            self.ops.append(op)
+            if is_root:
+                self.root = op
+            self.types[name_] = out_type
+
+
+def parse_module(text: str) -> Tuple[Dict[str, _Computation], str]:
+    comps: Dict[str, _Computation] = {}
+    entry = None
+    cur_name, cur_lines = None, []
+    for ln in text.splitlines():
+        m = _HEAD_RE.match(ln)
+        if m and cur_name is None:
+            cur_name, cur_lines = m.group(1), []
+            if _ENTRY_RE.match(ln):
+                entry = cur_name
+            continue
+        if cur_name is not None:
+            if ln.startswith("}"):
+                comps[cur_name] = _Computation(cur_name, cur_lines)
+                cur_name, cur_lines = None, []
+            else:
+                cur_lines.append(ln)
+    if entry is None:
+        raise ValueError("no ENTRY computation found")
+    return comps, entry
+
+
+def _dot_flops(op: _Op, comp: _Computation) -> float:
+    out_dims = _shape_dims(op.out_type) or []
+    out_numel = 1
+    for d in out_dims:
+        out_numel *= d
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.rest)
+    if not m or not op.operands:
+        return 0.0
+    lhs_dims = _shape_dims(comp.types.get(op.operands[0], "")) or []
+    contracted = 1
+    if m.group(1):
+        for ax in m.group(1).split(","):
+            ax = int(ax)
+            if ax < len(lhs_dims):
+                contracted *= lhs_dims[ax]
+    return 2.0 * out_numel * contracted
+
+
+def _conv_flops(op: _Op, comp: _Computation) -> float:
+    out_dims = _shape_dims(op.out_type) or []
+    out_numel = 1
+    for d in out_dims:
+        out_numel *= d
+    if len(op.operands) < 2:
+        return 0.0
+    ker_dims = _shape_dims(comp.types.get(op.operands[1], "")) or []
+    ker_numel = 1
+    for d in ker_dims:
+        ker_numel *= d
+    return 2.0 * out_numel * ker_numel / max(ker_dims[-1] if ker_dims
+                                             else 1, 1)
+
+
+def _param_sliced_bytes(called: "_Computation", idx: int,
+                        full_bytes: int) -> int:
+    """If fused-computation parameter ``idx`` is consumed ONLY through
+    slicing ops (optionally via bitcast/reshape/copy hops), its HBM read
+    is the slice windows, not the full operand."""
+    pname = None
+    for o in called.ops:
+        if o.opcode == "parameter" and f"parameter({idx})" in o.rest:
+            pname = o.name
+            break
+    if pname is None:
+        return full_bytes
+    names = {pname}
+    # follow pure-renaming hops
+    for _ in range(3):
+        for o in called.ops:
+            if o.opcode in ("bitcast", "reshape", "copy") and \
+                    o.operands and o.operands[0] in names:
+                names.add(o.name)
+    consumers = [o for o in called.ops
+                 if any(x in names for x in o.operands)
+                 and o.opcode not in ("bitcast", "reshape", "copy")]
+    if consumers and all(c.opcode in _SLICING for c in consumers):
+        return sum(_shape_bytes(c.out_type) for c in consumers)
+    return full_bytes
+
+
+def _op_hbm_bytes(op: "_Op", comp: "_Computation",
+                  comps: Dict[str, "_Computation"]) -> int:
+    oc = op.opcode
+    if oc in _SLICING:
+        return 2 * _shape_bytes(op.out_type)          # window read + write
+    if oc in _UPDATING:
+        upd = _shape_bytes(comp.types.get(op.operands[1], "")) \
+            if len(op.operands) > 1 else 0
+        return 2 * upd                                # window RMW
+    cm = _CALLS_RE.search(op.rest) if oc == "fusion" else None
+    called = comps.get(cm.group(1)) if cm else None
+    if called is not None:
+        # fusion computing an in-place window write: the root is a DUS,
+        # possibly behind convert/bitcast hops — charge the window RMW,
+        # not the aliased buffer
+        dus = next((o for o in called.ops if o.opcode in _UPDATING
+                    and _numel(o.out_type) == _numel(op.out_type)), None)
+        if dus is not None:
+            upd = _shape_bytes(called.types.get(dus.operands[1], "")) \
+                if len(dus.operands) > 1 else 0
+            out_b = _shape_bytes(op.out_type)
+            small = sum(_shape_bytes(comp.types.get(o, ""))
+                        for o in op.operands
+                        if _shape_bytes(comp.types.get(o, "")) < out_b)
+            return 2 * upd + small
+    b = _shape_bytes(op.out_type)
+    for i, o in enumerate(op.operands):
+        full = _shape_bytes(comp.types.get(o, ""))
+        if called is not None and full > 4 * _shape_bytes(op.out_type):
+            full = _param_sliced_bytes(called, i, full)
+        b += full
+    return b
+
+
+def analyze(text: str, breakdown: Optional[list] = None) -> Cost:
+    """``breakdown``: optional list collecting (scaled_bytes, scaled_flops,
+    op_name, opcode, out_type[:60]) tuples for the top-contributor report
+    (scale = product of enclosing while trip counts)."""
+    comps, entry = parse_module(text)
+    memo: Dict[Tuple[str, bool], Cost] = {}
+    scale_stack = [1.0]
+
+    def cost_of(comp_name: str, count_bytes: bool) -> Cost:
+        key = (comp_name, count_bytes)
+        if breakdown is None and key in memo:
+            return memo[key]
+        comp = comps.get(comp_name)
+        total = Cost()
+        if breakdown is None:
+            memo[key] = total
+        if comp is None:
+            return total
+        for op in comp.ops:
+            oc = op.opcode
+            if oc == "while":
+                m = _COND_BODY_RE.search(op.rest)
+                tm = _TRIP_RE.search(op.rest)
+                trip = int(tm.group(1)) if tm else 1
+                if m:
+                    scale_stack.append(scale_stack[-1] * trip)
+                    inner = Cost()
+                    inner += cost_of(m.group(1), count_bytes)
+                    inner += cost_of(m.group(2), count_bytes)
+                    scale_stack.pop()
+                    total += inner.scaled(trip)
+                continue
+            if oc == "conditional":
+                bm = _BRANCHES_RE.search(op.rest)
+                if bm:
+                    costs = [cost_of(b, count_bytes)
+                             for b in _OPND_RE.findall(bm.group(1))]
+                    if costs:
+                        total += max(costs, key=lambda c: c.flops +
+                                     c.hbm_bytes)
+                continue
+
+            cm = _CALLS_RE.search(op.rest)
+            if cm:
+                # fusion internals: flops + collectives yes, bytes no
+                inner_bytes = oc in ("call", "async-start")
+                total += cost_of(cm.group(1), count_bytes and inner_bytes)
+
+            if oc == "dot":
+                total.flops += _dot_flops(op, comp)
+            elif oc == "convolution":
+                total.flops += _conv_flops(op, comp)
+
+            for kind in COLLECTIVE_KINDS:
+                if oc == kind or oc == kind + "-start":
+                    b = sum(_shape_bytes(comp.types.get(o, ""))
+                            for o in op.operands)
+                    if b == 0:
+                        b = _shape_bytes(op.out_type)
+                    total.collective_bytes[kind] = \
+                        total.collective_bytes.get(kind, 0.0) + b
+                    break
+
+            if count_bytes and oc not in _SKIP_BYTES:
+                b = _op_hbm_bytes(op, comp, comps)
+                total.hbm_bytes += b
+                if breakdown is not None and b > 0:
+                    f = _dot_flops(op, comp) if oc == "dot" else 0.0
+                    breakdown.append((b * scale_stack[-1],
+                                      f * scale_stack[-1],
+                                      f"{comp_name}/{op.name}", oc,
+                                      op.out_type[:60]))
+        return total
+
+    return cost_of(entry, True)
+
+
+def top_contributors(text: str, n: int = 20):
+    """(bytes, flops, op, opcode, type) rows sorted by scaled HBM bytes."""
+    rows: list = []
+    analyze(text, breakdown=rows)
+    rows.sort(reverse=True)
+    return rows[:n]
+
+
+def analyze_compiled(compiled) -> Cost:
+    return analyze(compiled.as_text())

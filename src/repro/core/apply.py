@@ -1,0 +1,158 @@
+"""Updater execution paths: the TPU-native updater hot loop.
+
+- ``apply_associative``: sort by key -> segmented associative scan
+  pre-combines every key's events into one delta -> single slate
+  gather/merge/scatter.  O(B log B) with batch-wide parallelism; this is
+  the path the ``slate_update`` Pallas kernel accelerates.
+
+- ``apply_sequential``: sort by (key, ts) -> padded-run scan preserving
+  the paper's strict per-key timestamp order: vmap over key runs, scan
+  over run positions.  Run length is statically bounded (``max_run``);
+  events beyond the bound are *deferred* back to the caller (re-queued
+  next tick), which is how a hotspot manifests here — and what the
+  two-choice + key-splitting mitigations relieve.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.event import EventBatch
+from repro.core.operators import AssociativeUpdater, SequentialUpdater
+from repro.slates import table as tbl
+
+
+def _bshape(mask, like):
+    return mask.reshape(mask.shape + (1,) * (like.ndim - 1))
+
+
+def _segmented_combine(updater, deltas, boundary):
+    """Inclusive segmented scan: each row ends up holding the combine of
+    its run's prefix; run-last rows hold run totals."""
+
+    def op(a, b):
+        fa, va = a
+        fb, vb = b
+        combined = updater.combine(va, vb)
+        v = jax.tree.map(
+            lambda c, y: jnp.where(_bshape(fb, y), y, c), combined, vb)
+        return (fa | fb, v)
+
+    _, scanned = jax.lax.associative_scan(op, (boundary, deltas))
+    return scanned
+
+
+def apply_associative(updater: AssociativeUpdater, table: tbl.SlateTable,
+                      batch: EventBatch, tick
+                      ) -> Tuple[tbl.SlateTable, Dict[str, EventBatch],
+                                 jnp.ndarray]:
+    """Returns (table, emissions, n_processed)."""
+    batch = batch.sort_by_key_ts()
+    B = batch.capacity
+    key = batch.key
+    prev_key = jnp.concatenate([jnp.full((1,), -2, jnp.int32), key[:-1]])
+    boundary = key != prev_key                       # run starts
+    next_key = jnp.concatenate([key[1:], jnp.full((1,), -3, jnp.int32)])
+    run_last = key != next_key                       # run totals live here
+
+    deltas = updater.lift(batch)
+    scanned = _segmented_combine(updater, deltas, boundary)
+
+    unique = run_last & batch.valid
+    table, slot, found, placed = tbl.insert_or_find(table, key, unique)
+    ok = unique & placed
+    old = tbl.read_slates(table, slot, found & ok, updater.init_slate)
+    new = updater.merge(old, scanned)
+    table = tbl.write_slates(table, slot, ok, new, tick)
+
+    emissions = updater.emit(key, old, new, batch.ts)
+    emissions = {s: eb.mask(ok) for s, eb in emissions.items()}
+    return table, emissions, batch.count()
+
+
+def apply_sequential(updater: SequentialUpdater, table: tbl.SlateTable,
+                     batch: EventBatch, tick
+                     ) -> Tuple[tbl.SlateTable, Dict[str, EventBatch],
+                                EventBatch, jnp.ndarray]:
+    """Returns (table, emissions, deferred_events, n_processed).
+
+    Deferred = valid events whose per-key run exceeded ``max_run`` this
+    tick (hotspot backpressure); the engine re-queues them.
+    """
+    batch = batch.sort_by_key_ts()
+    B = batch.capacity
+    key, valid = batch.key, batch.valid
+    first_idx = jnp.searchsorted(key, key, side="left").astype(jnp.int32)
+    pos = jnp.arange(B, dtype=jnp.int32) - first_idx
+    run_start = (pos == 0) & valid
+    in_budget = pos < updater.max_run
+    deferred = batch.mask(valid & ~in_budget)
+
+    table, slot, found, placed = tbl.insert_or_find(table, key, run_start)
+    ok = run_start & placed
+    slates = tbl.read_slates(table, slot, found & ok, updater.init_slate)
+
+    # emission accumulators at sorted-row granularity
+    out_specs = updater.out_streams
+    em_vals = {s: jax.tree.map(
+        lambda sp: jnp.zeros((B,) + tuple(sp[0]), sp[1]), spec,
+        is_leaf=_is_spec_leaf) for s, spec in out_specs.items()}
+    em_keys = {s: jnp.zeros((B,), jnp.int32) for s in out_specs}
+    em_flag = {s: jnp.zeros((B,), bool) for s in out_specs}
+
+    idx_all = jnp.arange(B, dtype=jnp.int32)
+
+    def body(carry, j):
+        slates_c, em_vals_c, em_keys_c, em_flag_c = carry
+        idx = jnp.clip(idx_all + j, 0, B - 1)
+        active = (ok & (idx_all + j < B) & (key[idx] == key)
+                  & valid[idx] & (j < updater.max_run))
+        ev = {
+            "sid": batch.sid[idx], "ts": batch.ts[idx], "key": key[idx],
+            "value": jax.tree.map(lambda a: a[idx], batch.value),
+        }
+        new_slates, emits = jax.vmap(updater.step)(slates_c, ev)
+        slates_c = jax.tree.map(
+            lambda n, o: jnp.where(_bshape(active, n), n, o),
+            new_slates, slates_c)
+        for s in out_specs:
+            if s not in emits:
+                continue
+            row = emits[s]
+            flag = row["emit"] & active
+            safe = jnp.where(flag, idx, B)
+            em_vals_c = dict(em_vals_c)
+            em_vals_c[s] = jax.tree.map(
+                lambda acc, v: acc.at[safe].set(v.astype(acc.dtype),
+                                                mode="drop"),
+                em_vals_c[s], row["value"])
+            em_keys_c = dict(em_keys_c)
+            em_keys_c[s] = em_keys_c[s].at[safe].set(
+                row["key"].astype(jnp.int32), mode="drop")
+            em_flag_c = dict(em_flag_c)
+            em_flag_c[s] = em_flag_c[s].at[safe].set(True, mode="drop")
+        return (slates_c, em_vals_c, em_keys_c, em_flag_c), None
+
+    carry = (slates, em_vals, em_keys, em_flag)
+    (slates, em_vals, em_keys, em_flag), _ = jax.lax.scan(
+        body, carry, jnp.arange(updater.max_run, dtype=jnp.int32))
+
+    table = tbl.write_slates(table, slot, ok, slates, tick)
+
+    emissions = {}
+    for s in out_specs:
+        emissions[s] = EventBatch(
+            sid=jnp.zeros((B,), jnp.int32),
+            ts=batch.ts + 1,
+            key=em_keys[s],
+            value=em_vals[s],
+            valid=em_flag[s],
+        )
+    n_proc = jnp.sum((valid & in_budget).astype(jnp.int32))
+    return table, emissions, deferred, n_proc
+
+
+def _is_spec_leaf(x):
+    return isinstance(x, tuple) and len(x) == 2 and isinstance(x[0], tuple)

@@ -1,0 +1,355 @@
+"""Distributed MapUpdate engine: the single-shard tick under shard_map.
+
+Muppet's data path — workers hash events to peers and write directly into
+their queues — becomes one ``all_to_all`` per workflow hop: each shard
+buckets its outgoing events by destination shard (ring lookup), the
+collective delivers every bucket, and the receiving shard enqueues.  No
+master is on the data path; the ring is a runtime *array* input, so
+failure re-routes and elastic joins swap rings without recompiling.
+
+Two-choice dispatch (Muppet 2.0 dual queues): for associative updaters,
+per-key load beyond ``two_choice_threshold`` in a tick spills to the
+key's secondary shard; each shard then holds a *partial* aggregate and
+``read_slate`` merges the (at most two) partials — the same <=2-contender
+bound the paper proves acceptable in production.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from functools import partial
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import apply as apply_mod
+from repro.core import queues as q_mod
+from repro.core.engine import EngineConfig
+from repro.core.event import EventBatch, concat
+from repro.core.hashing import HashRing, route, route_secondary
+from repro.core.operators import (AssociativeUpdater, Mapper,
+                                  SequentialUpdater, Updater)
+from repro.core.queues import OverflowPolicy
+from repro.core.workflow import Workflow
+from repro.slates import table as tbl
+
+
+def _salt(name: str) -> int:
+    h = 2166136261
+    for c in name.encode():
+        h = ((h ^ c) * 16777619) & 0xFFFFFFFF
+    return h
+
+
+def exchange(batch: EventBatch, dest, axis_names, cap_per_dest: int
+             ) -> Tuple[EventBatch, jnp.ndarray]:
+    """Route events to destination shards with one all_to_all.
+
+    Per-destination buckets have static capacity; excess events are
+    dropped and counted (bounded queues, paper section 4.3).  Returns the
+    received local batch [n*cap] and the local overflow count.
+    """
+    n = jax.lax.axis_size(axis_names)
+    B = batch.capacity
+    dest = jnp.where(batch.valid, dest, n)              # invalid -> sink
+    order = jnp.argsort(dest, stable=True)
+    sb = batch.take(order)
+    sdest = dest[order]
+    pos = jnp.arange(B, dtype=jnp.int32) - jnp.searchsorted(
+        sdest, sdest, side="left").astype(jnp.int32)
+    ok = sb.valid & (sdest < n) & (pos < cap_per_dest)
+    slot = jnp.where(ok, sdest * cap_per_dest + pos, n * cap_per_dest)
+    dropped = jnp.sum((sb.valid & (sdest < n) & ~ok).astype(jnp.int32))
+
+    buckets = EventBatch.empty(
+        n * cap_per_dest,
+        jax.tree.map(lambda a: (a.shape[1:], a.dtype), sb.value))
+
+    def put(dst, src):
+        return dst.at[slot].set(src, mode="drop")
+
+    buckets = EventBatch(
+        sid=put(buckets.sid, sb.sid), ts=put(buckets.ts, sb.ts),
+        key=put(buckets.key, sb.key),
+        value=jax.tree.map(put, buckets.value, sb.value),
+        valid=put(buckets.valid, ok))
+
+    def a2a(x):
+        return jax.lax.all_to_all(
+            x.reshape((n, cap_per_dest) + x.shape[1:]), axis_names,
+            split_axis=0, concat_axis=0).reshape((n * cap_per_dest,)
+                                                 + x.shape[1:])
+
+    received = EventBatch(
+        sid=a2a(buckets.sid), ts=a2a(buckets.ts), key=a2a(buckets.key),
+        value=jax.tree.map(a2a, buckets.value), valid=a2a(buckets.valid))
+    return received, dropped
+
+
+@dataclass
+class DistConfig(EngineConfig):
+    exchange_slack: float = 2.0   # per-dest bucket capacity multiplier
+    two_choice_threshold: int = 0  # 0 = off; else per-key spill point
+    axis_names: Tuple[str, ...] = ("data",)
+
+
+class DistributedEngine:
+    """Global state lives sharded on dim 0 (= shard axis) of every leaf."""
+
+    def __init__(self, workflow: Workflow, mesh: Mesh,
+                 config: Optional[DistConfig] = None):
+        self.wf = workflow
+        self.mesh = mesh
+        self.cfg = config or DistConfig()
+        self.axes = self.cfg.axis_names
+        self.n_shards = int(np.prod([mesh.shape[a] for a in self.axes]))
+        self.ring = HashRing(self.n_shards)
+        self._sharding = NamedSharding(mesh, P(self.axes))
+        self._replicated = NamedSharding(mesh, P())
+        cap = int(self.cfg.batch_size * self.cfg.exchange_slack
+                  / self.n_shards)
+        self.cap_per_dest = max(8, cap)
+        self._step = None
+
+    # ---- state ----
+    def init_state(self):
+        def per_shard(make):
+            one = make()
+            return jax.tree.map(
+                lambda x: jnp.broadcast_to(
+                    x[None], (self.n_shards,) + x.shape).copy(), one)
+
+        queues = {op.name: per_shard(partial(
+            q_mod.make_queue, self.cfg.queue_capacity, op.in_value_spec))
+            for op in self.wf.operators}
+        tables = {up.name: per_shard(partial(
+            tbl.make_table, up.table_capacity, up.slate_spec()))
+            for up in self.wf.updaters()}
+        z = lambda: jnp.zeros((self.n_shards,), jnp.int32)
+        state = {
+            "queues": queues, "tables": tables,
+            "tick": z(),
+            "exchange_dropped": z(),
+            "throttle_hits": z(),
+            "processed": {op.name: z() for op in self.wf.operators},
+        }
+        state = jax.tree.map(lambda x: jnp.array(x, copy=True), state)
+        return jax.device_put(state, self._shard_tree(state))
+
+    def _shard_tree(self, state):
+        def spec(path_unused, leaf):
+            if leaf.ndim >= 1 and leaf.shape[0] == self.n_shards:
+                return self._sharding
+            return self._replicated
+        return jax.tree_util.tree_map_with_path(spec, state)
+
+    # ---- the per-shard tick ----
+    def _local_tick(self, state, sources, ring_hashes, ring_shards):
+        cfg, wf = self.cfg, self.wf
+        queues = {k: jax.tree.map(lambda x: x[0], v)
+                  for k, v in state["queues"].items()}
+        tables = {k: jax.tree.map(lambda x: x[0], v)
+                  for k, v in state["tables"].items()}
+        processed = {k: v[0] for k, v in state["processed"].items()}
+        exchange_dropped = state["exchange_dropped"][0]
+        throttle_hits = state["throttle_hits"][0]
+        tick = state["tick"][0]
+        sources = {k: jax.tree.map(lambda x: x[0], v)
+                   for k, v in sources.items()}
+        outputs: Dict[str, List[EventBatch]] = {}
+
+        def deliver_all(items):
+            nonlocal throttle_hits, exchange_dropped
+            work = list(items)
+            for _ in range(len(work) + 64):
+                if not work:
+                    return
+                stream, batch = work.pop(0)
+                subs = wf.dests_of(stream)
+                if not subs:
+                    outputs.setdefault(stream, []).append(batch)
+                    continue
+                for dest_op in subs:
+                    op = wf.by_name[dest_op]
+                    dshard = route(batch.key, _salt(dest_op), ring_hashes,
+                                   ring_shards)
+                    if (cfg.two_choice_threshold
+                            and isinstance(op, AssociativeUpdater)):
+                        dshard = self._two_choice(batch, dshard, dest_op,
+                                                  ring_hashes, ring_shards)
+                    recv, dropped = exchange(batch, dshard, self.axes,
+                                             self.cap_per_dest)
+                    exchange_dropped = exchange_dropped + dropped
+                    nq, ovf = q_mod.enqueue(queues[dest_op], recv)
+                    pol = cfg.policy_for(dest_op)
+                    if pol is OverflowPolicy.DROP:
+                        nq = q_mod.count_drop(nq, ovf)
+                    elif pol is OverflowPolicy.OVERFLOW_STREAM:
+                        work.append((cfg.overflow_stream[dest_op], ovf))
+                    elif pol is OverflowPolicy.THROTTLE:
+                        throttle_hits = throttle_hits + ovf.count()
+                        nq = q_mod.count_drop(nq, ovf)
+                    queues[dest_op] = nq
+            raise RuntimeError("overflow-stream routing did not converge")
+
+        deliver_all(list(sources.items()))
+        emitted_now: List[Tuple[str, EventBatch]] = []
+
+        for op in wf.operators:
+            queues[op.name], batch = q_mod.dequeue(queues[op.name],
+                                                   cfg.batch_size)
+            if isinstance(op, Mapper):
+                outs = op.map_batch(batch)
+                for s, b in outs.items():
+                    emitted_now.append((s, b.mask(batch.valid & b.valid)))
+                processed[op.name] = processed[op.name] + batch.count()
+            elif isinstance(op, AssociativeUpdater):
+                tables[op.name], ems, n = apply_mod.apply_associative(
+                    op, tables[op.name], batch, tick)
+                emitted_now.extend(ems.items())
+                processed[op.name] = processed[op.name] + n
+            elif isinstance(op, SequentialUpdater):
+                tables[op.name], ems, deferred, n = \
+                    apply_mod.apply_sequential(op, tables[op.name], batch,
+                                               tick)
+                emitted_now.extend(ems.items())
+                nq, ovf = q_mod.enqueue(queues[op.name], deferred)
+                queues[op.name] = q_mod.count_drop(nq, ovf)
+                processed[op.name] = processed[op.name] + n
+
+        for up in wf.updaters():
+            if up.ttl:
+                tables[up.name] = tbl.expire_ttl(tables[up.name], tick,
+                                                 up.ttl)
+
+        deliver_all(emitted_now)
+
+        out_batches = {s: concat(bs) if len(bs) > 1 else bs[0]
+                       for s, bs in outputs.items()}
+        lift = lambda t: jax.tree.map(lambda x: x[None], t)
+        new_state = {
+            "queues": {k: lift(v) for k, v in queues.items()},
+            "tables": {k: lift(v) for k, v in tables.items()},
+            "tick": (tick + 1)[None],
+            "exchange_dropped": exchange_dropped[None],
+            "throttle_hits": throttle_hits[None],
+            "processed": {k: v[None] for k, v in processed.items()},
+        }
+        return new_state, {k: lift(v) for k, v in out_batches.items()}
+
+    def _two_choice(self, batch, primary, dest_op, ring_hashes,
+                    ring_shards):
+        """Spill a key's per-tick excess to its secondary shard."""
+        secondary = route_secondary(batch.key, _salt(dest_op), ring_hashes,
+                                    ring_shards)
+        key_sink = jnp.where(batch.valid, batch.key, jnp.int32(2**31 - 1))
+        order = jnp.argsort(key_sink, stable=True)
+        sk = key_sink[order]
+        rank_sorted = jnp.arange(batch.capacity, dtype=jnp.int32) - \
+            jnp.searchsorted(sk, sk, side="left").astype(jnp.int32)
+        rank = jnp.zeros_like(rank_sorted).at[order].set(rank_sorted)
+        spill = rank >= self.cfg.two_choice_threshold
+        return jnp.where(spill, secondary, primary)
+
+    # ---- jit plumbing ----
+    def step(self, state, sources: Dict[str, EventBatch]):
+        """sources: global batches with leading dim n_shards*B_loc or
+        [n_shards, B_loc] — pass [n_shards, B_loc] (leading shard axis)."""
+        from jax.experimental.shard_map import shard_map
+        if self._step is None:
+            sharded = P(self.axes)
+            rep = P()
+
+            def spec_like(tree):
+                return jax.tree.map(
+                    lambda x: sharded
+                    if (hasattr(x, "ndim") and x.ndim >= 1
+                        and x.shape[0] == self.n_shards) else rep, tree)
+
+            state_specs = spec_like(state)
+            src_specs = jax.tree.map(lambda _: sharded, sources)
+
+            def run(st, src, rh, rs):
+                fn = shard_map(self._local_tick, mesh=self.mesh,
+                               in_specs=(state_specs, src_specs, rep, rep),
+                               out_specs=sharded,
+                               check_rep=False)
+                return fn(st, src, rh, rs)
+
+            self._step = jax.jit(run, donate_argnums=(0,))
+        rh, rs = self.ring.table()
+        return self._step(state, sources, rh, rs)
+
+    # ---- failure / elasticity (host side; master of section 4.3) ----
+    def fail_shard(self, state, shard: int):
+        """Machine crash: re-route ring; the dead shard's unflushed slates
+        and queued events are lost (paper semantics)."""
+        self.ring.fail(shard)
+        self._step = None  # ring arrays change shape only on rebuild size
+
+        def zap(leaf):
+            if hasattr(leaf, "ndim") and leaf.ndim >= 1 and \
+                    leaf.shape[0] == self.n_shards:
+                return leaf.at[shard].set(jnp.zeros_like(leaf[shard]))
+            return leaf
+
+        state = dict(state)
+        state["queues"] = jax.tree.map(zap, state["queues"])
+        # tables: mark every slot empty on the dead shard
+        new_tables = {}
+        for name, t in state["tables"].items():
+            keys = t.keys.at[shard].set(
+                jnp.full_like(t.keys[shard], tbl.EMPTY))
+            dirty = t.dirty.at[shard].set(
+                jnp.zeros_like(t.dirty[shard]))
+            new_tables[name] = tbl.SlateTable(
+                keys=keys, ts=t.ts, dirty=dirty, vals=t.vals,
+                dropped=t.dropped)
+        state["tables"] = new_tables
+        return state
+
+    def stats(self, state):
+        g = lambda x: np.asarray(jax.device_get(x))
+        return {
+            "tick": int(g(state["tick"]).max()),
+            "exchange_dropped": int(g(state["exchange_dropped"]).sum()),
+            "throttle_hits": int(g(state["throttle_hits"]).sum()),
+            "processed": {k: int(g(v).sum())
+                          for k, v in state["processed"].items()},
+            "queue_dropped": {k: int(g(q.dropped).sum())
+                              for k, q in state["queues"].items()},
+            "table_occupancy": {k: int(g(t.occupancy()).sum())
+                                for k, t in state["tables"].items()},
+        }
+
+    def read_slate(self, state, updater: str, key: int, *, merge=None):
+        """Read a slate by key; with two-choice enabled, merges the (<=2)
+        partial aggregates (primary + secondary shard)."""
+        rh, rs = self.ring.table()
+        karr = jnp.asarray([key], jnp.int32)
+        shards = [int(route(karr, _salt(updater), rh, rs)[0])]
+        if self.cfg.two_choice_threshold:
+            shards.append(int(route_secondary(karr, _salt(updater),
+                                              rh, rs)[0]))
+        vals = []
+        t = state["tables"][updater]
+        for s in dict.fromkeys(shards):
+            local = jax.tree.map(lambda x: x[s], t)
+            slot, found = tbl.lookup(local, karr)
+            if bool(found[0]):
+                vals.append(jax.tree.map(
+                    lambda v: jax.device_get(v[int(slot[0])]), local.vals))
+        if not vals:
+            return None
+        if len(vals) == 1:
+            return vals[0]
+        # merge the two partial aggregates via the updater's combine
+        op = self.wf.by_name[updater]
+        combine = merge or op.combine
+        out = vals[0]
+        for v in vals[1:]:
+            out = combine(jax.tree.map(np.asarray, out),
+                          jax.tree.map(np.asarray, v))
+        return out

@@ -1,0 +1,216 @@
+"""Single-shard MapUpdate engine: one jitted tick over the whole workflow.
+
+Execution model (DESIGN.md section 2): every tick each operator dequeues up
+to ``batch_size`` events, applies its (vectorized) function, and emitted
+events are enqueued at their subscribers for the next tick.  End-to-end
+latency = graph depth x tick latency, mirroring Muppet's pipeline; there is
+no master on the data path.
+
+The distributed engine (``core/distributed.py``) runs this same tick
+per-shard under ``shard_map`` with an all_to_all key-routing exchange in
+front of every enqueue.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import apply as apply_mod
+from repro.core import queues as q_mod
+from repro.core.event import EventBatch, concat
+from repro.core.operators import (AssociativeUpdater, Mapper,
+                                  SequentialUpdater, Updater)
+from repro.core.queues import OverflowPolicy
+from repro.core.workflow import Workflow
+from repro.slates import table as tbl
+
+
+@dataclass
+class EngineConfig:
+    batch_size: int = 256
+    queue_capacity: int = 1024
+    overflow: Dict[str, OverflowPolicy] = field(default_factory=dict)
+    overflow_stream: Dict[str, str] = field(default_factory=dict)
+    default_policy: OverflowPolicy = OverflowPolicy.DROP
+
+    def policy_for(self, op_name: str) -> OverflowPolicy:
+        return self.overflow.get(op_name, self.default_policy)
+
+
+class Engine:
+    """Host-side wrapper owning the jitted tick."""
+
+    def __init__(self, workflow: Workflow, config: EngineConfig = None):
+        self.wf = workflow
+        self.cfg = config or EngineConfig()
+        self._step = jax.jit(self._tick, donate_argnums=(0,))
+
+    # ---- state ----
+    def init_state(self) -> Dict[str, Any]:
+        queues = {}
+        for op in self.wf.operators:
+            queues[op.name] = q_mod.make_queue(self.cfg.queue_capacity,
+                                               op.in_value_spec)
+        tables = {}
+        for up in self.wf.updaters():
+            tables[up.name] = tbl.make_table(up.table_capacity,
+                                             up.slate_spec())
+        z = jnp.zeros((), jnp.int32)
+        state = {
+            "queues": queues,
+            "tables": tables,
+            "tick": z,
+            "throttle_hits": z,
+            "processed": {op.name: z for op in self.wf.operators},
+        }
+        # constants are interned by XLA; donation needs distinct buffers
+        return jax.tree.map(lambda x: jnp.array(x, copy=True), state)
+
+    # ---- one tick (jit) ----
+    def _tick(self, state, sources: Dict[str, EventBatch]):
+        cfg, wf = self.cfg, self.wf
+        queues = dict(state["queues"])
+        tables = dict(state["tables"])
+        processed = dict(state["processed"])
+        throttle_hits = state["throttle_hits"]
+        tick = state["tick"]
+        outputs: Dict[str, List[EventBatch]] = {}
+
+        def deliver_all(items: List[Tuple[str, EventBatch]]):
+            """Route batches to subscriber queues; overflow-stream policy
+            may chain (bounded — cycles are a config error)."""
+            nonlocal throttle_hits
+            work = list(items)
+            for _ in range(len(work) + 64):
+                if not work:
+                    return
+                stream, batch = work.pop(0)
+                subs = wf.dests_of(stream)
+                if not subs:
+                    outputs.setdefault(stream, []).append(batch)
+                    continue
+                for dest in subs:
+                    nq, ovf = q_mod.enqueue(queues[dest], batch)
+                    pol = cfg.policy_for(dest)
+                    if pol is OverflowPolicy.DROP:
+                        nq = q_mod.count_drop(nq, ovf)
+                    elif pol is OverflowPolicy.OVERFLOW_STREAM:
+                        work.append((cfg.overflow_stream[dest], ovf))
+                    elif pol is OverflowPolicy.THROTTLE:
+                        throttle_hits = throttle_hits + ovf.count()
+                        nq = q_mod.count_drop(nq, ovf)
+                    queues[dest] = nq
+            raise RuntimeError("overflow-stream routing did not converge "
+                               "(cycle in overflow_stream config?)")
+
+        # 1. deliver sources (visible to operators this tick; operator
+        #    emissions become visible next tick — pipelined execution).
+        deliver_all(list(sources.items()))
+        emitted_now: List[Tuple[str, EventBatch]] = []
+
+        # 2. apply operators on their queues
+        for op in wf.operators:
+            queues[op.name], batch = q_mod.dequeue(queues[op.name],
+                                                   cfg.batch_size)
+            if isinstance(op, Mapper):
+                outs = op.map_batch(batch)
+                for s, b in outs.items():
+                    emitted_now.append((s, b.mask(batch.valid & b.valid)))
+                processed[op.name] = processed[op.name] + batch.count()
+            elif isinstance(op, AssociativeUpdater):
+                tables[op.name], ems, n = apply_mod.apply_associative(
+                    op, tables[op.name], batch, tick)
+                emitted_now.extend(ems.items())
+                processed[op.name] = processed[op.name] + n
+            elif isinstance(op, SequentialUpdater):
+                tables[op.name], ems, deferred, n = \
+                    apply_mod.apply_sequential(op, tables[op.name], batch,
+                                               tick)
+                emitted_now.extend(ems.items())
+                # hotspot backpressure: re-queue over-budget run tails
+                nq, ovf = q_mod.enqueue(queues[op.name], deferred)
+                queues[op.name] = q_mod.count_drop(nq, ovf)
+                processed[op.name] = processed[op.name] + n
+            else:
+                raise TypeError(f"unknown operator type {type(op)}")
+
+        # 3. TTL sweeps
+        for up in wf.updaters():
+            if up.ttl:
+                tables[up.name] = tbl.expire_ttl(tables[up.name], tick,
+                                                 up.ttl)
+
+        # 4. route this tick's emissions (visible next tick)
+        deliver_all(emitted_now)
+
+        out_batches = {s: concat(bs) if len(bs) > 1 else bs[0]
+                       for s, bs in outputs.items()}
+        new_state = {
+            "queues": queues,
+            "tables": tables,
+            "tick": tick + 1,
+            "throttle_hits": throttle_hits,
+            "processed": processed,
+        }
+        return new_state, out_batches
+
+    # ---- host API ----
+    def step(self, state, sources: Dict[str, EventBatch]):
+        return self._step(state, sources)
+
+    def run(self, state, source_fn, n_ticks: int, *,
+            throttle_floor: int = 8):
+        """Drive the engine; applies *source throttling* (paper section 5):
+        if throttle hits grow, halve the ingest batch until queues drain.
+        ``source_fn(tick, max_events) -> dict[stream, EventBatch]``."""
+        outputs = []
+        ingest = None
+        last_hits = 0
+        for t in range(n_ticks):
+            sources = source_fn(t, ingest)
+            state, outs = self.step(state, sources)
+            outputs.append(outs)
+            hits = int(state["throttle_hits"])
+            if hits > last_hits:     # backpressure signal
+                cur = ingest if ingest is not None else self.cfg.batch_size
+                ingest = max(throttle_floor, cur // 2)
+            elif ingest is not None:
+                ingest = min(self.cfg.batch_size, ingest * 2)
+                if ingest == self.cfg.batch_size:
+                    ingest = None
+            last_hits = hits
+        return state, outputs
+
+    # ---- introspection (paper section 4.4: reading slates live) ----
+    def read_slate(self, state, updater: str, key: int):
+        """Fetch one slate from the device table (the HTTP slate-read
+        path reuses this)."""
+        table = state["tables"][updater]
+        slot, found = tbl.lookup(table, jnp.asarray([key], jnp.int32))
+        if not bool(found[0]):
+            return None
+        s = int(slot[0])
+        return jax.tree.map(lambda v: jax.device_get(v[s]), table.vals)
+
+    def stats(self, state) -> Dict[str, Any]:
+        g = jax.device_get
+        return {
+            "tick": int(g(state["tick"])),
+            "throttle_hits": int(g(state["throttle_hits"])),
+            "processed": {k: int(g(v))
+                          for k, v in state["processed"].items()},
+            "queue_dropped": {k: int(g(q.dropped))
+                              for k, q in state["queues"].items()},
+            "queue_peak": {k: int(g(q.peak))
+                           for k, q in state["queues"].items()},
+            "queue_size": {k: int(g(q.size))
+                           for k, q in state["queues"].items()},
+            "table_occupancy": {k: int(g(t.occupancy()))
+                                for k, t in state["tables"].items()},
+            "table_dropped": {k: int(g(t.dropped))
+                              for k, t in state["tables"].items()},
+        }

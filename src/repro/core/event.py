@@ -1,0 +1,130 @@
+"""Events and event batches.
+
+The paper's event is ``<sid, ts, k, v>`` processed one at a time; the TPU
+adaptation processes *microbatches*: a struct-of-arrays ``EventBatch`` with
+a validity mask (fixed capacity, SPMD-friendly).  ``v`` is a pytree of
+arrays with leading dim B — schema-free blobs live host-side in the KV
+store; on device we carry their encoded features (DESIGN.md section 9).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_dataclass
+@dataclass
+class EventBatch:
+    sid: jnp.ndarray      # int32 [B] stream id
+    ts: jnp.ndarray       # int32 [B] timestamp ticks (global across streams)
+    key: jnp.ndarray      # int32 [B] event key (hashed key space)
+    value: Any            # pytree, leaves [B, ...]
+    valid: jnp.ndarray    # bool  [B]
+
+    @property
+    def capacity(self) -> int:
+        return int(self.key.shape[0])
+
+    def count(self):
+        return jnp.sum(self.valid.astype(jnp.int32))
+
+    # ---- constructors ----
+    @staticmethod
+    def empty(capacity: int, value_spec: Dict[str, Any]) -> "EventBatch":
+        """value_spec: pytree of (shape_suffix, dtype)."""
+        value = jax.tree.map(
+            lambda s: jnp.zeros((capacity,) + tuple(s[0]), s[1]),
+            value_spec, is_leaf=_is_spec_leaf)
+        z = jnp.zeros((capacity,), jnp.int32)
+        return EventBatch(sid=z, ts=z, key=z, value=value,
+                          valid=jnp.zeros((capacity,), bool))
+
+    @staticmethod
+    def of(key, value, *, ts=None, sid=None, valid=None) -> "EventBatch":
+        key = jnp.asarray(key, jnp.int32)
+        b = key.shape[0]
+        return EventBatch(
+            sid=jnp.zeros((b,), jnp.int32) if sid is None
+            else jnp.asarray(sid, jnp.int32),
+            ts=jnp.arange(b, dtype=jnp.int32) if ts is None
+            else jnp.asarray(ts, jnp.int32),
+            key=key,
+            value=jax.tree.map(jnp.asarray, value),
+            valid=jnp.ones((b,), bool) if valid is None
+            else jnp.asarray(valid, bool),
+        )
+
+    # ---- transforms (all shape-static) ----
+    def with_value(self, value) -> "EventBatch":
+        return EventBatch(self.sid, self.ts, self.key, value, self.valid)
+
+    def mask(self, keep) -> "EventBatch":
+        return EventBatch(self.sid, self.ts, self.key, self.value,
+                          self.valid & keep)
+
+    def take(self, idx) -> "EventBatch":
+        g = lambda a: a[idx]
+        return EventBatch(g(self.sid), g(self.ts), g(self.key),
+                          jax.tree.map(g, self.value), g(self.valid))
+
+    def pad_to(self, capacity: int) -> "EventBatch":
+        b = self.capacity
+        if b == capacity:
+            return self
+        assert capacity > b
+        pad = lambda a: jnp.pad(
+            a, [(0, capacity - b)] + [(0, 0)] * (a.ndim - 1))
+        return EventBatch(pad(self.sid), pad(self.ts), pad(self.key),
+                          jax.tree.map(pad, self.value), pad(self.valid))
+
+    def sort_by_key_ts(self) -> "EventBatch":
+        """Deterministic (key, ts) order; invalid rows sink to the end.
+        This realizes the paper's 'events fed in increasing timestamp
+        order with deterministic tie-breaking' per updater.  Two stable
+        passes give a lexicographic (key, ts) sort without 64-bit keys."""
+        by_ts = self.take(jnp.argsort(self.ts, stable=True))
+        invalid_key = jnp.where(by_ts.valid, by_ts.key,
+                                jnp.int32(2**31 - 1))
+        out = by_ts.take(jnp.argsort(invalid_key, stable=True))
+        # rewrite invalid rows' keys to the sink value so the key array is
+        # truly sorted (downstream run detection relies on it)
+        skey = jnp.where(out.valid, out.key, jnp.int32(2**31 - 1))
+        return EventBatch(out.sid, out.ts, skey, out.value, out.valid)
+
+    # ---- host-side helpers ----
+    def to_host(self):
+        n = int(np.asarray(self.count()))
+        v = np.asarray(self.valid)
+        sel = np.nonzero(v)[0][:n]
+        return {
+            "sid": np.asarray(self.sid)[sel],
+            "ts": np.asarray(self.ts)[sel],
+            "key": np.asarray(self.key)[sel],
+            "value": jax.tree.map(lambda a: np.asarray(a)[sel], self.value),
+        }
+
+
+def _is_spec_leaf(x):
+    return (isinstance(x, tuple) and len(x) == 2
+            and isinstance(x[0], tuple))
+
+
+def concat(batches) -> EventBatch:
+    cat = lambda *xs: jnp.concatenate(xs, axis=0)
+    return EventBatch(
+        sid=cat(*[b.sid for b in batches]),
+        ts=cat(*[b.ts for b in batches]),
+        key=cat(*[b.key for b in batches]),
+        value=jax.tree.map(cat, *[b.value for b in batches]),
+        valid=cat(*[b.valid for b in batches]),
+    )
+
+
+def compact(batch: EventBatch) -> EventBatch:
+    """Move valid events to the front (stable)."""
+    order = jnp.argsort(~batch.valid, stable=True)
+    return batch.take(order)

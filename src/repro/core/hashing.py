@@ -1,0 +1,115 @@
+"""Integer hashing + the Muppet hash ring, as pure jnp.
+
+The ring is materialized as *runtime arrays* (sorted virtual-node hashes +
+their shard ids).  Routing is therefore data, not code: failure re-routes
+and elastic scale-ups swap in a new ring without recompiling the engine
+step — the TPU analogue of Muppet's "master broadcasts the failure, all
+workers update their hash ring" (paper section 4.3).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+U32 = jnp.uint32
+
+
+def mix32(x):
+    """splitmix-style avalanche over uint32 (jnp)."""
+    x = x.astype(U32)
+    x = (x ^ (x >> 16)) * U32(0x7FEB352D)
+    x = (x ^ (x >> 15)) * U32(0x846CA68B)
+    x = x ^ (x >> 16)
+    return x
+
+
+def hash_key(key, salt: int = 0):
+    """Hash int32/uint32 keys (+salt) to uint32."""
+    return mix32(key.astype(U32) ^ U32(salt & 0xFFFFFFFF))
+
+
+def _mix32_np(x: np.ndarray) -> np.ndarray:
+    x = x.astype(np.uint32)
+    x = (x ^ (x >> np.uint32(16))) * np.uint32(0x7FEB352D)
+    x = (x ^ (x >> np.uint32(15))) * np.uint32(0x846CA68B)
+    x = x ^ (x >> np.uint32(16))
+    return x
+
+
+class HashRing:
+    """Consistent-hash ring with virtual nodes (host-built, device-queried).
+
+    ``table()`` returns (ring_hashes [R] ascending uint32, ring_shards [R])
+    to be fed to the jitted step; ``route`` runs on device.
+    """
+
+    def __init__(self, n_shards: int, *, vnodes: int = 64,
+                 alive: Optional[np.ndarray] = None, seed: int = 0x5EED):
+        self.n_shards = n_shards
+        self.vnodes = vnodes
+        self.seed = seed
+        self.alive = (np.ones(n_shards, bool) if alive is None
+                      else np.asarray(alive, bool).copy())
+        self._build()
+
+    def _build(self):
+        shards = np.nonzero(self.alive)[0]
+        if len(shards) == 0:
+            raise RuntimeError("hash ring has no alive shards")
+        ids = np.repeat(shards, self.vnodes).astype(np.uint32)
+        vix = np.tile(np.arange(self.vnodes, dtype=np.uint32), len(shards))
+        h = _mix32_np(ids * np.uint32(0x9E3779B9) ^ _mix32_np(
+            vix + np.uint32(self.seed)))
+        order = np.argsort(h, kind="stable")
+        self.ring_hashes = h[order]
+        self.ring_shards = ids[order].astype(np.int32)
+
+    # ---- host-side membership changes (master broadcast) ----
+    def fail(self, shard: int):
+        self.alive[shard] = False
+        self._build()
+
+    def join(self, shard: int):
+        if shard >= self.n_shards:
+            grown = np.ones(shard + 1, bool)
+            grown[:self.n_shards] = self.alive
+            self.alive = grown
+            self.n_shards = shard + 1
+        self.alive[shard] = True
+        self._build()
+
+    def table(self) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        return (jnp.asarray(self.ring_hashes), jnp.asarray(self.ring_shards))
+
+
+def route(keys, dest_salt: int, ring_hashes, ring_shards):
+    """Device-side ring lookup: shard id per key.
+
+    Hash of (key, destination operator) walks clockwise to the next
+    virtual node — Muppet's ``h(key, dest function) -> worker``.
+    """
+    h = hash_key(keys, salt=dest_salt)
+    idx = jnp.searchsorted(ring_hashes, h, side="left")
+    idx = jnp.where(idx == ring_hashes.shape[0], 0, idx)  # wrap
+    return ring_shards[idx]
+
+
+def route_secondary(keys, dest_salt: int, ring_hashes, ring_shards):
+    """The *other* choice for two-choice dispatch: next distinct shard
+    clockwise on the ring (Muppet 2.0's secondary queue)."""
+    h = hash_key(keys, salt=dest_salt)
+    R = ring_hashes.shape[0]
+    idx = jnp.searchsorted(ring_hashes, h, side="left") % R
+    primary = ring_shards[idx]
+    # walk up to 8 vnodes ahead looking for a different shard
+    best = primary
+    found = jnp.zeros(keys.shape, bool)
+    for step in range(1, 9):
+        cand = ring_shards[(idx + step) % R]
+        take = (~found) & (cand != primary)
+        best = jnp.where(take, cand, best)
+        found = found | take
+    return best

@@ -1,0 +1,77 @@
+"""Hotspot mitigation: key splitting (paper section 5, Example 6).
+
+"Instead of using just a single updater U, we can use a set of updaters,
+each of which counts just a subset of Best Buy events" — for associative
++ commutative updates, a hot key k is rewritten to W sub-keys
+``k*W + r`` by a splitting mapper; per-sub-key partial aggregates are
+re-combined on read (or by a periodic re-aggregation updater).
+
+``KeySplitMapper`` wraps any stream; ``read_split_slate`` merges the W
+partials with the updater's own combine.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.event import EventBatch
+from repro.core.hashing import hash_key
+from repro.core.operators import AssociativeUpdater, Mapper
+
+
+def split_keys(keys, ts, ways: int, nonce=None):
+    """key -> key*W + r with r pseudo-random per event (salted by ts and
+    a per-row nonce so a hot key's events spread across all W sub-keys
+    even within one microbatch)."""
+    if nonce is None:
+        nonce = jnp.arange(keys.shape[0], dtype=jnp.int32)
+    mixin = keys ^ (ts * jnp.int32(-1640531535)) ^ \
+        (nonce * jnp.int32(40503))  # 2654435761 as signed int32
+    r = (hash_key(mixin, salt=0x51717) % jnp.uint32(ways)).astype(
+        jnp.int32)
+    return keys * ways + r
+
+
+def merge_keys(split, ways: int):
+    return split // ways
+
+
+class KeySplitMapper(Mapper):
+    """Rewrites keys on ``in_stream`` to W-way sub-keys on ``out_stream``."""
+
+    def __init__(self, in_stream: str, out_stream: str, value_spec,
+                 ways: int = 8, name: str = "key_split"):
+        self.name = name
+        self.subscribes = (in_stream,)
+        self.in_value_spec = value_spec
+        self.out_streams = {out_stream: value_spec}
+        self.ways = ways
+        self._out = out_stream
+
+    def map_batch(self, batch: EventBatch) -> Dict[str, EventBatch]:
+        new_key = split_keys(batch.key, batch.ts, self.ways)
+        return {self._out: EventBatch(sid=batch.sid, ts=batch.ts + 1,
+                                      key=new_key, value=batch.value,
+                                      valid=batch.valid)}
+
+
+def read_split_slate(engine, state, updater: str, key: int, ways: int,
+                     combine=None):
+    """Merge the W partial slates of a split key (single-shard engine)."""
+    op = engine.wf.by_name[updater]
+    combine = combine or op.combine
+    partials = []
+    for r in range(ways):
+        s = engine.read_slate(state, updater, key * ways + r)
+        if s is not None:
+            partials.append(s)
+    if not partials:
+        return None
+    out = partials[0]
+    for p in partials[1:]:
+        out = combine(jax.tree.map(np.asarray, out),
+                      jax.tree.map(np.asarray, p))
+    return out

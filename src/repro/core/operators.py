@@ -1,0 +1,110 @@
+"""MapUpdate operators.
+
+The paper's ``map(event) -> event*`` and ``update(event, slate) -> event*``
+become *vectorized* operators over EventBatches.  Updaters come in two
+flavors matching the two execution paths the engine offers (DESIGN.md
+section 2):
+
+- ``AssociativeUpdater``: declares ``lift / combine / merge`` so the engine
+  can pre-combine same-key events with a segmented associative scan (the
+  TPU analogue of Example 6's key-splitting trick is built on this);
+- ``SequentialUpdater``: declares ``step(slate, event)`` with strict
+  per-key timestamp order, executed as a padded-run scan (vmap over keys,
+  scan over run positions).
+
+Emissions are shape-static: each input event may emit at most one event
+per declared output stream, masked by validity (multi-emission is
+expressed by chaining a mapper that fans out).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.event import EventBatch
+
+
+class Operator:
+    """Base: every operator subscribes to streams and has a unique name."""
+    name: str = "op"
+    subscribes: Sequence[str] = ()
+
+    # value_spec of events this operator consumes: pytree of
+    # ((shape_suffix, dtype)) leaves — needed to preallocate queues.
+    in_value_spec: Dict[str, Any] = {}
+
+    # stream -> value_spec this operator can emit to
+    out_streams: Dict[str, Any] = {}
+
+
+class Mapper(Operator):
+    """Stateless. ``map_batch`` must be jax-traceable and respect
+    ``batch.valid`` (emitted batches carry their own validity masks)."""
+
+    def map_batch(self, batch: EventBatch) -> Dict[str, EventBatch]:
+        raise NotImplementedError
+
+
+class Updater(Operator):
+    """Stateful: owns one slate per (updater, key) — paper section 3."""
+
+    ttl: int = 0          # ticks; 0 = forever (paper's default)
+    table_capacity: int = 4096   # per-shard slate-table capacity
+
+    def slate_spec(self) -> Dict[str, Any]:
+        """pytree of (shape_suffix, dtype) describing one slate."""
+        raise NotImplementedError
+
+    def init_slate(self, n: int):
+        """Fresh slates for first-seen keys: pytree with leading dim n."""
+        return jax.tree.map(
+            lambda s: jnp.zeros((n,) + tuple(s[0]), s[1]),
+            self.slate_spec(), is_leaf=_is_spec_leaf)
+
+
+class AssociativeUpdater(Updater):
+    """update is a commutative monoid over per-event deltas.
+
+    Engine contract:
+      total_k = combine(lift(e_1), ..., lift(e_m))   for key k's events
+      slate_k' = merge(slate_k, total_k)
+      emit(keys, old, new, ts) -> optional events (<=1 per key per stream)
+    """
+
+    def lift(self, batch: EventBatch):
+        """EventBatch -> delta pytree with leading dim B."""
+        raise NotImplementedError
+
+    def combine(self, d1, d2):
+        """Elementwise-batched associative combine of two delta pytrees."""
+        raise NotImplementedError
+
+    def merge(self, slate, delta):
+        """Fold combined delta into slate (batched over keys)."""
+        raise NotImplementedError
+
+    def emit(self, keys, old_slate, new_slate, ts
+             ) -> Dict[str, EventBatch]:
+        return {}
+
+
+class SequentialUpdater(Updater):
+    """General update function: strict per-key arrival order.
+
+    ``step(slate_row, ev)`` consumes one event for one key; ``ev`` is a
+    dict(sid, ts, key, value) of single rows; must be vmap-able.
+    Returns (new_slate_row, emissions) where emissions is
+    {stream: (value_row, emit_flag)}.
+    """
+
+    max_run: int = 32     # static per-key events per tick (hotspot bound)
+
+    def step(self, slate_row, ev) -> Tuple[Any, Dict[str, Any]]:
+        raise NotImplementedError
+
+
+def _is_spec_leaf(x):
+    return isinstance(x, tuple) and len(x) == 2 and isinstance(x[0], tuple)

@@ -1,0 +1,105 @@
+"""Per-operator bounded event queues (ring buffers) + overflow policies.
+
+Paper section 4.3 "Queue Overflow": when a worker's queue is full the
+sender must invoke an overflow mechanism — drop (+count, +log), divert to
+an overflow stream running degraded operators, or throttle the source.
+Capacities are static here (SPMD), so the policy applies at enqueue time.
+"""
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.event import EventBatch, compact
+
+
+class OverflowPolicy(enum.Enum):
+    DROP = "drop"
+    OVERFLOW_STREAM = "overflow_stream"
+    THROTTLE = "throttle"
+
+
+@jax.tree_util.register_dataclass
+@dataclass
+class QueueState:
+    buf: EventBatch        # capacity Q
+    head: jnp.ndarray      # int32 []
+    size: jnp.ndarray      # int32 []
+    dropped: jnp.ndarray   # int32 [] lifetime overflow count
+    peak: jnp.ndarray      # int32 [] high-water mark
+
+    @property
+    def capacity(self) -> int:
+        return self.buf.capacity
+
+
+def make_queue(capacity: int, value_spec) -> QueueState:
+    z = jnp.zeros((), jnp.int32)
+    return QueueState(buf=EventBatch.empty(capacity, value_spec),
+                      head=z, size=z, dropped=z, peak=z)
+
+
+def enqueue(q: QueueState, incoming: EventBatch
+            ) -> Tuple[QueueState, EventBatch]:
+    """Append valid events; returns (queue, overflowed_events).
+
+    Overflowed events keep their validity so the engine can apply the
+    operator's policy (drop-count / overflow stream / throttle signal).
+    """
+    inc = compact(incoming)
+    B, Q = inc.capacity, q.capacity
+    n = inc.count()
+    space = jnp.maximum(Q - q.size, 0)
+    ranks = jnp.arange(B, dtype=jnp.int32)
+    accept = inc.valid & (ranks < space)
+    pos = (q.head + q.size + ranks) % Q
+    safe_pos = jnp.where(accept, pos, Q)   # OOB -> dropped scatter
+
+    def put(dst, src):
+        return dst.at[safe_pos].set(src, mode="drop")
+
+    buf = EventBatch(
+        sid=put(q.buf.sid, inc.sid),
+        ts=put(q.buf.ts, inc.ts),
+        key=put(q.buf.key, inc.key),
+        value=jax.tree.map(put, q.buf.value, inc.value),
+        valid=put(q.buf.valid, accept),
+    )
+    taken = jnp.minimum(n, space)
+    size = q.size + taken
+    overflowed = inc.mask(inc.valid & (ranks >= space))
+    nq = QueueState(buf=buf, head=q.head, size=size,
+                    dropped=q.dropped,
+                    peak=jnp.maximum(q.peak, size))
+    return nq, overflowed
+
+
+def dequeue(q: QueueState, batch: int) -> Tuple[QueueState, EventBatch]:
+    Q = q.capacity
+    ranks = jnp.arange(batch, dtype=jnp.int32)
+    take = ranks < jnp.minimum(q.size, batch)
+    idx = (q.head + ranks) % Q
+    out = EventBatch(
+        sid=q.buf.sid[idx], ts=q.buf.ts[idx], key=q.buf.key[idx],
+        value=jax.tree.map(lambda a: a[idx], q.buf.value),
+        valid=q.buf.valid[idx] & take,
+    )
+    n_taken = jnp.sum(take.astype(jnp.int32))
+    # clear validity of consumed slots (hygiene for debugging)
+    cleared = q.buf.valid.at[jnp.where(take, idx, Q)].set(False, mode="drop")
+    nq = QueueState(buf=EventBatch(q.buf.sid, q.buf.ts, q.buf.key,
+                                   q.buf.value, cleared),
+                    head=(q.head + n_taken) % Q,
+                    size=q.size - n_taken,
+                    dropped=q.dropped, peak=q.peak)
+    return nq, out
+
+
+def count_drop(q: QueueState, overflowed: EventBatch) -> QueueState:
+    return QueueState(buf=q.buf, head=q.head, size=q.size,
+                      dropped=q.dropped + overflowed.count(),
+                      peak=q.peak)

@@ -1,0 +1,65 @@
+"""Workflow graph: operators wired by streams (paper section 3, Figure 1).
+
+A MapUpdate application is a directed graph (cycles allowed) whose nodes
+are map/update functions and edges are streams.  The engine executes one
+*tick* per step: every operator consumes from its input queue, produced
+events land on subscriber queues for the next tick (pipelined, so
+end-to-end latency = graph depth x tick time — the paper's pipeline).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Sequence
+
+from repro.core.operators import Mapper, Operator, SequentialUpdater, Updater
+
+
+@dataclass
+class Workflow:
+    operators: Sequence[Operator]
+    external_streams: Sequence[str] = ()   # fed by sources (never emitted
+                                           # into by operators: throttle-safe)
+
+    def __post_init__(self):
+        names = [op.name for op in self.operators]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate operator names: {names}")
+        self.by_name: Dict[str, Operator] = {op.name: op
+                                             for op in self.operators}
+        # stream -> subscriber operator names
+        self.subscribers: Dict[str, List[str]] = {}
+        for op in self.operators:
+            for s in op.subscribes:
+                self.subscribers.setdefault(s, []).append(op.name)
+        self._validate()
+
+    def _validate(self):
+        produced = set(self.external_streams)
+        for op in self.operators:
+            produced.update(op.out_streams)
+        for op in self.operators:
+            for s in op.subscribes:
+                if s not in produced:
+                    raise ValueError(
+                        f"operator {op.name!r} subscribes to stream {s!r} "
+                        f"that nothing produces")
+        for s in self.external_streams:
+            for op in self.operators:
+                if s in op.out_streams:
+                    raise ValueError(
+                        f"{op.name!r} emits into external stream {s!r}; "
+                        "the paper forbids this (source-throttling "
+                        "deadlock analysis, section 5)")
+
+    # ---- helpers ----
+    def updaters(self) -> List[Updater]:
+        return [op for op in self.operators if isinstance(op, Updater)]
+
+    def mappers(self) -> List[Mapper]:
+        return [op for op in self.operators if isinstance(op, Mapper)]
+
+    def dests_of(self, stream: str) -> List[str]:
+        return self.subscribers.get(stream, [])
+
+    def op_index(self, name: str) -> int:
+        return [op.name for op in self.operators].index(name)

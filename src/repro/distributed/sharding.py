@@ -1,0 +1,132 @@
+"""Logical-axis sharding rules -> mesh PartitionSpecs.
+
+The model stack annotates params with logical tuples ("fsdp", "tp", None)
+and activations via ``ctx.constrain(x, ("act_batch", None, "heads"))``.
+This module translates those to the physical mesh with *divisibility-
+adaptive* fallback: a dim is sharded over its rule's axes only when the
+dim size divides the axis product (e.g. qwen2's 14 heads vs model=16 ->
+replicated heads, FSDP still applies).  That keeps one rule-set valid
+across all 10 archs x 4 shapes x 2 meshes.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def rules_for(mesh: Mesh, *, phase: str = "train",
+              long_context: bool = False,
+              fsdp_params: bool = True) -> Dict[str, Tuple[str, ...]]:
+    """Sharding rules per phase.
+
+    KV caches shard their *sequence* dim over "model" in serving phases:
+    several archs have kv_heads < model-axis size (gemma3 kv=1, qwen kv=2/
+    8), so head-sharding cannot spread the cache; sequence sharding always
+    divides (32k/512k caches) and decode attention tolerates it (softmax
+    partials combine with a psum — flash-decoding's split-K, done by
+    GSPMD).  long_500k (batch=1) additionally spreads over the data axes.
+    """
+    names = mesh.axis_names
+    fsdp = tuple(a for a in ("pod", "data") if a in names)
+    tp = ("model",) if "model" in names else ()
+    if long_context:
+        kv_seq = fsdp + tp
+    elif phase in ("prefill", "decode"):
+        kv_seq = tp
+    else:
+        kv_seq = ()
+    return {
+        # params
+        "fsdp": fsdp if fsdp_params else (),
+        "tp": tp,
+        # activations
+        "act_batch": fsdp,
+        # Megatron-style sequence parallelism: the residual stream (and
+        # hence the remat-saved per-layer carry) is sharded over "model"
+        # between blocks; GSPMD inserts the all-gather before qkv/ffn and
+        # the reduce-scatter after the out-projection.
+        "act_seq": tp if phase in ("train", "prefill") else (),
+        "heads": tp,
+        "kv_heads": tp,
+        "ffn": tp,
+        "vocab": tp,
+        "experts": tp,
+        "kv_seq": kv_seq,
+    }
+
+
+def _axis_prod(mesh: Mesh, axes: Sequence[str]) -> int:
+    return int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+
+
+# when several dims of one tensor map to the same mesh axis (e.g. a KV
+# cache with both kv_heads and kv_seq -> "model"), the higher-priority
+# logical name keeps it and the other dim replicates
+_PRIORITY = ("kv_heads", "heads", "vocab", "ffn", "experts", "tp",
+             "fsdp", "act_batch", "act_seq", "kv_seq")
+
+
+def to_pspec(logical: Sequence[Optional[str]], shape: Sequence[int],
+             mesh: Mesh, rules: Dict[str, Tuple[str, ...]]) -> P:
+    order = sorted(range(len(logical)),
+                   key=lambda i: _PRIORITY.index(logical[i])
+                   if logical[i] in _PRIORITY else len(_PRIORITY))
+    parts: list = [None] * len(logical)
+    used: set = set()
+    for i in order:
+        name, dim = logical[i], shape[i]
+        axes = rules.get(name, ()) if name else ()
+        axes = tuple(a for a in axes if a not in used)
+        if axes and dim % _axis_prod(mesh, axes) == 0:
+            parts[i] = axes if len(axes) > 1 else axes[0]
+            used.update(axes)
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def tree_shardings(specs_tree, shapes_tree, mesh: Mesh, rules
+                   ) -> Any:
+    """specs_tree: logical tuples; shapes_tree: matching
+    ShapeDtypeStructs/arrays -> tree of NamedSharding."""
+    def one(spec, shaped):
+        return NamedSharding(mesh, to_pspec(spec, shaped.shape, mesh,
+                                            rules))
+    return jax.tree.map(one, specs_tree, shapes_tree,
+                        is_leaf=lambda s: isinstance(s, tuple) and
+                        all(isinstance(e, (str, type(None))) for e in s))
+
+
+def make_constrainer(mesh: Mesh, rules):
+    """ctx.constrain implementation for model blocks."""
+    def constrain(x, logical):
+        spec = to_pspec(logical, x.shape, mesh, rules)
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh,
+                                                                 spec))
+    return constrain
+
+
+def batch_shardings(batch_tree, mesh: Mesh, rules) -> Any:
+    """Shard every model input on its leading (batch) dim."""
+    def one(x):
+        if x.ndim == 0:
+            return NamedSharding(mesh, P())
+        spec = to_pspec(("act_batch",) + (None,) * (x.ndim - 1), x.shape,
+                        mesh, rules)
+        return NamedSharding(mesh, spec)
+    return jax.tree.map(one, batch_tree)
+
+
+def state_shardings(model, states_abstract, mesh: Mesh, rules):
+    """Decode-state (KV cache / SSM state) shardings from the logical
+    specs recorded by ``stack.init_states`` (leaves carry .logical)."""
+    # states_abstract leaves are ShapeDtypeStruct with an attached
+    # ``logical`` attribute (set by launch.input_specs machinery).
+    def one(x):
+        logical = getattr(x, "logical", None) or (None,) * x.ndim
+        return NamedSharding(mesh, to_pspec(logical, x.shape, mesh, rules))
+    return jax.tree.map(one, states_abstract)

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels.
+
+Layout: ``kernels/<name>/{kernel.py, ops.py, ref.py}``
+  - ``kernel.py``  pl.pallas_call + BlockSpec VMEM tiling (TPU target)
+  - ``ops.py``     jit'd dispatching wrapper (ref on CPU, pallas on TPU)
+  - ``ref.py``     pure-jnp oracle (also the GSPMD/dry-run path)
+
+Hot spots covered (see DESIGN.md section 6): flash_attention (train/
+prefill), decode_attention (split-K flash decoding), ssd_scan (Mamba-2 /
+mLSTM chunked linear recurrence), slate_update (the Muppet updater hot
+loop: fused segment-combine + open-addressing table scatter), rmsnorm.
+"""

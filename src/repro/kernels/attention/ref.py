@@ -1,0 +1,83 @@
+"""Pure-jnp oracle for (flash) attention.
+
+Chunked over query blocks with a ``lax.scan`` so the S x S score matrix is
+never fully materialized — this is also the GSPMD path lowered in the
+multi-pod dry-run, so its HLO is representative of the flash kernel's
+HBM traffic (scores stay transient at [B, H, chunk, Skv]).
+
+Supports: GQA (kv-head repeat), causal masking with query offset, sliding
+windows, different K/V head dims (for MLA), bidirectional (encoder) mode.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _repeat_kv(x, rep: int):
+    if rep == 1:
+        return x
+    b, s, h, d = x.shape
+    return jnp.broadcast_to(x[:, :, :, None, :], (b, s, h, rep, d)).reshape(
+        b, s, h * rep, d)
+
+
+def _block_attend(qc, k, v, rows, cols, *, causal, window, scale):
+    """One query block. qc: [B,C,H,Dh]; k,v: [B,Skv,H,D*]."""
+    s = jnp.einsum("bqhd,bkhd->bhqk", qc.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    mask = jnp.ones(s.shape[-2:], dtype=bool)
+    if causal:
+        mask &= cols[None, :] <= rows[:, None]
+    if window:
+        mask &= cols[None, :] > rows[:, None] - window
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    # fully-masked rows (pad) produce uniform p; the caller slices them off
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "q_offset", "chunk"))
+def mha(q, k, v, *, causal: bool = True, window: int = 0, q_offset: int = 0,
+        chunk: int = 512):
+    """q: [B,Sq,H,Dh]; k: [B,Skv,Hkv,Dh]; v: [B,Skv,Hkv,Dv] -> [B,Sq,H,Dv].
+
+    ``q_offset``: absolute position of q row 0 minus kv row 0 (chunked
+    prefill / self-extension); standard full self-attention uses 0 with
+    Sq == Skv.
+    """
+    B, Sq, H, Dh = q.shape
+    _, Skv, Hkv, Dv = v.shape
+    rep = H // Hkv
+    k = _repeat_kv(k, rep)
+    v = _repeat_kv(v, rep)
+    scale = Dh ** -0.5
+    cols = jnp.arange(Skv)
+
+    if Sq <= chunk:
+        rows = jnp.arange(Sq) + q_offset
+        out = _block_attend(q, k, v, rows, cols, causal=causal,
+                            window=window, scale=scale)
+        return out.astype(q.dtype)
+
+    pad = (-Sq) % chunk
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nc = (Sq + pad) // chunk
+    q_blocks = q.reshape(B, nc, chunk, H, Dh).transpose(1, 0, 2, 3, 4)
+    row_blocks = (jnp.arange(nc * chunk) + q_offset).reshape(nc, chunk)
+
+    def body(_, xs):
+        qc, rows = xs
+        out = _block_attend(qc, k, v, rows, cols, causal=causal,
+                            window=window, scale=scale)
+        return None, out
+
+    _, ys = jax.lax.scan(jax.checkpoint(body), None, (q_blocks, row_blocks))
+    out = ys.transpose(1, 0, 2, 3, 4).reshape(B, nc * chunk, H, Dv)
+    return out[:, :Sq].astype(q.dtype)

@@ -1,0 +1,116 @@
+"""Flash-decoding (split-K) — Pallas TPU kernel.
+
+Decode reads an [S, Dh] KV cache per head to produce one token: pure HBM
+bandwidth.  The grid splits the cache into block_k tiles (innermost,
+sequential) with the online-softmax running (m, l, acc) in VMEM scratch;
+per-request valid lengths live in SMEM.  Blocks beyond a request's length
+(or outside its sliding window) are skipped entirely, so short requests
+in a continuous batch don't pay for the longest one — the serving engine
+relies on this for mixed-age slates.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr,
+                   acc_scr, *, scale: float, block_k: int, window: int,
+                   nk: int):
+    b = pl.program_id(0)
+    ki = pl.program_id(2)
+    length = len_ref[b]
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    k_start = ki * block_k
+    needed = k_start < length
+    if window:
+        needed &= (k_start + block_k) > length - window
+
+    @pl.when(needed)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale       # [sq, d]
+        k = k_ref[0, 0].astype(jnp.float32)               # [bk, d]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))
+        cols = k_start + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 1)
+        mask = cols < length
+        if window:
+            mask &= cols >= length - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev, l_prev = m_scr[...], l_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.where(mask, jnp.exp(s - m_new[:, None]), 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        v = v_ref[0, 0].astype(jnp.float32)
+        acc_scr[...] = acc_scr[...] * corr[:, None] + \
+            jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())))
+        l_scr[...] = l_prev * corr + p.sum(axis=1)
+        m_scr[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+def supported(q, k_cache, v_cache) -> bool:
+    B, Sq, H, Dh = q.shape
+    _, S, Hkv, Dv = v_cache.shape
+    return H % Hkv == 0 and Dh % 8 == 0 and Dv % 8 == 0 and S >= 8
+
+
+@functools.partial(jax.jit, static_argnames=("window", "block_k",
+                                             "interpret"))
+def decode_attention(q, k_cache, v_cache, lengths, *, window: int = 0,
+                     block_k: int = 1024, interpret: bool = False):
+    """q: [B,Sq,H,Dh] (Sq small); caches: [B,S,Hkv,D*]; lengths: [B]."""
+    B, Sq, H, Dh = q.shape
+    _, S, Hkv, Dv = v_cache.shape
+    rep = H // Hkv
+    scale = Dh ** -0.5
+    block_k = min(block_k, S)
+
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k_cache.transpose(0, 2, 1, 3)
+    vt = v_cache.transpose(0, 2, 1, 3)
+    pad_k = (-S) % block_k
+    if pad_k:
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    nk = (S + pad_k) // block_k
+
+    kernel = functools.partial(_decode_kernel, scale=scale,
+                               block_k=block_k, window=window, nk=nk)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, H, nk),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),  # lengths
+            pl.BlockSpec((1, 1, Sq, Dh), lambda b, h, j: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, block_k, Dh),
+                         lambda b, h, j: (b, h // rep, j, 0)),
+            pl.BlockSpec((1, 1, block_k, Dv),
+                         lambda b, h, j: (b, h // rep, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, Sq, Dv), lambda b, h, j: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, Dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((Sq,), jnp.float32),
+            pltpu.VMEM((Sq,), jnp.float32),
+            pltpu.VMEM((Sq, Dv), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), qt, kt, vt)
+    return out.transpose(0, 2, 1, 3)

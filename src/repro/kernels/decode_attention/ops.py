@@ -1,0 +1,19 @@
+"""Dispatching wrapper for decode attention (flash-decoding on TPU)."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.decode_attention import ref as _ref
+
+
+def decode_attend(q, k_cache, v_cache, lengths, *, window: int = 0,
+                  impl: str = "auto"):
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "pallas":
+        from repro.kernels.decode_attention import kernel as _k
+        if _k.supported(q, k_cache, v_cache):
+            return _k.decode_attention(q, k_cache, v_cache, lengths,
+                                       window=window)
+        impl = "ref"
+    return _ref.decode_attend(q, k_cache, v_cache, lengths, window=window)

@@ -1,0 +1,51 @@
+"""Pure-jnp oracle for single-token (decode) attention over a KV cache.
+
+q attends over a fixed-capacity cache with per-request valid lengths —
+the Muppet serving layer stores these caches as slates keyed by request.
+
+The cache is consumed in its storage dtype (accumulation forced to f32
+via ``preferred_element_type``) — casting a multi-GB cache to f32 would
+double decode HBM traffic, which is exactly what the Pallas kernel
+avoids by streaming bf16 tiles.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _rep(x, rep):
+    if rep == 1:
+        return x
+    b, s, h, d = x.shape
+    return jnp.broadcast_to(x[:, :, :, None, :], (b, s, h, rep, d)
+                            ).reshape(b, s, h * rep, d)
+
+
+@partial(jax.jit, static_argnames=("window",))
+def decode_attend(q, k_cache, v_cache, lengths, *, window: int = 0):
+    """q: [B,Sq,H,Dh] (Sq small); caches: [B,S,Hkv,D*];
+    lengths: [B] number of valid cache entries (the new token's k/v must
+    already be written at position lengths-1).  Returns [B,Sq,H,Dv].
+    """
+    B, Sq, H, Dh = q.shape
+    _, S, Hkv, Dv = v_cache.shape
+    rep = H // Hkv
+    scale = Dh ** -0.5
+
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, _rep(k_cache, rep),
+                   preferred_element_type=jnp.float32) * scale
+    cols = jnp.arange(S)[None, None, None, :]
+    valid = cols < lengths[:, None, None, None]
+    if window:
+        valid &= cols >= lengths[:, None, None, None] - window
+    s = jnp.where(valid, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p.astype(v_cache.dtype),
+                     _rep(v_cache, rep),
+                     preferred_element_type=jnp.float32)
+    return out.astype(q.dtype)

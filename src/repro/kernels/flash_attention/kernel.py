@@ -1,0 +1,145 @@
+"""Flash attention forward — Pallas TPU kernel.
+
+Tiling: grid (batch, q_heads, Sq/block_q, Skv/block_k); the innermost
+(kv) grid dim is sequential on TPU, so the online-softmax running max /
+denominator / accumulator live in VMEM scratch carried across kv steps.
+Block shapes keep the MXU busy (block_q x d and block_k x d tiles,
+d = head_dim 64..256 is lane-aligned); the VMEM working set is
+~ block_q*(Dh+Dv)*2B + block_q*block_k*4B ~ 1.5 MB at the defaults.
+
+Causal + sliding-window blocks are *skipped* (pl.when on block indices),
+so local layers do O(S*window) work — the asymptotics gemma3's 5-of-6
+local layers rely on.
+
+GQA: kv blocks are indexed by h // (H/Hkv) — no materialized kv repeat
+(the jnp ref pays that broadcast; the kernel reads the shared head
+directly from HBM).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                scale: float, block_q: int, block_k: int, causal: bool,
+                window: int, q_offset: int, nk: int, kv_len: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # block-level skip decision
+    q_block_end = qi * block_q + block_q - 1 + q_offset
+    k_block_start = ki * block_k
+    needed = k_block_start < kv_len
+    if causal:
+        needed &= k_block_start <= q_block_end
+    if window:
+        k_block_end = ki * block_k + block_k - 1
+        needed &= k_block_end > qi * block_q + q_offset - window
+
+    @pl.when(needed)
+    def _compute():
+        rows = qi * block_q + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 0) + q_offset
+        cols = ki * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 1)
+        q = q_ref[0, 0].astype(jnp.float32) * scale        # [bq, d]
+        k = k_ref[0, 0].astype(jnp.float32)                # [bk, d]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))
+        mask = cols < kv_len
+        if causal:
+            mask &= cols <= rows
+        if window:
+            mask &= cols > rows - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_scr[...]
+        l_prev = l_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.where(mask, jnp.exp(s - m_new[:, None]), 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        v = v_ref[0, 0].astype(jnp.float32)                # [bk, dv]
+        acc_scr[...] = acc_scr[...] * corr[:, None] + \
+            jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())))
+        l_scr[...] = l_prev * corr + p.sum(axis=1)
+        m_scr[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+def supported(q, k, v, *, causal: bool = True, window: int = 0) -> bool:
+    B, Sq, H, Dh = q.shape
+    _, Skv, Hkv, Dv = v.shape
+    return (H % Hkv == 0 and Dh % 8 == 0 and Dv % 8 == 0
+            and Sq >= 8 and Skv >= 8)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "q_offset",
+                                             "block_q", "block_k",
+                                             "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    q_offset: int = 0, block_q: int = 512,
+                    block_k: int = 512, interpret: bool = False):
+    """q: [B,Sq,H,Dh]; k: [B,Skv,Hkv,Dh]; v: [B,Skv,Hkv,Dv]."""
+    B, Sq, H, Dh = q.shape
+    _, Skv, Hkv, Dv = v.shape
+    rep = H // Hkv
+    scale = Dh ** -0.5
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Skv)
+
+    qt = q.transpose(0, 2, 1, 3)   # [B, H, S, D]
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+
+    pad_q = (-Sq) % block_q
+    pad_k = (-Skv) % block_k
+    if pad_q:
+        qt = jnp.pad(qt, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    nq = (Sq + pad_q) // block_q
+    nk = (Skv + pad_k) // block_k
+
+    kernel = functools.partial(
+        _fwd_kernel, scale=scale, block_q=block_q, block_k=block_k,
+        causal=causal, window=window, q_offset=q_offset, nk=nk,
+        kv_len=Skv)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, Dh),
+                         lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, block_k, Dh),
+                         lambda b, h, i, j: (b, h // rep, j, 0)),
+            pl.BlockSpec((1, 1, block_k, Dv),
+                         lambda b, h, i, j: (b, h // rep, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, Dv),
+                               lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq + pad_q, Dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, Dv), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out[:, :, :Sq].transpose(0, 2, 1, 3)

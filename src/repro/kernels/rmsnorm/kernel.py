@@ -1,0 +1,51 @@
+"""Fused RMSNorm — Pallas TPU kernel (memory-bound: one HBM pass)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rms_kernel(x_ref, w_ref, o_ref, *, eps: float, scale_offset: bool):
+    x = x_ref[...].astype(jnp.float32)            # [rows, D]
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    w = w_ref[...].astype(jnp.float32)
+    if scale_offset:
+        w = 1.0 + w
+    o_ref[...] = (x * jax.lax.rsqrt(var + eps) * w).astype(o_ref.dtype)
+
+
+def supported(x) -> bool:
+    return x.shape[-1] % 8 == 0
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "scale_offset",
+                                             "block_rows", "interpret"))
+def rmsnorm(x, w, *, eps: float = 1e-6, scale_offset: bool = False,
+            block_rows: int = 256, interpret: bool = False):
+    shape = x.shape
+    D = shape[-1]
+    rows = 1
+    for d in shape[:-1]:
+        rows *= d
+    x2 = x.reshape(rows, D)
+    pad = (-rows) % block_rows
+    if pad:
+        x2 = jnp.pad(x2, ((0, pad), (0, 0)))
+    nb = (rows + pad) // block_rows
+    kernel = functools.partial(_rms_kernel, eps=eps,
+                               scale_offset=scale_offset)
+    out = pl.pallas_call(
+        kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((block_rows, D), lambda i: (i, 0)),
+            pl.BlockSpec((D,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, D), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x2.shape, x.dtype),
+        interpret=interpret,
+    )(x2, w)
+    return out[:rows].reshape(shape)

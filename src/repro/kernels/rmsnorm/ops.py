@@ -1,0 +1,18 @@
+"""Dispatching wrapper for fused RMSNorm."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.rmsnorm import ref as _ref
+
+
+def rmsnorm(x, w, *, eps: float = 1e-6, scale_offset: bool = False,
+            impl: str = "auto"):
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "pallas":
+        from repro.kernels.rmsnorm import kernel as _k
+        if _k.supported(x):
+            return _k.rmsnorm(x, w, eps=eps, scale_offset=scale_offset)
+        impl = "ref"
+    return _ref.rmsnorm(x, w, eps=eps, scale_offset=scale_offset)

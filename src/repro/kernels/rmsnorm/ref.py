@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for fused RMSNorm (same math as models.layers.norms)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rmsnorm(x, w, *, eps: float = 1e-6, scale_offset: bool = False):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    wf = w.astype(jnp.float32)
+    if scale_offset:
+        wf = 1.0 + wf
+    return (xf * jax.lax.rsqrt(var + eps) * wf).astype(x.dtype)

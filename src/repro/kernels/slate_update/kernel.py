@@ -1,0 +1,80 @@
+"""Muppet updater hot loop — fused segment-combine + slate scatter.
+
+One kernel invocation applies one microbatch of *sorted* (key, delta)
+events to the slate table: a log-depth segmented prefix-sum combines every
+key's deltas in VMEM, then run-last rows read-modify-write their slate row
+in HBM (the innermost loop is a row-wise DMA scatter — the same access
+pattern Cassandra-backed Muppet pays per updated slate, minus the network).
+The table buffer is aliased in/out so the update is in-place.
+
+Covers sum-mergeable (counter-style) associative updaters — the flagship
+Muppet workload (Examples 1/2/4/5 are all counters).  General combine fns
+keep the jnp path (core/apply.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _slate_kernel(keys_ref, deltas_ref, slots_ref, table_in_ref,
+                  table_ref, *, B: int, steps: int):
+    keys = keys_ref[...]                        # [B] sorted, sink=int32max
+    vals = deltas_ref[...].astype(jnp.float32)  # [B, D]
+
+    # segmented inclusive prefix sum (doubling): vals[i] accumulates the
+    # run prefix ending at i
+    for d in range(steps):
+        sh = 1 << d
+        rolled = pltpu.roll(vals, sh, 0)
+        same = keys == pltpu.roll(keys, sh, 0)
+        idx = jax.lax.broadcasted_iota(jnp.int32, (B,), 0)
+        ok = (idx >= sh) & same
+        vals = vals + jnp.where(ok[:, None], rolled, 0.0)
+
+    # scatter run totals into slate rows (read-modify-write)
+    def body(i, _):
+        slot = slots_ref[i]
+
+        @pl.when(slot >= 0)
+        def _():
+            row = pl.load(table_ref, (pl.dslice(slot, 1), slice(None)))
+            total = jax.lax.dynamic_slice_in_dim(vals, i, 1, 0)
+            pl.store(table_ref, (pl.dslice(slot, 1), slice(None)),
+                     row + total.astype(table_ref.dtype))
+        return 0
+
+    jax.lax.fori_loop(0, B, body, 0)
+
+
+def supported(deltas) -> bool:
+    return deltas.ndim == 2 and deltas.shape[1] % 8 == 0
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def slate_update(keys_sorted, deltas, slots, table_vals, *,
+                 interpret: bool = False):
+    """keys_sorted: [B] int32 (invalid rows = int32.max, sorted);
+    deltas: [B, D]; slots: [B] int32 (slate row for run-LAST rows, -1
+    elsewhere); table_vals: [C, D].  Returns updated table_vals."""
+    B, D = deltas.shape
+    steps = max((B - 1).bit_length(), 1)
+    kernel = functools.partial(_slate_kernel, B=B, steps=steps)
+    return pl.pallas_call(
+        kernel,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),          # keys
+            pl.BlockSpec((B, D), lambda: (0, 0)),           # deltas
+            pl.BlockSpec(memory_space=pltpu.SMEM),          # slots
+            pl.BlockSpec(memory_space=pltpu.ANY),           # table (alias)
+        ],
+        out_specs=pl.BlockSpec(memory_space=pltpu.ANY),
+        out_shape=jax.ShapeDtypeStruct(table_vals.shape, table_vals.dtype),
+        input_output_aliases={3: 0},
+        interpret=interpret,
+    )(keys_sorted.astype(jnp.int32), deltas, slots.astype(jnp.int32),
+      table_vals)

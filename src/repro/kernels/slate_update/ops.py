@@ -1,0 +1,18 @@
+"""Dispatching wrapper for the fused slate update."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.slate_update import ref as _ref
+
+
+def slate_update(keys_sorted, deltas, slots, table_vals, *,
+                 impl: str = "auto"):
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "pallas":
+        from repro.kernels.slate_update import kernel as _k
+        if _k.supported(deltas):
+            return _k.slate_update(keys_sorted, deltas, slots, table_vals)
+        impl = "ref"
+    return _ref.slate_update(keys_sorted, deltas, slots, table_vals)

@@ -1,0 +1,21 @@
+"""Dispatching wrapper for the chunked SSD linear recurrence."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.ssd import ref as _ref
+
+ssd_step = _ref.ssd_step
+
+
+def ssd(q, k, v, log_a, *, chunk: int = 256, initial_state=None,
+        impl: str = "auto"):
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "pallas":
+        from repro.kernels.ssd_scan import kernel as _k
+        if _k.supported(q, k, v):
+            return _k.ssd_scan(q, k, v, log_a, chunk=chunk,
+                               initial_state=initial_state)
+        impl = "ref"
+    return _ref.ssd(q, k, v, log_a, chunk=chunk, initial_state=initial_state)

@@ -1,0 +1,87 @@
+"""Pure-jnp oracle: chunked linear recurrence (Mamba-2 SSD / mLSTM).
+
+Recurrent definition (per batch b, head h):
+    S_t = exp(log_a_t) * S_{t-1} + k_t^T v_t        # state [N, P]
+    y_t = q_t . S_t                                  # contract N
+
+Both Mamba-2's state-space dual and xLSTM's mLSTM reduce to this after
+gate/discretization preprocessing (see models/layers).  The chunked
+algorithm processes L-step blocks with intra-chunk quadratic attention and
+an inter-chunk sequential state pass — the same decomposition the Pallas
+``ssd_scan`` kernel tiles into VMEM.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def ssd_step(state, q, k, v, log_a):
+    """Single decode step.  state: [B,H,N,P]; q,k: [B,H,N]; v: [B,H,P];
+    log_a: [B,H].  Returns (new_state, y [B,H,P])."""
+    a = jnp.exp(log_a.astype(jnp.float32))[..., None, None]
+    new_state = a * state.astype(jnp.float32) + (
+        k.astype(jnp.float32)[..., :, None] * v.astype(jnp.float32)[..., None, :])
+    y = jnp.einsum("bhn,bhnp->bhp", q.astype(jnp.float32), new_state)
+    return new_state.astype(state.dtype), y.astype(v.dtype)
+
+
+@partial(jax.jit, static_argnames=("chunk",))
+def ssd(q, k, v, log_a, *, chunk: int = 256, initial_state=None):
+    """q,k: [B,S,H,N]; v: [B,S,H,P]; log_a: [B,S,H] (<= 0).
+
+    Returns (y [B,S,H,P], final_state [B,H,N,P]).
+    """
+    B, S, H, N = q.shape
+    P = v.shape[-1]
+    pad = (-S) % chunk
+    if pad:
+        zp = lambda x: jnp.pad(x, [(0, 0), (0, pad)] + [(0, 0)] * (x.ndim - 2))
+        q, k, v, log_a = zp(q), zp(k), zp(v), zp(log_a)
+    L = chunk
+    nc = (S + pad) // L
+
+    def to_chunks(x):
+        return x.reshape((B, nc, L) + x.shape[2:]).swapaxes(0, 1)
+
+    qc, kc, vc, lac = map(to_chunks, (q, k, v, log_a))  # leading axis nc
+
+    if initial_state is None:
+        initial_state = jnp.zeros((B, H, N, P), jnp.float32)
+    else:
+        initial_state = initial_state.astype(jnp.float32)
+
+    tri = jnp.tril(jnp.ones((L, L), bool))  # l >= m (inclusive of diagonal)
+
+    def body(S_prev, xs):
+        qb, kb, vb, lab = xs                       # [B,L,H,*]
+        labf = lab.astype(jnp.float32)
+        cum = jnp.cumsum(labf, axis=1)             # [B,L,H] inclusive
+        # --- intra-chunk (quadratic within L) ---
+        scores = jnp.einsum("blhn,bmhn->bhlm", qb.astype(jnp.float32),
+                            kb.astype(jnp.float32))
+        dmat = cum.transpose(0, 2, 1)[:, :, :, None] - \
+            cum.transpose(0, 2, 1)[:, :, None, :]  # [B,H,L,M] = cum_l - cum_m
+        decay = jnp.where(tri[None, None], jnp.exp(dmat), 0.0)
+        y_intra = jnp.einsum("bhlm,bmhp->blhp", scores * decay,
+                             vb.astype(jnp.float32))
+        # --- inter-chunk (carry state) ---
+        y_inter = jnp.einsum("blhn,bhnp->blhp",
+                             qb.astype(jnp.float32) *
+                             jnp.exp(cum)[..., None], S_prev)
+        # --- state update ---
+        end_decay = jnp.exp(cum[:, -1:, :] - cum)  # [B,L,H] decay u -> end
+        S_chunk = jnp.einsum("blhn,blhp->bhnp",
+                             kb.astype(jnp.float32) * end_decay[..., None],
+                             vb.astype(jnp.float32))
+        S_new = jnp.exp(cum[:, -1, :])[..., None, None] * S_prev + S_chunk
+        return S_new, (y_intra + y_inter)
+
+    final_state, ys = jax.lax.scan(jax.checkpoint(body), initial_state,
+                                   (qc, kc, vc, lac))
+    y = ys.swapaxes(0, 1).reshape(B, nc * L, H, P)[:, :S]
+    return y.astype(v.dtype), final_state

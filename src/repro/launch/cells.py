@@ -1,0 +1,177 @@
+"""(architecture x input-shape x mesh) cells: abstract inputs + step fns.
+
+Everything here works on ShapeDtypeStructs — no parameter allocation —
+so the 110B-parameter cells lower/compile on a CPU host.  The dry-run,
+roofline, and perf iterations all consume ``build_cell``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config
+from repro.distributed import optimizer as adamw
+from repro.distributed import sharding as shd
+from repro.models import lm
+from repro.models.config import (ModelConfig, SHAPE_BY_NAME, ShapeConfig,
+                                 cell_is_applicable)
+from repro.models.context import Ctx
+
+
+@dataclass
+class Cell:
+    cfg: ModelConfig
+    shape: ShapeConfig
+    mesh: Mesh
+    model: Any
+    step_fn: Callable
+    abstract_args: Tuple[Any, ...]
+    donate: Tuple[int, ...] = ()
+
+
+def _sds_with(sharding, shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+def abstract_params(model, mesh, rules):
+    shapes, specs = lm.param_specs(model)
+    shardings = shd.tree_shardings(specs, shapes, mesh, rules)
+    return jax.tree.map(
+        lambda s, sh: _sds_with(sh, s.shape, s.dtype), shapes, shardings)
+
+
+def abstract_opt(params_sds):
+    def f32like(s):
+        return jax.ShapeDtypeStruct(s.shape, jnp.float32,
+                                    sharding=s.sharding)
+    return adamw.OptState(
+        m=jax.tree.map(f32like, params_sds),
+        v=jax.tree.map(f32like, params_sds),
+        count=jax.ShapeDtypeStruct((), jnp.int32))
+
+
+def abstract_batch(cfg, shape, mesh, rules):
+    raw = lm.input_specs(cfg, shape)
+    shardings = shd.batch_shardings(raw, mesh, rules)
+    return jax.tree.map(lambda s, sh: _sds_with(sh, s.shape, s.dtype),
+                        raw, shardings)
+
+
+def abstract_states(model, shape, mesh, rules):
+    """Decode caches as ShapeDtypeStructs with shardings."""
+    def make_leaf(shp, dtype, logical):
+        spec = shd.to_pspec(logical, shp, mesh, rules)
+        return _sds_with(NamedSharding(mesh, spec), tuple(shp), dtype)
+    return lm.decode_states(model, shape.global_batch, shape.seq_len,
+                            make_leaf)
+
+
+def concrete_states(model, batch: int, cache_len: int, mesh=None,
+                    rules=None):
+    """Zero-initialized decode caches (host-scale use)."""
+    def make_leaf(shp, dtype, logical):
+        return jnp.zeros(tuple(shp), dtype)
+    return lm.decode_states(model, batch, cache_len, make_leaf)
+
+
+# --------------------------------------------------------------------------
+# step functions
+# --------------------------------------------------------------------------
+
+def make_train_step(model, mesh, rules, opt_cfg: adamw.AdamWConfig = None):
+    opt_cfg = opt_cfg or adamw.AdamWConfig()
+    constrain = shd.make_constrainer(mesh, rules)
+
+    def train_step(params, opt, batch):
+        ctx = Ctx(cdtype=jnp.bfloat16, constrain=constrain, mesh=mesh,
+                  rules=rules)
+
+        def loss_fn(p):
+            return lm.train_loss(model, p, batch, ctx)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, opt, metrics = adamw.update(params, grads, opt, opt_cfg)
+        metrics["loss"] = loss
+        return params, opt, metrics
+
+    return train_step
+
+
+def make_prefill_step(model, mesh, rules, cache_len: int,
+                      full_logits: bool = False):
+    constrain = shd.make_constrainer(mesh, rules)
+
+    def prefill_step(params, batch):
+        ctx = Ctx(cdtype=jnp.bfloat16, constrain=constrain, mesh=mesh,
+                  rules=rules)
+        return lm.prefill(model, params, batch, ctx, cache_len,
+                          full_logits=full_logits)
+
+    return prefill_step
+
+
+def make_decode_step(model, mesh, rules):
+    constrain = shd.make_constrainer(mesh, rules)
+
+    def decode_step(params, token, states, cur_index):
+        ctx = Ctx(cdtype=jnp.bfloat16, constrain=constrain, mesh=mesh,
+                  rules=rules)
+        logits, new_states = lm.decode_step(model, params, token, states,
+                                            cur_index, ctx)
+        next_token = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_token[:, None], new_states, cur_index + 1
+
+    return decode_step
+
+
+# --------------------------------------------------------------------------
+# cell assembly
+# --------------------------------------------------------------------------
+
+def build_cell(arch: str, shape_name: str, mesh: Mesh,
+               *, rules=None) -> Cell:
+    cfg = get_config(arch)
+    shape = SHAPE_BY_NAME[shape_name]
+    ok, why = cell_is_applicable(cfg, shape)
+    if not ok:
+        raise ValueError(f"cell skipped: {why}")
+    rules = rules or shd.rules_for(
+        mesh, phase=shape.phase,
+        long_context=(shape_name == "long_500k"))
+    model = lm.build(cfg)
+    params_sds = abstract_params(model, mesh, rules)
+
+    if shape.phase == "train":
+        batch_sds = abstract_batch(cfg, shape, mesh, rules)
+        opt_sds = abstract_opt(params_sds)
+        fn = make_train_step(model, mesh, rules)
+        return Cell(cfg=cfg, shape=shape, mesh=mesh, model=model,
+                    step_fn=fn,
+                    abstract_args=(params_sds, opt_sds, batch_sds),
+                    donate=(0, 1))
+    if shape.phase == "prefill":
+        batch_sds = abstract_batch(cfg, shape, mesh, rules)
+        fn = make_prefill_step(model, mesh, rules,
+                               cache_len=shape.seq_len)
+        return Cell(cfg=cfg, shape=shape, mesh=mesh, model=model,
+                    step_fn=fn, abstract_args=(params_sds, batch_sds))
+    # decode
+    batch_sds = abstract_batch(cfg, shape, mesh, rules)
+    states_sds = abstract_states(model, shape, mesh, rules)
+    fn = make_decode_step(model, mesh, rules)
+    return Cell(cfg=cfg, shape=shape, mesh=mesh, model=model,
+                step_fn=fn,
+                abstract_args=(params_sds, batch_sds["token"], states_sds,
+                               batch_sds["cur_index"]),
+                donate=(2,))
+
+
+def lower_cell(cell: Cell):
+    jitted = jax.jit(cell.step_fn, donate_argnums=cell.donate)
+    with cell.mesh:
+        return jitted.lower(*cell.abstract_args)

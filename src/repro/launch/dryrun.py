@@ -1,0 +1,202 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry run.
+
+For every (architecture x input shape) cell, lower + compile the step on
+the production mesh — (16,16) single pod and (2,16,16) multi-pod — and
+record memory_analysis / cost_analysis / HLO-walker roofline terms into
+``experiments/dryrun/*.json``.  No arrays are allocated: params, optimizer
+state, batches and KV caches are ShapeDtypeStructs.
+
+Run one cell:   PYTHONPATH=src python -m repro.launch.dryrun \
+                    --arch qwen2-0.5b --shape train_4k --multi-pod
+Run everything: PYTHONPATH=src python -m repro.launch.dryrun --all
+(``--all`` spawns one subprocess per cell: XLA device-count init is
+per-process, and compile memory is reclaimed between cells.)
+"""
+
+import argparse
+import gc
+import json
+import subprocess
+import sys
+import time
+import traceback
+
+RESULT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                          "experiments", "dryrun")
+
+# TPU v5e constants (roofline denominators)
+PEAK_FLOPS = 197e12      # bf16 FLOP/s per chip
+HBM_BW = 819e9           # B/s per chip
+ICI_BW = 50e9            # B/s per link
+
+
+def cell_id(arch, shape, multi_pod, tag=""):
+    pod = "multipod" if multi_pod else "pod"
+    suffix = f"_{tag}" if tag else ""
+    return f"{arch}__{shape}__{pod}{suffix}"
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool, tag: str = "",
+            extra_env=None) -> dict:
+    """Executed inside a fresh process (device count locked at import)."""
+    import jax
+    from repro.analysis.hlo import analyze
+    from repro.configs import get_config
+    from repro.launch.cells import build_cell, lower_cell
+    from repro.launch.mesh import make_production_mesh
+    from repro.models.config import SHAPE_BY_NAME, cell_is_applicable
+
+    cfg = get_config(arch)
+    shape = SHAPE_BY_NAME[shape_name]
+    ok, why = cell_is_applicable(cfg, shape)
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "(2,16,16) pod,data,model" if multi_pod
+        else "(16,16) data,model",
+        "multi_pod": multi_pod, "tag": tag,
+    }
+    if not ok:
+        rec["status"] = "skipped"
+        rec["skip_reason"] = why
+        return rec
+
+    n_chips = 512 if multi_pod else 256
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    cell = build_cell(arch, shape_name, mesh)
+    lowered = lower_cell(cell)
+    t1 = time.time()
+    compiled = lowered.compile()
+    t2 = time.time()
+
+    ma = compiled.memory_analysis()
+    print(ma)
+    ca = compiled.cost_analysis()
+    print({k: ca.get(k) for k in ("flops", "bytes accessed")})
+    cost = analyze(compiled.as_text())
+
+    # roofline terms (per the brief): seconds per step per chip
+    compute_s = cost.flops / PEAK_FLOPS
+    memory_s = cost.hbm_bytes / HBM_BW
+    collective_s = cost.total_collective_bytes / ICI_BW
+
+    # model flops: 6 N D (train) / 2 N_active D (single forward)
+    n_params = cfg.param_count(active_only=False)
+    n_active = cfg.param_count(active_only=True)
+    if shape.phase == "train":
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 6.0 * n_active * tokens
+    elif shape.phase == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 2.0 * n_active * tokens
+    else:
+        tokens = shape.global_batch  # one token per request
+        model_flops = 2.0 * n_active * tokens
+
+    terms = {
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+    }
+    dominant = max(terms, key=terms.get)
+
+    rec.update({
+        "status": "ok",
+        "n_chips": n_chips,
+        "lower_s": round(t1 - t0, 2),
+        "compile_s": round(t2 - t1, 2),
+        "memory_analysis": {
+            "argument_bytes_per_device": ma.argument_size_in_bytes,
+            "output_bytes_per_device": ma.output_size_in_bytes,
+            "temp_bytes_per_device": ma.temp_size_in_bytes,
+            "alias_bytes_per_device": ma.alias_size_in_bytes,
+            "peak_estimate_bytes_per_device":
+                ma.argument_size_in_bytes + ma.output_size_in_bytes
+                + ma.temp_size_in_bytes - ma.alias_size_in_bytes,
+        },
+        "xla_cost_analysis": {
+            "flops_raw": ca.get("flops"),
+            "bytes_accessed_raw": ca.get("bytes accessed"),
+            "note": "XLA counts while bodies once; see hlo_walker",
+        },
+        "hlo_walker_per_device": cost.as_dict(),
+        "model_flops_total": model_flops,
+        "model_flops_per_device": model_flops / n_chips,
+        "useful_flops_fraction":
+            (model_flops / n_chips) / cost.flops if cost.flops else None,
+        "roofline_terms_s": terms,
+        "dominant_term": dominant,
+        "tokens_per_step": tokens,
+    })
+    return rec
+
+
+def cells_to_run(archs=None, shapes=None):
+    from repro.configs import ARCHS
+    from repro.models.config import SHAPES
+    archs = archs or sorted(ARCHS)
+    shapes = shapes or [s.name for s in SHAPES]
+    for a in archs:
+        for s in shapes:
+            yield a, s
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(RESULT_DIR, exist_ok=True)
+
+    if args.all:
+        failures = []
+        for arch, shape in cells_to_run():
+            for mp in (False, True):
+                cid = cell_id(arch, shape, mp, args.tag)
+                path = os.path.join(RESULT_DIR, cid + ".json")
+                if os.path.exists(path) and not args.force:
+                    print(f"[skip-cached] {cid}")
+                    continue
+                cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                       "--arch", arch, "--shape", shape]
+                if mp:
+                    cmd.append("--multi-pod")
+                if args.tag:
+                    cmd += ["--tag", args.tag]
+                print(f"[run] {cid}", flush=True)
+                r = subprocess.run(cmd, capture_output=True, text=True,
+                                   env={**os.environ,
+                                        "PYTHONPATH": "src"})
+                if r.returncode != 0:
+                    failures.append(cid)
+                    print(f"[FAIL] {cid}\n{r.stdout[-2000:]}"
+                          f"\n{r.stderr[-4000:]}", flush=True)
+                else:
+                    print(r.stdout.strip().splitlines()[-1], flush=True)
+        print(f"\n{'ALL OK' if not failures else 'FAILURES: ' + str(failures)}")
+        sys.exit(1 if failures else 0)
+
+    assert args.arch and args.shape, "--arch and --shape required"
+    meshes = [args.multi_pod] if not args.both_meshes else [False, True]
+    for mp in meshes:
+        rec = run_one(args.arch, args.shape, mp, args.tag)
+        cid = cell_id(args.arch, args.shape, mp, args.tag)
+        path = os.path.join(RESULT_DIR, cid + ".json")
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=2)
+        print(f"[done] {cid}: status={rec['status']} "
+              f"dominant={rec.get('dominant_term')} "
+              f"compile_s={rec.get('compile_s')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,212 @@
+"""Continuous-batching serving driver — a MapUpdate application.
+
+The paper's mapping (DESIGN.md section 3): each request's decode state
+(KV caches / SSM states, write position, last token) is a *slate* keyed by
+request id; token events flow through the engine; a bounded admission
+queue applies Muppet's overflow policies (drop / throttle) under load;
+finished requests expire their slate (TTL).  On a pod, requests hash to
+data-axis shards with the same ring as the stream engine — this driver is
+the per-shard slot manager.
+
+Tick = (admit up to ``admit_per_tick`` prefills) + (one decode step for
+every active slot).  Prefill shapes are bucketed to keep jit cache small.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed import sharding as shd
+from repro.launch import cells
+from repro.launch.mesh import make_host_mesh
+from repro.models import lm
+from repro.models.context import Ctx
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray           # [P] int32
+    max_new: int = 16
+    arrived_tick: int = 0
+    tokens_out: List[int] = field(default_factory=list)
+    done_tick: Optional[int] = None
+
+
+@dataclass
+class ServeConfig:
+    n_slots: int = 8             # concurrent decode slots (batch)
+    cache_len: int = 256
+    prompt_bucket: int = 64      # prefill pad bucket
+    admit_per_tick: int = 2
+    queue_capacity: int = 64     # admission queue bound (overflow -> shed)
+    eos_token: int = -1          # -1 = run to max_new
+
+
+class ServingEngine:
+    def __init__(self, cfg_model, serve_cfg: ServeConfig = None, mesh=None):
+        self.scfg = serve_cfg or ServeConfig()
+        self.mesh = mesh or make_host_mesh(n_model=1)
+        self.rules = shd.rules_for(self.mesh, phase="decode")
+        self.model = lm.build(cfg_model)
+        self.cfg = cfg_model
+        sc = self.scfg
+
+        self._decode = jax.jit(cells.make_decode_step(
+            self.model, self.mesh, self.rules), donate_argnums=(2,))
+        self._prefill = jax.jit(cells.make_prefill_step(
+            self.model, self.mesh, self.rules, cache_len=sc.cache_len,
+            full_logits=True))
+
+        # batched decode state over slots = the slate table
+        self.states = cells.concrete_states(self.model, sc.n_slots,
+                                            sc.cache_len)
+        self.cur_index = jnp.zeros((sc.n_slots,), jnp.int32)
+        self.last_token = jnp.zeros((sc.n_slots, 1), jnp.int32)
+        self.active = np.zeros(sc.n_slots, bool)
+        self.slot_req: List[Optional[Request]] = [None] * sc.n_slots
+
+        self.queue: deque = deque()
+        self.shed = 0                      # overflow drops (paper 4.3)
+        self.tick = 0
+        self.finished: List[Request] = []
+
+        self._insert = jax.jit(self._insert_impl, donate_argnums=(0,))
+
+    # ---- admission (the "M0 source mapper") ----
+    def submit(self, req: Request) -> bool:
+        if len(self.queue) >= self.scfg.queue_capacity:
+            self.shed += 1                 # queue overflow: drop + count
+            return False
+        req.arrived_tick = self.tick
+        self.queue.append(req)
+        return True
+
+    @staticmethod
+    def _insert_impl(states, new_states, slot, cur_index, cur_value,
+                     last_token, tok_value):
+        merged = jax.tree.map(
+            lambda d, s: d.at[:, slot].set(s[:, 0].astype(d.dtype)),
+            states, new_states)
+        return (merged, cur_index.at[slot].set(cur_value),
+                last_token.at[slot].set(tok_value))
+
+    def _admit(self):
+        sc = self.scfg
+        admitted = 0
+        while (self.queue and admitted < sc.admit_per_tick
+               and not self.active.all()):
+            req = self.queue.popleft()
+            slot = int(np.nonzero(~self.active)[0][0])
+            P = len(req.prompt)
+            bucket = -(-P // sc.prompt_bucket) * sc.prompt_bucket
+            bucket = min(bucket, sc.cache_len)
+            toks = np.zeros((1, bucket), np.int32)
+            toks[0, :P] = req.prompt[:bucket]
+            batch = {"tokens": jnp.asarray(toks)}
+            batch.update(self._aux_inputs(1, bucket))
+            logits, new_states = self._prefill(lm_params(self), batch)
+            # last *real* prompt position; pad rows beyond P sit past the
+            # decode frontier (lengths = cur_index+1) and are overwritten
+            # as generation advances, so they are never attended.
+            tok = int(np.asarray(jnp.argmax(logits[0, min(P, bucket) - 1])))
+            self.states, self.cur_index, self.last_token = self._insert(
+                self.states, new_states, slot, self.cur_index,
+                jnp.int32(min(P, bucket)), self.last_token, jnp.int32(tok))
+            req.tokens_out.append(tok)
+            self.active[slot] = True
+            self.slot_req[slot] = req
+            admitted += 1
+
+    def _aux_inputs(self, b, s):
+        out = {}
+        if self.cfg.encdec:
+            out["enc_frames"] = jnp.zeros((b, s, self.cfg.d_model),
+                                          jnp.bfloat16)
+        if self.cfg.cross_attn_every:
+            out["image_embeds"] = jnp.zeros(
+                (b, self.cfg.n_image_tokens, self.cfg.d_model),
+                jnp.bfloat16)
+        return out
+
+    # ---- one engine tick ----
+    def step(self):
+        self._admit()
+        if self.active.any():
+            tok, self.states, self.cur_index = self._decode(
+                lm_params(self), self.last_token, self.states,
+                self.cur_index)
+            self.last_token = tok
+            toks = np.asarray(tok[:, 0])
+            for slot in np.nonzero(self.active)[0]:
+                req = self.slot_req[slot]
+                req.tokens_out.append(int(toks[slot]))
+                hit_eos = (self.scfg.eos_token >= 0
+                           and int(toks[slot]) == self.scfg.eos_token)
+                out_of_budget = len(req.tokens_out) >= req.max_new
+                out_of_cache = int(self.cur_index[slot]) >= \
+                    self.scfg.cache_len - 1
+                if hit_eos or out_of_budget or out_of_cache:
+                    req.done_tick = self.tick
+                    self.finished.append(req)
+                    self.active[slot] = False   # slate TTL expiry
+                    self.slot_req[slot] = None
+        self.tick += 1
+
+    def run(self, n_ticks: int):
+        for _ in range(n_ticks):
+            self.step()
+
+    def stats(self) -> Dict[str, Any]:
+        lat = [r.done_tick - r.arrived_tick for r in self.finished
+               if r.done_tick is not None]
+        return {
+            "tick": self.tick,
+            "finished": len(self.finished),
+            "active": int(self.active.sum()),
+            "queued": len(self.queue),
+            "shed": self.shed,
+            "mean_latency_ticks": float(np.mean(lat)) if lat else None,
+            "tokens_generated": int(sum(len(r.tokens_out)
+                                        for r in self.finished)),
+        }
+
+
+def lm_params(engine: ServingEngine):
+    if not hasattr(engine, "_params"):
+        with engine.mesh:
+            params, specs = lm.init(engine.model, jax.random.PRNGKey(0))
+            shardings = shd.tree_shardings(specs, params, engine.mesh,
+                                           engine.rules)
+            engine._params = jax.device_put(params, shardings)
+    return engine._params
+
+
+def main():
+    import argparse
+    from repro.configs import reduced_config
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--ticks", type=int, default=64)
+    args = ap.parse_args()
+    cfg = reduced_config(args.arch)
+    eng = ServingEngine(cfg, ServeConfig(n_slots=4, cache_len=128,
+                                         prompt_bucket=32))
+    rng = np.random.default_rng(0)
+    for i in range(args.requests):
+        eng.submit(Request(rid=i, prompt=rng.integers(
+            0, cfg.vocab_size, size=rng.integers(4, 30)).astype(np.int32),
+            max_new=8))
+    eng.run(args.ticks)
+    print(eng.stats())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Apply-time context threaded through model blocks.
+
+Carries phase (train/prefill/decode), positions, sharding-constraint hook
+and auxiliary memories (encoder output, image embeddings).  Blocks never
+import mesh machinery directly; ``constrain`` is injected by the launcher
+(`distributed.sharding.make_constrainer`) and is the identity on CPU tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
+
+import jax.numpy as jnp
+
+Array = Any
+
+
+def _identity_constrain(x, _spec):
+    return x
+
+
+@dataclass(frozen=True)
+class Ctx:
+    phase: str = "train"                 # train | prefill | decode
+    positions: Optional[Array] = None    # [B, S] absolute positions
+    cache_len: int = 0                   # static max cache length (decode)
+    cur_index: Optional[Array] = None    # [B] per-request write index (decode)
+    enc_memory: Optional[Array] = None   # [B, S_enc, D] (whisper decoder)
+    image_embeds: Optional[Array] = None # [B, n_img, D] (vlm cross-attn)
+    cdtype: Any = jnp.bfloat16           # compute dtype
+    deterministic: bool = True
+    # constrain(x, logical_spec_tuple) -> x ; logical axes: "batch", "seq",
+    # "heads", "kv_seq", "ffn", "vocab", "experts", None
+    constrain: Callable = _identity_constrain
+    rngs: Optional[Any] = None
+    # mesh + logical->axes rules, set by the launcher; layers may use
+    # them for explicit shard_map regions (e.g. MoE expert-parallel
+    # dispatch).  None on single-host test paths.
+    mesh: Optional[Any] = None
+    rules: Optional[Any] = None
+
+    @property
+    def is_decode(self) -> bool:
+        return self.phase == "decode"
+
+    def replace(self, **kw) -> "Ctx":
+        return dataclasses.replace(self, **kw)

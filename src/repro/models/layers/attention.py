@@ -1,0 +1,125 @@
+"""GQA self/cross attention sublayer (train / prefill / decode phases).
+
+State protocol (threaded by the scan stack):
+  - train:    state None -> None
+  - prefill:  state None -> {"k": [B,Smax,Hkv,Dh], "v": ...} (padded caches)
+  - decode:   caches in -> caches with the new token written at
+              ``ctx.cur_index`` (per-request write index, continuous
+              batching: the cache is this request's *slate*).
+Cross-attention caches the projected source k/v once (computed at prefill,
+reused every decode step).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.attention import ops as attn_ops
+from repro.kernels.decode_attention import ops as dec_ops
+from repro.models import init_utils as iu
+from repro.models.config import ModelConfig
+from repro.models.context import Ctx
+from repro.models.layers import rope as rope_mod
+
+
+def init(key, cfg: ModelConfig, *, is_cross: bool = False):
+    D = cfg.d_model
+    H, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    if is_cross:
+        Hkv = H  # cross layers use full-head kv in the assigned archs
+    ks = jax.random.split(key, 4)
+    pairs = {
+        "wq": iu.dense(ks[0], (D, H, Dh), ("fsdp", "tp", None)),
+        "wk": iu.dense(ks[1], (D, Hkv, Dh), ("fsdp", "tp", None)),
+        "wv": iu.dense(ks[2], (D, Hkv, Dh), ("fsdp", "tp", None)),
+        "wo": iu.dense(ks[3], (H, Dh, D), ("tp", None, "fsdp"),
+                       scale=1.0 / (H * Dh) ** 0.5),
+    }
+    if cfg.qkv_bias and not is_cross:
+        pairs["bq"] = iu.zeros((H, Dh), ("tp", None))
+        pairs["bk"] = iu.zeros((Hkv, Dh), ("tp", None))
+        pairs["bv"] = iu.zeros((Hkv, Dh), ("tp", None))
+    return iu.split_tree(pairs)
+
+
+def state_spec(cfg: ModelConfig, batch: int, cache_len: int,
+               *, is_cross: bool = False, source_len: int = 0):
+    """Pytree of (shape, dtype, logical spec) for the decode-time cache."""
+    Hkv = cfg.n_heads if is_cross else cfg.n_kv_heads
+    Dh = cfg.resolved_head_dim
+    slen = source_len if is_cross else cache_len
+    sh = (batch, slen, Hkv, Dh)
+    spec = ("act_batch", "kv_seq", "kv_heads", None)
+    return {"k": (sh, jnp.bfloat16, spec), "v": (sh, jnp.bfloat16, spec)}
+
+
+def _proj_qkv(p, x, kv_src, cd):
+    q = jnp.einsum("bsd,dhk->bshk", x.astype(cd), p["wq"].astype(cd))
+    k = jnp.einsum("bsd,dhk->bshk", kv_src.astype(cd), p["wk"].astype(cd))
+    v = jnp.einsum("bsd,dhk->bshk", kv_src.astype(cd), p["wv"].astype(cd))
+    if "bq" in p:
+        q = q + p["bq"].astype(cd)
+        k = k + p["bk"].astype(cd)
+        v = v + p["bv"].astype(cd)
+    return q, k, v
+
+
+def _write_cache(cache, new, idx):
+    """Write new [B,1,H,D] at per-request position idx [B]."""
+    b = jnp.arange(cache.shape[0])
+    return cache.at[b, idx].set(new[:, 0].astype(cache.dtype))
+
+
+def apply(p, x, state, ctx: Ctx, *, cfg: ModelConfig, causal: bool = True,
+          window: int = 0, is_cross: bool = False, cross_source: str = "",
+          rope_theta: Optional[float] = None):
+    cd = ctx.cdtype
+    theta = rope_theta if rope_theta is not None else cfg.rope_theta
+    B = x.shape[0]
+
+    if is_cross:
+        if ctx.is_decode and state is not None:
+            q = jnp.einsum("bsd,dhk->bshk", x.astype(cd), p["wq"].astype(cd))
+            k, v = state["k"], state["v"]
+            src_len = k.shape[1]
+            y = dec_ops.decode_attend(
+                q, k, v, jnp.full((B,), src_len, jnp.int32))
+            new_state = state
+        else:
+            src = ctx.image_embeds if cross_source == "image" else ctx.enc_memory
+            q, k, v = _proj_qkv(p, x, src, cd)
+            y = attn_ops.mha(q, k, v, causal=False)
+            new_state = {"k": k.astype(jnp.bfloat16),
+                         "v": v.astype(jnp.bfloat16)}
+        out = jnp.einsum("bshk,hkd->bsd", y.astype(cd), p["wo"].astype(cd))
+        out = ctx.constrain(out, ("act_batch", "act_seq", None))
+        return out, new_state
+
+    q, k, v = _proj_qkv(p, x, x, cd)
+    q = ctx.constrain(q, ("act_batch", None, "heads", None))
+    k = ctx.constrain(k, ("act_batch", None, "kv_heads", None))
+    positions = ctx.positions
+    q = rope_mod.apply_rope(q, positions, theta=theta)
+    k = rope_mod.apply_rope(k, positions, theta=theta)
+
+    if ctx.phase == "decode":
+        kc = _write_cache(state["k"], k, ctx.cur_index)
+        vc = _write_cache(state["v"], v, ctx.cur_index)
+        lengths = ctx.cur_index + 1
+        y = dec_ops.decode_attend(q, kc, vc, lengths, window=window)
+        new_state = {"k": kc, "v": vc}
+    else:
+        y = attn_ops.mha(q, k, v, causal=causal, window=window)
+        if ctx.phase == "prefill":
+            pad = ctx.cache_len - k.shape[1]
+            padded = lambda t: jnp.pad(
+                t, ((0, 0), (0, pad), (0, 0), (0, 0))).astype(jnp.bfloat16)
+            new_state = {"k": padded(k), "v": padded(v)}
+        else:
+            new_state = None
+
+    out = jnp.einsum("bshk,hkd->bsd", y.astype(cd), p["wo"].astype(cd))
+    out = ctx.constrain(out, ("act_batch", "act_seq", None))
+    return out, new_state

@@ -1,0 +1,35 @@
+"""Gated feed-forward sublayer (SwiGLU / GeGLU)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import init_utils as iu
+from repro.models.context import Ctx
+
+
+def _act(name: str):
+    if name == "silu":
+        return jax.nn.silu
+    if name == "gelu":
+        return lambda x: jax.nn.gelu(x, approximate=True)
+    raise ValueError(f"unknown activation {name!r}")
+
+
+def init(key, d_model: int, d_ff: int):
+    ks = jax.random.split(key, 3)
+    return iu.split_tree({
+        "w_gate": iu.dense(ks[0], (d_model, d_ff), ("fsdp", "tp")),
+        "w_in": iu.dense(ks[1], (d_model, d_ff), ("fsdp", "tp")),
+        "w_out": iu.dense(ks[2], (d_ff, d_model), ("tp", "fsdp"),
+                          scale=1.0 / d_ff ** 0.5),
+    })
+
+
+def apply(p, x, ctx: Ctx, *, act: str = "silu"):
+    cd = ctx.cdtype
+    xc = x.astype(cd)
+    h = _act(act)(xc @ p["w_gate"].astype(cd)) * (xc @ p["w_in"].astype(cd))
+    h = ctx.constrain(h, ("act_batch", None, "ffn"))
+    out = h @ p["w_out"].astype(cd)
+    return ctx.constrain(out, ("act_batch", "act_seq", None))

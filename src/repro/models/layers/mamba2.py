@@ -1,0 +1,126 @@
+"""Mamba-2 (SSD) mixer block.
+
+in_proj -> [z | xBC | dt]; causal depthwise conv over xBC; SSD linear
+recurrence via the shared chunked primitive (``kernels/ssd``); gated
+RMSNorm; out_proj.  Decode threads (conv_state, ssd_state) — for the
+hybrid/SSM archs this *is* the per-request slate in the serving layer.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd import ops as ssd_ops
+from repro.models import init_utils as iu
+from repro.models.config import ModelConfig
+from repro.models.context import Ctx
+from repro.models.layers import norms
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    d_conv_ch = d_inner + 2 * s.state_dim  # conv runs over [x|B|C]
+    return s, d_inner, n_heads, d_conv_ch
+
+
+def init(key, cfg: ModelConfig):
+    s, d_inner, H, conv_ch = _dims(cfg)
+    D = cfg.d_model
+    ks = jax.random.split(key, 4)
+    proj_out = d_inner + conv_ch + H  # z | xBC | dt
+    params, specs = iu.split_tree({
+        "in_proj": iu.dense(ks[0], (D, proj_out), ("fsdp", "tp")),
+        "conv_w": iu.dense(ks[1], (s.d_conv, conv_ch), (None, "tp"),
+                           scale=1.0 / s.d_conv ** 0.5),
+        "conv_b": iu.zeros((conv_ch,), ("tp",)),
+        "dt_bias": iu.zeros((H,), ("tp",)),
+        "a_log": iu.ones((H,), ("tp",)),
+        "d_skip": iu.ones((H,), ("tp",)),
+        "out_proj": iu.dense(ks[2], (d_inner, D), ("tp", "fsdp"),
+                             scale=1.0 / d_inner ** 0.5),
+    })
+    np_, ns = norms.init(ks[3], d_inner)
+    params["norm"], specs["norm"] = np_, ns
+    return params, specs
+
+
+def state_spec(cfg: ModelConfig, batch: int, cache_len: int):
+    s, d_inner, H, conv_ch = _dims(cfg)
+    del cache_len  # SSM state is O(1) in sequence length
+    return {
+        "conv": ((batch, s.d_conv - 1, conv_ch), jnp.float32,
+                 ("act_batch", None, "tp")),
+        "ssd": ((batch, H, s.state_dim, s.head_dim), jnp.float32,
+                ("act_batch", "heads", None, None)),
+    }
+
+
+def _conv_full(xbc, w, b):
+    """Causal depthwise conv, width W, via shifted adds. xbc: [B,S,C]."""
+    W = w.shape[0]
+    out = xbc * w[W - 1]
+    for i in range(1, W):
+        shifted = jnp.pad(xbc, ((0, 0), (i, 0), (0, 0)))[:, :-i]
+        out = out + shifted * w[W - 1 - i]
+    return jax.nn.silu(out + b)
+
+
+def _split(cfg, zxd, d_inner, conv_ch):
+    z = zxd[..., :d_inner]
+    xbc = zxd[..., d_inner:d_inner + conv_ch]
+    dt_raw = zxd[..., d_inner + conv_ch:]
+    return z, xbc, dt_raw
+
+
+def apply(p, x, state, ctx: Ctx, *, cfg: ModelConfig):
+    s, d_inner, H, conv_ch = _dims(cfg)
+    cd = ctx.cdtype
+    B, S, _ = x.shape
+    N, P = s.state_dim, s.head_dim
+
+    zxd = jnp.einsum("bsd,de->bse", x.astype(cd), p["in_proj"].astype(cd))
+    z, xbc, dt_raw = _split(cfg, zxd, d_inner, conv_ch)
+    w = p["conv_w"].astype(cd)
+    b = p["conv_b"].astype(cd)
+
+    if ctx.is_decode:
+        # conv over [conv_state | new token]
+        hist = jnp.concatenate([state["conv"].astype(cd), xbc], axis=1)
+        xbc_c = jax.nn.silu(jnp.einsum("bwc,wc->bc", hist, w) + b)[:, None]
+        new_conv = hist[:, 1:]
+    else:
+        xbc_c = _conv_full(xbc, w, b)
+        new_conv = xbc[:, S - (s.d_conv - 1):, :].astype(jnp.float32) \
+            if ctx.phase == "prefill" else None
+
+    xs = xbc_c[..., :d_inner].reshape(B, -1, H, P)
+    Bmat = xbc_c[..., d_inner:d_inner + N]                    # [B,S,N]
+    Cmat = xbc_c[..., d_inner + N:]                           # [B,S,N]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))  # [B,S,H]
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))              # [H] < 0
+    log_a = dt * a                                            # [B,S,H]
+
+    q = jnp.broadcast_to(Cmat[:, :, None, :], (B, Cmat.shape[1], H, N))
+    k = jnp.broadcast_to(Bmat[:, :, None, :], (B, Bmat.shape[1], H, N))
+    v = xs * dt[..., None].astype(cd)
+
+    if ctx.is_decode:
+        ssd_state, y = ssd_ops.ssd_step(
+            state["ssd"], q[:, 0], k[:, 0], v[:, 0], log_a[:, 0])
+        y = y[:, None]
+        new_state = {"conv": new_conv, "ssd": ssd_state}
+    else:
+        init_state = None
+        y, final = ssd_ops.ssd(q, k, v, log_a, chunk=s.chunk,
+                               initial_state=init_state)
+        new_state = ({"conv": new_conv, "ssd": final}
+                     if ctx.phase == "prefill" else None)
+
+    y = y + p["d_skip"].astype(cd)[None, None, :, None] * xs
+    y = y.reshape(B, -1, d_inner)
+    y = norms.apply(p["norm"], y * jax.nn.silu(z), eps=cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y.astype(cd), p["out_proj"].astype(cd))
+    return ctx.constrain(out, ("act_batch", "act_seq", None)), new_state

@@ -1,0 +1,124 @@
+"""Multi-head Latent Attention (DeepSeek-V2) sublayer.
+
+Caches the *compressed* latent ``c_kv`` (+ the shared rope key), which is
+the paper-faithful MLA memory win: cache bytes per token are
+``kv_lora_rank + rope_head_dim`` instead of ``2 * H * Dh``.
+
+Prefill/train decompress to per-head K/V and call the flash path ("naive"
+MLA).  Decode decompresses from the latent cache on the fly; the absorbed
+formulation (folding W_uk into the query) is a recorded perf-iteration
+candidate in EXPERIMENTS.md section Perf.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.attention import ops as attn_ops
+from repro.kernels.decode_attention import ops as dec_ops
+from repro.models import init_utils as iu
+from repro.models.config import ModelConfig
+from repro.models.context import Ctx
+from repro.models.layers import norms, rope as rope_mod
+
+
+def init(key, cfg: ModelConfig):
+    m = cfg.mla
+    D, H = cfg.d_model, cfg.n_heads
+    ks = jax.random.split(key, 6)
+    q_in = m.q_lora_rank or D
+    pairs = {
+        "w_dkv": iu.dense(ks[0], (D, m.kv_lora_rank + m.rope_head_dim),
+                          ("fsdp", None)),
+        "w_uk": iu.dense(ks[1], (m.kv_lora_rank, H, m.nope_head_dim),
+                         (None, "tp", None)),
+        "w_uv": iu.dense(ks[2], (m.kv_lora_rank, H, m.v_head_dim),
+                         (None, "tp", None)),
+        "wq": iu.dense(ks[3], (q_in, H, m.nope_head_dim + m.rope_head_dim),
+                       ("fsdp", "tp", None)),
+        "wo": iu.dense(ks[4], (H, m.v_head_dim, D), ("tp", None, "fsdp"),
+                       scale=1.0 / (H * m.v_head_dim) ** 0.5),
+    }
+    if m.q_lora_rank:
+        pairs["w_dq"] = iu.dense(ks[5], (D, m.q_lora_rank), ("fsdp", None))
+    params, specs = iu.split_tree(pairs)
+    np_, ns = norms.init(key, m.kv_lora_rank)
+    params["kv_norm"], specs["kv_norm"] = np_, ns
+    return params, specs
+
+
+def state_spec(cfg: ModelConfig, batch: int, cache_len: int):
+    m = cfg.mla
+    return {
+        "c_kv": ((batch, cache_len, m.kv_lora_rank), jnp.bfloat16,
+                 ("act_batch", "kv_seq", None)),
+        "k_rope": ((batch, cache_len, m.rope_head_dim), jnp.bfloat16,
+                   ("act_batch", "kv_seq", None)),
+    }
+
+
+def _latent(p, x, ctx, cd):
+    m_cfg = p["w_dkv"].shape
+    del m_cfg
+    dkv = jnp.einsum("bsd,dr->bsr", x.astype(cd), p["w_dkv"].astype(cd))
+    lora = p["w_uk"].shape[0]
+    c_kv, k_rope = dkv[..., :lora], dkv[..., lora:]
+    c_kv = norms.apply(p["kv_norm"], c_kv)
+    k_rope = rope_mod.apply_rope(k_rope, ctx.positions)  # [B,S,rope_dim]
+    return c_kv, k_rope
+
+
+def _queries(p, x, ctx, cd, rope_dim):
+    q_in = x.astype(cd)
+    if "w_dq" in p:
+        q_in = jnp.einsum("bsd,dr->bsr", q_in, p["w_dq"].astype(cd))
+    q = jnp.einsum("bsr,rhk->bshk", q_in, p["wq"].astype(cd))
+    q_nope, q_rope = q[..., :-rope_dim], q[..., -rope_dim:]
+    q_rope = rope_mod.apply_rope(q_rope, ctx.positions)
+    return jnp.concatenate([q_nope, q_rope], axis=-1)
+
+
+def _decompress(p, c_kv, k_rope, cd):
+    """latents -> per-head K (nope||rope) and V."""
+    k_nope = jnp.einsum("bsr,rhk->bshk", c_kv.astype(cd), p["w_uk"].astype(cd))
+    v = jnp.einsum("bsr,rhk->bshk", c_kv.astype(cd), p["w_uv"].astype(cd))
+    H = k_nope.shape[2]
+    k_rope_h = jnp.broadcast_to(k_rope[:, :, None, :].astype(cd),
+                                k_nope.shape[:3] + (k_rope.shape[-1],))
+    k = jnp.concatenate([k_nope, k_rope_h], axis=-1)
+    return k, v
+
+
+def apply(p, x, state, ctx: Ctx, *, cfg: ModelConfig):
+    m = cfg.mla
+    cd = ctx.cdtype
+    B = x.shape[0]
+    q = _queries(p, x, ctx, cd, m.rope_head_dim)
+
+    if ctx.phase == "decode":
+        c_new, kr_new = _latent(p, x, ctx, cd)
+        b = jnp.arange(B)
+        c_cache = state["c_kv"].at[b, ctx.cur_index].set(
+            c_new[:, 0].astype(state["c_kv"].dtype))
+        kr_cache = state["k_rope"].at[b, ctx.cur_index].set(
+            kr_new[:, 0].astype(state["k_rope"].dtype))
+        k, v = _decompress(p, c_cache, kr_cache, cd)
+        y = dec_ops.decode_attend(q, k, v, ctx.cur_index + 1)
+        new_state = {"c_kv": c_cache, "k_rope": kr_cache}
+    else:
+        c_kv, k_rope = _latent(p, x, ctx, cd)
+        k, v = _decompress(p, c_kv, k_rope, cd)
+        y = attn_ops.mha(q, k, v, causal=True)
+        if ctx.phase == "prefill":
+            pad = ctx.cache_len - c_kv.shape[1]
+            new_state = {
+                "c_kv": jnp.pad(c_kv, ((0, 0), (0, pad), (0, 0))
+                                ).astype(jnp.bfloat16),
+                "k_rope": jnp.pad(k_rope, ((0, 0), (0, pad), (0, 0))
+                                  ).astype(jnp.bfloat16),
+            }
+        else:
+            new_state = None
+
+    out = jnp.einsum("bshk,hkd->bsd", y.astype(cd), p["wo"].astype(cd))
+    return ctx.constrain(out, ("act_batch", "act_seq", None)), new_state

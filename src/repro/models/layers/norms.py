@@ -1,0 +1,24 @@
+"""RMSNorm (optionally Gemma-style ``(1 + w)`` scaling)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import init_utils as iu
+
+
+def init(key, d: int, *, scale_offset: bool = False):
+    del key
+    if scale_offset:  # gemma stores w and applies (1 + w)
+        return iu.split_tree({"scale": iu.zeros((d,), (None,))})
+    return iu.split_tree({"scale": iu.ones((d,), (None,))})
+
+
+def apply(params, x, *, eps: float = 1e-6, scale_offset: bool = False):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    xf = xf * jax.lax.rsqrt(var + eps)
+    w = params["scale"].astype(jnp.float32)
+    w = (1.0 + w) if scale_offset else w
+    return (xf * w).astype(dt)

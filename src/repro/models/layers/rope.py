@@ -1,0 +1,27 @@
+"""Rotary position embeddings (RoPE), interleaved-pair convention."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def _freqs(head_dim: int, theta: float):
+    half = head_dim // 2
+    exponent = jnp.arange(half, dtype=jnp.float32) / half
+    return 1.0 / (theta ** exponent)  # [half]
+
+
+def apply_rope(x, positions, *, theta: float = 10_000.0):
+    """x: [..., S, H, Dh] (or [..., S, Dh]); positions: broadcastable [..., S].
+
+    Uses the split-halves (rotate_half) convention shared by Llama/Qwen/
+    Gemma HF implementations.
+    """
+    head_dim = x.shape[-1]
+    inv = _freqs(head_dim, theta)                       # [half]
+    ang = positions[..., None].astype(jnp.float32) * inv  # [..., S, half]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    if x.ndim == ang.ndim + 1:                          # heads axis present
+        cos, sin = cos[..., None, :], sin[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)

@@ -1,0 +1,217 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunked-parallel) and sLSTM
+(scalar memory, strictly recurrent).
+
+mLSTM uses the shared SSD primitive: state C_t = f_t C + i_t k v^T with a
+normalizer row folded in as an extra value channel (sigmoid input gate —
+the non-stabilized variant used by xLSTM-7B).  sLSTM keeps the exponential
+gating + (c, n, m) stabilizer of the paper and runs as a lax.scan over
+time (hidden-to-hidden recurrence is not associative).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd import ops as ssd_ops
+from repro.models import init_utils as iu
+from repro.models.config import ModelConfig
+from repro.models.context import Ctx
+from repro.models.layers import norms
+
+# --------------------------------------------------------------------------
+# mLSTM
+# --------------------------------------------------------------------------
+
+
+def _mdims(cfg: ModelConfig):
+    x = cfg.xlstm
+    d_inner = x.mlstm_expand * cfg.d_model
+    H = cfg.n_heads
+    N = d_inner // H
+    return x, d_inner, H, N
+
+
+def mlstm_init(key, cfg: ModelConfig):
+    x, d_inner, H, N = _mdims(cfg)
+    D = cfg.d_model
+    ks = jax.random.split(key, 8)
+    params, specs = iu.split_tree({
+        "w_up": iu.dense(ks[0], (D, 2 * d_inner), ("fsdp", "tp")),
+        "conv_w": iu.dense(ks[1], (x.conv_width, d_inner), (None, "tp"),
+                           scale=1.0 / x.conv_width ** 0.5),
+        "conv_b": iu.zeros((d_inner,), ("tp",)),
+        "w_q": iu.dense(ks[2], (d_inner, H, N), ("tp", None, None)),
+        "w_k": iu.dense(ks[3], (d_inner, H, N), ("tp", None, None)),
+        "w_v": iu.dense(ks[4], (d_inner, H, N), ("tp", None, None)),
+        "w_gates": iu.dense(ks[5], (d_inner, 2 * H), ("tp", None),
+                            scale=0.02),
+        "gate_bias": iu.ones((2 * H,), (None,)),
+        "w_down": iu.dense(ks[6], (d_inner, D), ("tp", "fsdp"),
+                           scale=1.0 / d_inner ** 0.5),
+    })
+    np_, ns = norms.init(ks[7], d_inner)
+    params["norm"], specs["norm"] = np_, ns
+    return params, specs
+
+
+def mlstm_state_spec(cfg: ModelConfig, batch: int, cache_len: int):
+    x, d_inner, H, N = _mdims(cfg)
+    del cache_len
+    return {
+        "conv": ((batch, x.conv_width - 1, d_inner), jnp.float32,
+                 ("act_batch", None, "tp")),
+        "mem": ((batch, H, N, N + 1), jnp.float32,
+                ("act_batch", "heads", None, None)),
+    }
+
+
+def _conv_causal(xin, w, b):
+    W = w.shape[0]
+    out = xin * w[W - 1]
+    for i in range(1, W):
+        shifted = jnp.pad(xin, ((0, 0), (i, 0), (0, 0)))[:, :-i]
+        out = out + shifted * w[W - 1 - i]
+    return jax.nn.silu(out + b)
+
+
+def mlstm_apply(p, x, state, ctx: Ctx, *, cfg: ModelConfig):
+    xc_cfg, d_inner, H, N = _mdims(cfg)
+    cd = ctx.cdtype
+    B, S, _ = x.shape
+    up = jnp.einsum("bsd,de->bse", x.astype(cd), p["w_up"].astype(cd))
+    xin, z = up[..., :d_inner], up[..., d_inner:]
+    w, b = p["conv_w"].astype(cd), p["conv_b"].astype(cd)
+
+    if ctx.is_decode:
+        hist = jnp.concatenate([state["conv"].astype(cd), xin], axis=1)
+        xcv = jax.nn.silu(jnp.einsum("bwc,wc->bc", hist, w) + b)[:, None]
+        new_conv = hist[:, 1:].astype(jnp.float32)
+    else:
+        xcv = _conv_causal(xin, w, b)
+        new_conv = (xin[:, S - (xc_cfg.conv_width - 1):, :]
+                    .astype(jnp.float32) if ctx.phase == "prefill" else None)
+
+    q = jnp.einsum("bse,ehn->bshn", xcv, p["w_q"].astype(cd))
+    k = jnp.einsum("bse,ehn->bshn", xcv, p["w_k"].astype(cd)) * (N ** -0.5)
+    v = jnp.einsum("bse,ehn->bshn", xin, p["w_v"].astype(cd))
+    gates = jnp.einsum("bse,eh->bsh", xcv,
+                       p["w_gates"].astype(cd)).astype(jnp.float32) \
+        + p["gate_bias"].astype(jnp.float32)
+    i_gate = jax.nn.sigmoid(gates[..., :H])              # [B,S,H]
+    log_f = jax.nn.log_sigmoid(gates[..., H:])           # [B,S,H]
+
+    k_in = k * i_gate[..., None].astype(cd)
+    ones = jnp.ones(v.shape[:-1] + (1,), v.dtype)
+    v_aug = jnp.concatenate([v, ones], axis=-1)          # normalizer channel
+
+    if ctx.is_decode:
+        mem, y_aug = ssd_ops.ssd_step(state["mem"], q[:, 0], k_in[:, 0],
+                                      v_aug[:, 0], log_f[:, 0])
+        y_aug = y_aug[:, None]
+        new_state = {"conv": new_conv, "mem": mem}
+    else:
+        y_aug, final = ssd_ops.ssd(q, k_in, v_aug, log_f, chunk=xc_cfg.chunk)
+        new_state = ({"conv": new_conv, "mem": final}
+                     if ctx.phase == "prefill" else None)
+
+    num = y_aug[..., :N].astype(jnp.float32)
+    den = y_aug[..., N:].astype(jnp.float32)
+    h = num / jnp.maximum(jnp.abs(den), 1.0)
+    h = h.reshape(B, -1, d_inner).astype(cd)
+    h = norms.apply(p["norm"], h, eps=cfg.norm_eps) * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", h.astype(cd), p["w_down"].astype(cd))
+    return ctx.constrain(out, ("act_batch", "act_seq", None)), new_state
+
+
+# --------------------------------------------------------------------------
+# sLSTM
+# --------------------------------------------------------------------------
+
+
+def slstm_init(key, cfg: ModelConfig):
+    x = cfg.xlstm
+    D = cfg.d_model
+    dp = int(D * x.slstm_proj)
+    ks = jax.random.split(key, 5)
+    params, specs = iu.split_tree({
+        "w_x": iu.dense(ks[0], (D, 4 * D), ("fsdp", "tp")),
+        "w_h": iu.dense(ks[1], (D, 4 * D), ("fsdp", "tp")),
+        "bias": iu.zeros((4 * D,), ("tp",)),
+        "w_ff1": iu.dense(ks[2], (D, dp), ("fsdp", "tp")),
+        "w_ff2": iu.dense(ks[3], (dp, D), ("tp", "fsdp"),
+                          scale=1.0 / dp ** 0.5),
+    })
+    np_, ns = norms.init(ks[4], D)
+    params["norm"], specs["norm"] = np_, ns
+    return params, specs
+
+
+def slstm_state_spec(cfg: ModelConfig, batch: int, cache_len: int):
+    D = cfg.d_model
+    del cache_len
+    sp = ("act_batch", None)
+    return {
+        "h": ((batch, D), jnp.float32, sp),
+        "c": ((batch, D), jnp.float32, sp),
+        "n": ((batch, D), jnp.float32, sp),
+        "m": ((batch, D), jnp.float32, sp),
+    }
+
+
+def _slstm_cell_from_gx(w_h, carry, gx_t):
+    """One sLSTM step with exponential gating + stabilizer (paper eq. 19).
+
+    ``gx_t = x_t @ w_x + bias`` is precomputed OUTSIDE the scan (one
+    parallel matmul over the whole sequence): the recurrence only does
+    the h-dependent half, so the per-step HBM traffic is one w_h read
+    instead of (w_x + w_h + a sequence-buffer slice) — the dominant
+    term of the xlstm train cell in EXPERIMENTS.md section Perf.
+    """
+    h, c, n, m = carry
+    g = gx_t.astype(jnp.float32) + (h @ w_h).astype(jnp.float32)
+    i_raw, f_raw, z_raw, o_raw = jnp.split(g, 4, axis=-1)
+    log_f = jax.nn.log_sigmoid(f_raw)
+    m_new = jnp.maximum(log_f + m, i_raw)
+    i_p = jnp.exp(i_raw - m_new)
+    f_p = jnp.exp(log_f + m - m_new)
+    c_new = f_p * c + i_p * jnp.tanh(z_raw)
+    n_new = f_p * n + i_p
+    h_new = jax.nn.sigmoid(o_raw) * c_new / jnp.maximum(n_new, 1e-6)
+    return (h_new.astype(gx_t.dtype), c_new, n_new, m_new)
+
+
+def slstm_apply(p, x, state, ctx: Ctx, *, cfg: ModelConfig):
+    cd = ctx.cdtype
+    B, S, D = x.shape
+    if state is None:
+        zero = jnp.zeros((B, D), jnp.float32)
+        carry = (zero, zero, zero, zero)
+    else:
+        carry = (state["h"], state["c"], state["n"], state["m"])
+
+    xn = norms.apply(p["norm"], x, eps=cfg.norm_eps)
+    # x-side gates: one parallel matmul over the whole sequence
+    gx = jnp.einsum("bsd,de->bse", xn.astype(cd), p["w_x"].astype(cd)) \
+        + p["bias"].astype(cd)
+    w_h = p["w_h"].astype(cd)
+    # carry h in compute dtype so the per-step matmul stays bf16
+    carry = (carry[0].astype(cd),) + carry[1:]
+
+    if ctx.is_decode:
+        carry = _slstm_cell_from_gx(w_h, carry, gx[:, 0])
+        h_seq = carry[0][:, None]
+    else:
+        def body(cr, gx_t):
+            cr = _slstm_cell_from_gx(w_h, cr, gx_t)
+            return cr, cr[0]
+        carry, h_seq = jax.lax.scan(body, carry, gx.swapaxes(0, 1))
+        h_seq = h_seq.swapaxes(0, 1)                      # [B,S,D]
+
+    new_state = ({"h": carry[0].astype(jnp.float32), "c": carry[1],
+                  "n": carry[2], "m": carry[3]}
+                 if ctx.phase in ("prefill", "decode") else None)
+
+    h_seq = h_seq.astype(cd)
+    ff = jax.nn.gelu(h_seq @ p["w_ff1"].astype(cd), approximate=True)
+    out = ff @ p["w_ff2"].astype(cd)
+    return ctx.constrain(out, ("act_batch", "act_seq", None)), new_state

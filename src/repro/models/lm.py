@@ -1,0 +1,245 @@
+"""Model-level API: init / forward / loss / prefill / decode for every
+assigned architecture.
+
+``Model`` wraps the per-arch StackPlan(s).  The language-model head uses a
+sequence-chunked cross-entropy (lax.scan + checkpoint) so the [B,S,V]
+logits tensor is never resident — at qwen1.5-110b train_4k the full-logit
+tensor would be ~640 GB in f32.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import init_utils as iu
+from repro.models import transformer
+from repro.models.config import ModelConfig, ShapeConfig
+from repro.models.context import Ctx
+from repro.models.layers import norms
+from repro.models.stack import (StackPlan, apply_stack, init_stack,
+                                init_states, specs_of)
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    plan: StackPlan
+    enc_plan: Optional[StackPlan] = None
+
+
+def build(cfg: ModelConfig) -> Model:
+    return Model(cfg=cfg, plan=transformer.build_plan(cfg),
+                 enc_plan=transformer.build_encoder_plan(cfg))
+
+
+# --------------------------------------------------------------------------
+# params
+# --------------------------------------------------------------------------
+
+def init(model: Model, key) -> tuple:
+    cfg = model.cfg
+    ks = jax.random.split(key, 6)
+    embed, embed_spec = iu.dense(ks[0], (cfg.vocab_size, cfg.d_model),
+                                 ("tp", "fsdp"), scale=0.02)
+    body, body_specs = init_stack(ks[1], model.plan)
+    fn, fns = norms.init(ks[2], cfg.d_model,
+                         scale_offset=cfg.norm_scale_offset)
+    params = {"embed": embed, "body": body, "final_norm": fn}
+    specs = {"embed": embed_spec, "body": body_specs, "final_norm": fns}
+    if not cfg.tie_embeddings:
+        params["head"], specs["head"] = iu.dense(
+            ks[3], (cfg.d_model, cfg.vocab_size), ("fsdp", "tp"), scale=0.02)
+    if model.enc_plan is not None:
+        params["enc_body"], specs["enc_body"] = init_stack(
+            ks[4], model.enc_plan)
+        en, ens = norms.init(ks[5], cfg.d_model)
+        params["enc_norm"], specs["enc_norm"] = en, ens
+    return params, specs
+
+
+def param_specs(model: Model, key=None):
+    """Specs without materializing params (dry run)."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    box = {}
+
+    def f(k):
+        p, s = init(model, k)
+        box["s"] = s
+        return p
+
+    shapes = jax.eval_shape(f, key)
+    return shapes, box["s"]
+
+
+# --------------------------------------------------------------------------
+# forward
+# --------------------------------------------------------------------------
+
+def _embed(model: Model, params, tokens, ctx: Ctx):
+    cfg = model.cfg
+    x = jnp.take(params["embed"], tokens, axis=0).astype(ctx.cdtype)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, ctx.cdtype)
+    return ctx.constrain(x, ("act_batch", "act_seq", None))
+
+
+def encode(model: Model, params, enc_frames, ctx: Ctx):
+    """Whisper encoder over precomputed (stub) frame embeddings."""
+    x = enc_frames.astype(ctx.cdtype)
+    ectx = ctx.replace(phase="train",
+                       positions=_positions(enc_frames.shape[:2]))
+    x, _, _ = apply_stack(params["enc_body"], model.enc_plan, x, None, ectx,
+                          remat=(ctx.phase == "train"))
+    return norms.apply(params["enc_norm"], x, eps=model.cfg.norm_eps)
+
+
+def _positions(bs):
+    b, s = bs
+    return jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+
+def forward(model: Model, params, tokens, ctx: Ctx, states=None,
+            *, remat: bool = True):
+    """tokens [B,S] -> (hidden [B,S,D], new_states, aux)."""
+    x = _embed(model, params, tokens, ctx)
+    x, new_states, aux = apply_stack(params["body"], model.plan, x, states,
+                                     ctx, remat=remat)
+    x = norms.apply(params["final_norm"], x, eps=model.cfg.norm_eps,
+                    scale_offset=model.cfg.norm_scale_offset)
+    return x, new_states, aux
+
+
+def _unembed_matrix(model: Model, params):
+    if model.cfg.tie_embeddings:
+        return params["embed"].T  # [D, V]
+    return params["head"]
+
+
+def logits_for(model: Model, params, hidden, ctx: Ctx):
+    w = _unembed_matrix(model, params).astype(ctx.cdtype)
+    logits = jnp.einsum("bsd,dv->bsv", hidden.astype(ctx.cdtype), w)
+    return ctx.constrain(logits, ("act_batch", None, "tp"))
+
+
+# --------------------------------------------------------------------------
+# loss (chunked cross-entropy)
+# --------------------------------------------------------------------------
+
+def lm_loss(model: Model, params, hidden, labels, ctx: Ctx,
+            *, chunk: int = 512):
+    """Mean next-token NLL.  hidden [B,S,D], labels [B,S] (already shifted;
+    label -100 = masked)."""
+    B, S, D = hidden.shape
+    w = _unembed_matrix(model, params).astype(ctx.cdtype)
+    pad = (-S) % chunk
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)),
+                         constant_values=-100)
+    nc = (S + pad) // chunk
+    h_blocks = hidden.reshape(B, nc, chunk, D).swapaxes(0, 1)
+    y_blocks = labels.reshape(B, nc, chunk).swapaxes(0, 1)
+
+    def body(carry, xs):
+        h, y = xs
+        lg = jnp.einsum("bsd,dv->bsv", h.astype(ctx.cdtype), w)
+        lg = ctx.constrain(lg, ("act_batch", None, "tp"))
+        lg = lg.astype(jnp.float32)
+        lz = jax.nn.logsumexp(lg, axis=-1)
+        gold = jnp.take_along_axis(
+            lg, jnp.maximum(y, 0)[..., None], axis=-1)[..., 0]
+        mask = (y >= 0).astype(jnp.float32)
+        nll = (lz - gold) * mask
+        loss_sum, n_tok = carry
+        return (loss_sum + nll.sum(), n_tok + mask.sum()), None
+
+    (loss_sum, n_tok), _ = jax.lax.scan(
+        jax.checkpoint(body), (jnp.zeros((), jnp.float32),
+                               jnp.zeros((), jnp.float32)),
+        (h_blocks, y_blocks))
+    return loss_sum / jnp.maximum(n_tok, 1.0)
+
+
+# --------------------------------------------------------------------------
+# phase entry points
+# --------------------------------------------------------------------------
+
+def train_loss(model: Model, params, batch: Dict[str, Any], ctx: Ctx):
+    """batch: tokens/labels (+ enc_frames / image_embeds)."""
+    tokens = batch["tokens"]
+    ctx = ctx.replace(phase="train", positions=_positions(tokens.shape))
+    if model.enc_plan is not None:
+        memory = encode(model, params, batch["enc_frames"], ctx)
+        ctx = ctx.replace(enc_memory=memory)
+    if model.cfg.cross_attn_every:
+        ctx = ctx.replace(image_embeds=batch["image_embeds"]
+                          .astype(ctx.cdtype))
+    hidden, _, aux = forward(model, params, tokens, ctx, remat=True)
+    return lm_loss(model, params, hidden, batch["labels"], ctx) + aux
+
+
+def prefill(model: Model, params, batch: Dict[str, Any], ctx: Ctx,
+            cache_len: int, *, full_logits: bool = False):
+    tokens = batch["tokens"]
+    ctx = ctx.replace(phase="prefill", positions=_positions(tokens.shape),
+                      cache_len=cache_len)
+    if model.enc_plan is not None:
+        memory = encode(model, params, batch["enc_frames"], ctx)
+        ctx = ctx.replace(enc_memory=memory)
+    if model.cfg.cross_attn_every:
+        ctx = ctx.replace(image_embeds=batch["image_embeds"]
+                          .astype(ctx.cdtype))
+    hidden, states, _ = forward(model, params, tokens, ctx, remat=False)
+    sel = hidden if full_logits else hidden[:, -1:]
+    return logits_for(model, params, sel, ctx), states
+
+
+def decode_step(model: Model, params, token, states, cur_index, ctx: Ctx):
+    """token [B,1]; cur_index [B] (write position).  Returns (logits
+    [B,1,V], new_states)."""
+    ctx = ctx.replace(phase="decode", positions=cur_index[:, None],
+                      cur_index=cur_index,
+                      cache_len=_states_cache_len(states))
+    hidden, new_states, _ = forward(model, params, token, ctx, states,
+                                    remat=False)
+    return logits_for(model, params, hidden, ctx), new_states
+
+
+def _states_cache_len(states) -> int:
+    leaves = jax.tree.leaves(states)
+    for lf in leaves:
+        if lf.ndim >= 3:
+            return int(lf.shape[2])
+    return 0
+
+
+def decode_states(model: Model, batch: int, cache_len: int, make_leaf):
+    return init_states(model.plan, batch, cache_len, make_leaf)
+
+
+# --------------------------------------------------------------------------
+# abstract inputs per (arch x shape) — used by smoke tests and the dry run
+# --------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Abstract (shape, dtype) descriptions of every model input for the
+    cell; values are jax.ShapeDtypeStruct (no allocation)."""
+    B, S = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    if shape.phase in ("train", "prefill"):
+        out = {"tokens": sds((B, S), jnp.int32)}
+        if shape.phase == "train":
+            out["labels"] = sds((B, S), jnp.int32)
+        if cfg.encdec:
+            out["enc_frames"] = sds((B, S, cfg.d_model), jnp.bfloat16)
+        if cfg.cross_attn_every:
+            out["image_embeds"] = sds((B, cfg.n_image_tokens, cfg.d_model),
+                                      jnp.bfloat16)
+        return out
+    # decode: one new token against a cache of S
+    return {"token": sds((B, 1), jnp.int32),
+            "cur_index": sds((B,), jnp.int32)}

@@ -1,0 +1,200 @@
+"""Scan-based layer stacks.
+
+A model body is a list of ``Segment``s; each segment scans a repeating
+``pattern`` of blocks over ``n_groups`` groups (params stacked on a leading
+group axis).  Heterogeneous interleaves (gemma3 5:1 local:global, llama
+vision cross-attn every 5th, zamba2 shared-attn every 6th, xLSTM
+mLSTM/sLSTM alternation) become pattern positions, keeping HLO size
+O(pattern) instead of O(layers) — essential for 80-cell dry-run compiles.
+
+Blocks with ``use_extra=True`` read their params from a shared (unscanned)
+dict — zamba2's shared attention block — while their *state* (KV cache)
+remains per-group.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.context import Ctx
+
+
+@dataclass(frozen=True)
+class BlockDef:
+    name: str
+    init: Callable                      # key -> (params, specs)
+    apply: Callable                     # (params, x, state, ctx) -> (x, state, aux)
+    state_spec: Optional[Callable] = None  # (batch, cache_len) -> pytree of (shape, dtype, spec)
+    use_extra: bool = False             # params live in the shared dict
+
+
+@dataclass(frozen=True)
+class Segment:
+    pattern: Sequence[BlockDef]
+    n_groups: int
+
+
+@dataclass(frozen=True)
+class StackPlan:
+    segments: Sequence[Segment]
+    extra_blocks: Sequence[BlockDef] = field(default_factory=tuple)
+
+    @property
+    def n_layers(self) -> int:
+        return sum(len(s.pattern) * s.n_groups for s in self.segments)
+
+
+def specs_of(init_fn: Callable, key):
+    """Trace ``init_fn`` abstractly; return (shape-pytree, static specs)."""
+    box = {}
+
+    def f(k):
+        p, s = init_fn(k)
+        box["s"] = s
+        return p
+
+    shapes = jax.eval_shape(f, key)
+    return shapes, box["s"]
+
+
+def _prepend_none(spec_tree):
+    return jax.tree.map(lambda s: (None,) + tuple(s), spec_tree,
+                        is_leaf=lambda s: isinstance(s, tuple))
+
+
+def init_stack(key, plan: StackPlan):
+    """Returns (params, specs).  params['segments'][i][j] has leaves with a
+    leading n_groups axis; params['extra'][name] is unstacked."""
+    params = {"segments": [], "extra": {}}
+    specs = {"segments": [], "extra": {}}
+    for si, seg in enumerate(plan.segments):
+        seg_params, seg_specs = [], []
+        for j, blk in enumerate(seg.pattern):
+            if blk.use_extra:
+                seg_params.append(None)
+                seg_specs.append(None)
+                continue
+            kseg = jax.random.fold_in(key, si * 131 + j)
+            _, sp = specs_of(blk.init, kseg)
+            keys = jax.random.split(kseg, seg.n_groups)
+            stacked = jax.vmap(lambda k, b=blk: b.init(k)[0])(keys)
+            seg_params.append(stacked)
+            seg_specs.append(_prepend_none(sp))
+        params["segments"].append(seg_params)
+        specs["segments"].append(seg_specs)
+    for bi, blk in enumerate(plan.extra_blocks):
+        kextra = jax.random.fold_in(key, 10_000 + bi)
+        p, sp = blk.init(kextra)
+        params["extra"][blk.name] = p
+        specs["extra"][blk.name] = sp
+    return params, specs
+
+
+def init_states(plan: StackPlan, batch: int, cache_len: int,
+                make_leaf: Callable):
+    """Build the decode-state pytree.  ``make_leaf(shape, dtype, spec)``
+    returns either concrete zeros or ShapeDtypeStructs (dry run)."""
+    out = []
+    for seg in plan.segments:
+        seg_states = []
+        for blk in seg.pattern:
+            if blk.state_spec is None:
+                seg_states.append(None)
+                continue
+            spec = blk.state_spec(batch, cache_len)
+            leaf = jax.tree.map(
+                lambda s: make_leaf(((seg.n_groups,) + tuple(s[0])), s[1],
+                                    (None,) + tuple(s[2])),
+                spec, is_leaf=lambda s: isinstance(s, tuple) and len(s) == 3
+                and isinstance(s[0], tuple))
+            seg_states.append(leaf)
+        out.append(tuple(seg_states))
+    return out
+
+
+def apply_stack(params, plan: StackPlan, x, states, ctx: Ctx, *,
+                remat: bool = True, remat_policy=None):
+    """Returns (x, new_states, aux_sum).
+
+    Decode threads the (large, mostly-unchanged) KV/SSM states through
+    the scan CARRY with per-group dynamic-slice / dynamic-update-slice:
+    while-loop carries alias in place, so each step writes only the new
+    token's window instead of re-emitting the full per-layer cache as a
+    scan ``ys`` (measured 2x full-cache write traffic on the gemma-7b
+    decode cell — EXPERIMENTS.md section Perf).
+    """
+    if states is not None and ctx.is_decode:
+        return _apply_stack_carry(params, plan, x, states, ctx)
+
+    extra = params["extra"]
+    aux_total = jnp.zeros((), jnp.float32)
+    new_states_all = []
+    for si, seg in enumerate(plan.segments):
+        seg_params = params["segments"][si]
+        seg_states = states[si] if states is not None else \
+            tuple(None for _ in seg.pattern)
+
+        def body(carry, xs, _seg=seg, _extra=extra):
+            xc, aux = carry
+            p_list, s_list = xs
+            new_s = []
+            for j, blk in enumerate(_seg.pattern):
+                pj = _extra[blk.name] if blk.use_extra else p_list[j]
+                xc, st, a = blk.apply(pj, xc, s_list[j], ctx)
+                new_s.append(st)
+                aux = aux + a
+            return (xc, aux), tuple(new_s)
+
+        if remat:
+            body = jax.checkpoint(
+                body, policy=remat_policy
+                or jax.checkpoint_policies.nothing_saveable)
+        (x, aux_total), new_seg_states = jax.lax.scan(
+            body, (x, aux_total), (tuple(seg_params), seg_states))
+        new_states_all.append(new_seg_states)
+    return x, new_states_all, aux_total
+
+
+def _index_tree(tree, i):
+    return jax.tree.map(
+        lambda a: jax.lax.dynamic_index_in_dim(a, i, 0, keepdims=False),
+        tree)
+
+
+def _update_tree(tree, new, i):
+    return jax.tree.map(
+        lambda a, n: jax.lax.dynamic_update_index_in_dim(
+            a, n.astype(a.dtype), i, 0), tree, new)
+
+
+def _apply_stack_carry(params, plan: StackPlan, x, states, ctx: Ctx):
+    extra = params["extra"]
+    aux_total = jnp.zeros((), jnp.float32)
+    new_states_all = []
+    for si, seg in enumerate(plan.segments):
+        seg_params = params["segments"][si]
+        seg_states = states[si]
+
+        def body(carry, xs, _seg=seg, _extra=extra):
+            xc, aux, st_stacked = carry
+            p_list, i = xs
+            new_stacked = []
+            for j, blk in enumerate(_seg.pattern):
+                pj = _extra[blk.name] if blk.use_extra else p_list[j]
+                sj = _index_tree(st_stacked[j], i) \
+                    if st_stacked[j] is not None else None
+                xc, st, a = blk.apply(pj, xc, sj, ctx)
+                new_stacked.append(
+                    _update_tree(st_stacked[j], st, i)
+                    if st is not None else st_stacked[j])
+                aux = aux + a
+            return (xc, aux, tuple(new_stacked)), None
+
+        (x, aux_total, seg_states), _ = jax.lax.scan(
+            body, (x, aux_total, seg_states),
+            (tuple(seg_params), jnp.arange(seg.n_groups, dtype=jnp.int32)))
+        new_states_all.append(seg_states)
+    return x, new_states_all, aux_total

@@ -1,0 +1,132 @@
+"""Slate cache <-> KV store synchronization.
+
+Implements the paper's flush knob ("immediate write-through" ...
+"only when evicted from cache"), background-thread flushing (the Muppet
+2.0 background-I/O thread, so the update hot loop never blocks on the
+store), and read-through restore after a crash.
+"""
+from __future__ import annotations
+
+import enum
+import queue as pyqueue
+import threading
+from dataclasses import dataclass
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.slates import table as tbl
+from repro.slates.kvstore import KVStore
+
+
+class FlushPolicy(enum.Enum):
+    IMMEDIATE = "immediate"    # write-through every tick
+    EVERY_K = "every_k"        # every k ticks
+    ON_EVICT = "on_evict"      # only under table pressure / TTL expiry
+
+
+@dataclass
+class FlushConfig:
+    policy: FlushPolicy = FlushPolicy.EVERY_K
+    every_k: int = 16
+    occupancy_evict: float = 0.85   # ON_EVICT pressure threshold
+
+
+def dirty_snapshot(table: tbl.SlateTable):
+    """Host copies of (keys, ts, slates) for dirty slots, and the cleared
+    table.  The device->host fetch is the only sync point; serialization
+    and disk I/O run on the flusher thread."""
+    dirty = np.asarray(jax.device_get(table.dirty))
+    keys = np.asarray(jax.device_get(table.keys))
+    ts = np.asarray(jax.device_get(table.ts))
+    idx = np.nonzero(dirty & (keys != -1))[0]
+    vals = jax.tree.map(lambda v: np.asarray(jax.device_get(v))[idx],
+                        table.vals)
+    cleared = tbl.SlateTable(
+        keys=table.keys, ts=table.ts,
+        dirty=jnp.zeros_like(table.dirty),
+        vals=table.vals, dropped=table.dropped)
+    return keys[idx], ts[idx], vals, cleared
+
+
+def restore_into(table: tbl.SlateTable, keys: np.ndarray, slates,
+                 ts: np.ndarray) -> tbl.SlateTable:
+    """Re-insert flushed slates after a crash (read-through warm-up)."""
+    if len(keys) == 0:
+        return table
+    k = jnp.asarray(keys, jnp.int32)
+    valid = jnp.ones((len(keys),), bool)
+    table, slot, found, placed = tbl.insert_or_find(table, k, valid)
+    vals = jax.tree.map(jnp.asarray, slates)
+    table = tbl.write_slates(table, slot, placed, vals,
+                             jnp.asarray(ts, jnp.int32).max())
+    # restored slates are clean (they came *from* the store)
+    return tbl.SlateTable(keys=table.keys, ts=table.ts,
+                          dirty=jnp.zeros_like(table.dirty),
+                          vals=table.vals, dropped=table.dropped)
+
+
+class Flusher:
+    """Background flusher thread: consumes dirty snapshots, writes to the
+    KV store.  ``flush_tables`` is called from the engine driver per the
+    policy; ``drain`` joins outstanding work (tests / shutdown)."""
+
+    def __init__(self, store: KVStore, cfg: Optional[FlushConfig] = None):
+        self.store = store
+        self.cfg = cfg or FlushConfig()
+        self._q: pyqueue.Queue = pyqueue.Queue()
+        self._thread = threading.Thread(target=self._loop, daemon=True)
+        self._thread.start()
+        self.errors: list = []
+
+    def _loop(self):
+        while True:
+            item = self._q.get()
+            if item is None:
+                self._q.task_done()
+                return
+            try:
+                updater, keys, ts, vals, tick, ttl = item
+                rows = _rows_of(vals, len(keys))
+                self.store.put_many(updater,
+                                    zip(keys.tolist(), rows),
+                                    ts=tick, ttl=ttl)
+                self.store.flush()
+            except Exception as e:  # pragma: no cover
+                self.errors.append(e)
+            finally:
+                self._q.task_done()
+
+    def should_flush(self, tick: int, table: tbl.SlateTable) -> bool:
+        p = self.cfg.policy
+        if p is FlushPolicy.IMMEDIATE:
+            return True
+        if p is FlushPolicy.EVERY_K:
+            return tick % self.cfg.every_k == 0
+        occ = float(jax.device_get(table.occupancy()))
+        return occ >= self.cfg.occupancy_evict * table.capacity
+
+    def flush_table(self, updater: str, table: tbl.SlateTable, tick: int,
+                    ttl: int = 0) -> tbl.SlateTable:
+        keys, ts, vals, cleared = dirty_snapshot(table)
+        if len(keys):
+            self._q.put((updater, keys, ts, vals, int(tick), ttl))
+        return cleared
+
+    def drain(self):
+        self._q.join()
+        self.store.flush()
+
+    def close(self):
+        self.drain()
+        self._q.put(None)
+        self._thread.join(timeout=5)
+
+
+def _rows_of(vals, n: int):
+    """Split a pytree of [n, ...] arrays into n per-key pytrees."""
+    leaves, treedef = jax.tree.flatten(vals)
+    return [jax.tree.unflatten(treedef, [lf[i] for lf in leaves])
+            for i in range(n)]

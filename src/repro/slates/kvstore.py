@@ -1,0 +1,253 @@
+"""Persistent slate store — the role Cassandra plays in paper section 4.2.
+
+Slates are serialized (msgpack) and zstd-compressed ("our applications
+often use JSON ... so Muppet compresses each slate before storing it").
+The store simulates a replicated cluster: N replica directories, write
+quorum W and read quorum R (the paper's ONE / QUORUM / ALL knob), per-write
+TTL with garbage collection, and bucketed segment files whose rewrite
+stands in for compaction.  Buffered writes flush in the background — the
+paper's "devote the store's memory to buffering writes" on SSDs.
+"""
+from __future__ import annotations
+
+import io
+import os
+import struct
+import threading
+import time
+from dataclasses import dataclass
+from typing import Any, Dict, Iterable, List, Optional, Tuple
+
+import msgpack
+import numpy as np
+import zstandard as zstd
+
+
+def _pack_tree(tree) -> bytes:
+    """Serialize a pytree of numpy arrays / scalars."""
+    def enc(x):
+        a = np.asarray(x)
+        return {b"__nd__": True, b"d": a.tobytes(), b"t": a.dtype.str,
+                b"s": list(a.shape)}
+    flat = _flatten(tree)
+    payload = [(k, enc(v)) for k, v in flat]
+    return msgpack.packb(payload)
+
+
+def _unpack_tree(raw: bytes):
+    payload = msgpack.unpackb(raw, strict_map_key=False)
+    flat = []
+    for k, e in payload:
+        a = np.frombuffer(e[b"d"], dtype=np.dtype(e[b"t"])).reshape(e[b"s"])
+        flat.append((k if isinstance(k, str) else k.decode(), a))
+    return _unflatten(flat)
+
+
+def _flatten(tree, prefix="") -> List[Tuple[str, Any]]:
+    if isinstance(tree, dict):
+        out = []
+        for k in sorted(tree):
+            out.extend(_flatten(tree[k], f"{prefix}{k}/"))
+        return out
+    return [(prefix.rstrip("/"), tree)]
+
+
+def _unflatten(flat):
+    out: Dict[str, Any] = {}
+    for k, v in flat:
+        parts = k.split("/")
+        cur = out
+        for p in parts[:-1]:
+            cur = cur.setdefault(p, {})
+        cur[parts[-1]] = v
+    if list(out.keys()) == [""]:
+        return out[""]
+    return out
+
+
+@dataclass
+class Record:
+    ts: int          # write tick
+    ttl: int         # 0 = forever
+    blob: bytes      # compressed slate
+
+
+class KVStore:
+    """Replicated, bucketed, compressed key-value store for slates.
+
+    Layout: root/replica_<i>/<updater>/bucket_<b>.seg — each segment is a
+    msgpack map {key: (ts, ttl, blob)}.
+    """
+
+    def __init__(self, root: str, *, replicas: int = 3, write_quorum: int = 2,
+                 read_quorum: int = 2, buckets: int = 64,
+                 flush_buffer: int = 1024):
+        assert 1 <= write_quorum <= replicas
+        assert 1 <= read_quorum <= replicas
+        self.root = root
+        self.replicas = replicas
+        self.write_quorum = write_quorum
+        self.read_quorum = read_quorum
+        self.buckets = buckets
+        self._cctx = zstd.ZstdCompressor(level=3)
+        self._dctx = zstd.ZstdDecompressor()
+        self._lock = threading.Lock()
+        self._buffer: Dict[Tuple[str, int], Record] = {}
+        self._flush_buffer = flush_buffer
+        self._replica_down = [False] * replicas
+        os.makedirs(root, exist_ok=True)
+
+    # ---- fault injection (simulated replica failures) ----
+    def set_replica_down(self, i: int, down: bool = True):
+        self._replica_down[i] = down
+
+    # ---- write path ----
+    def put(self, updater: str, key: int, slate, *, ts: int, ttl: int = 0):
+        blob = self._cctx.compress(_pack_tree(slate))
+        with self._lock:
+            self._buffer[(updater, int(key))] = Record(ts=ts, ttl=ttl,
+                                                       blob=blob)
+            if len(self._buffer) >= self._flush_buffer:
+                self._flush_locked()
+
+    def put_many(self, updater: str, items: Iterable[Tuple[int, Any]], *,
+                 ts: int, ttl: int = 0):
+        for key, slate in items:
+            self.put(updater, key, slate, ts=ts, ttl=ttl)
+
+    def flush(self):
+        with self._lock:
+            self._flush_locked()
+
+    def _flush_locked(self):
+        if not self._buffer:
+            return
+        by_seg: Dict[Tuple[str, int], Dict[int, Record]] = {}
+        for (upd, key), rec in self._buffer.items():
+            b = _bucket_of(key, self.buckets)
+            by_seg.setdefault((upd, b), {})[key] = rec
+        self._buffer.clear()
+        for (upd, b), recs in by_seg.items():
+            written = 0
+            for i in range(self.replicas):
+                if self._replica_down[i]:
+                    continue
+                self._merge_segment(i, upd, b, recs)
+                written += 1
+                if written >= self.write_quorum and \
+                        written >= self._alive_count():
+                    break
+            if written < self.write_quorum:
+                raise IOError(
+                    f"write quorum failed ({written}/{self.write_quorum})")
+
+    def _alive_count(self):
+        return sum(1 for d in self._replica_down if not d)
+
+    def _seg_path(self, replica: int, updater: str, bucket: int) -> str:
+        d = os.path.join(self.root, f"replica_{replica}", updater)
+        os.makedirs(d, exist_ok=True)
+        return os.path.join(d, f"bucket_{bucket:04d}.seg")
+
+    def _merge_segment(self, replica: int, updater: str, bucket: int,
+                       recs: Dict[int, Record]):
+        path = self._seg_path(replica, updater, bucket)
+        existing = self._read_segment_file(path)
+        for k, r in recs.items():
+            old = existing.get(k)
+            if old is None or old[0] <= r.ts:
+                existing[k] = (r.ts, r.ttl, r.blob)
+        tmp = path + ".tmp"
+        with open(tmp, "wb") as f:
+            f.write(msgpack.packb(
+                {k: list(v) for k, v in existing.items()}))
+        os.replace(tmp, path)  # atomic
+
+    @staticmethod
+    def _read_segment_file(path: str) -> Dict[int, Tuple[int, int, bytes]]:
+        if not os.path.exists(path):
+            return {}
+        with open(path, "rb") as f:
+            raw = msgpack.unpackb(f.read(), strict_map_key=False)
+        return {int(k): (v[0], v[1], v[2]) for k, v in raw.items()}
+
+    # ---- read path ----
+    def get(self, updater: str, key: int, *, now: Optional[int] = None):
+        """Quorum read: newest ts among read_quorum replicas; expired
+        records (TTL) read as missing."""
+        self.flush()
+        b = _bucket_of(int(key), self.buckets)
+        best: Optional[Tuple[int, int, bytes]] = None
+        seen = 0
+        for i in range(self.replicas):
+            if self._replica_down[i]:
+                continue
+            seg = self._read_segment_file(self._seg_path(i, updater, b))
+            rec = seg.get(int(key))
+            seen += 1
+            if rec is not None and (best is None or rec[0] > best[0]):
+                best = rec
+            if seen >= self.read_quorum:
+                break
+        if seen < self.read_quorum:
+            raise IOError(f"read quorum failed ({seen}/{self.read_quorum})")
+        if best is None:
+            return None
+        ts, ttl, blob = best
+        if ttl and now is not None and now - ts > ttl:
+            return None
+        return _unpack_tree(self._dctx.decompress(blob))
+
+    def scan(self, updater: str, *, now: Optional[int] = None):
+        """Bulk read of every live slate (paper section 5 'bulk reading of
+        slates')."""
+        self.flush()
+        out: Dict[int, Any] = {}
+        meta: Dict[int, int] = {}
+        for i in range(self.replicas):
+            if self._replica_down[i]:
+                continue
+            d = os.path.join(self.root, f"replica_{i}", updater)
+            if not os.path.isdir(d):
+                continue
+            for fn in sorted(os.listdir(d)):
+                seg = self._read_segment_file(os.path.join(d, fn))
+                for k, (ts, ttl, blob) in seg.items():
+                    if ttl and now is not None and now - ts > ttl:
+                        continue
+                    if k not in meta or ts > meta[k]:
+                        meta[k] = ts
+                        out[k] = blob
+        return {k: _unpack_tree(self._dctx.decompress(v))
+                for k, v in out.items()}
+
+    # ---- maintenance ----
+    def gc(self, updater: str, *, now: int):
+        """Drop expired records (the store-side TTL GC of section 4.2)."""
+        removed = 0
+        for i in range(self.replicas):
+            if self._replica_down[i]:
+                continue
+            d = os.path.join(self.root, f"replica_{i}", updater)
+            if not os.path.isdir(d):
+                continue
+            for fn in sorted(os.listdir(d)):
+                path = os.path.join(d, fn)
+                seg = self._read_segment_file(path)
+                live = {k: v for k, v in seg.items()
+                        if not (v[1] and now - v[0] > v[1])}
+                if len(live) != len(seg):
+                    removed += len(seg) - len(live)
+                    tmp = path + ".tmp"
+                    with open(tmp, "wb") as f:
+                        f.write(msgpack.packb(
+                            {k: list(v) for k, v in live.items()}))
+                    os.replace(tmp, path)
+        return removed
+
+
+def _bucket_of(key: int, buckets: int) -> int:
+    x = key & 0xFFFFFFFF
+    x = (x ^ (x >> 16)) * 0x7FEB352D & 0xFFFFFFFF
+    x = (x ^ (x >> 15)) * 0x846CA68B & 0xFFFFFFFF
+    return (x ^ (x >> 16)) % buckets

@@ -1,0 +1,79 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — tests see the real single
+CPU device; multi-shard behaviour is exercised via subprocess tests
+(test_multishard.py) so device-count init never leaks across suites."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.event import EventBatch
+from repro.core.operators import AssociativeUpdater, Mapper, SequentialUpdater
+
+VSPEC = {"x": ((), jnp.int32)}
+
+
+class PassThroughMapper(Mapper):
+    name = "M1"
+    subscribes = ("S1",)
+    in_value_spec = VSPEC
+    out_streams = {"S2": VSPEC}
+
+    def map_batch(self, batch):
+        out = EventBatch(sid=batch.sid, ts=batch.ts + 1, key=batch.key,
+                         value=batch.value, valid=batch.valid)
+        return {"S2": out}
+
+
+class CountingUpdater(AssociativeUpdater):
+    name = "U1"
+    subscribes = ("S2",)
+    in_value_spec = VSPEC
+    out_streams = {}
+    table_capacity = 512
+
+    def slate_spec(self):
+        return {"count": ((), jnp.int32), "sum": ((), jnp.float32)}
+
+    def lift(self, batch):
+        return {"count": jnp.ones_like(batch.key),
+                "sum": batch.value["x"].astype(jnp.float32)}
+
+    def combine(self, a, b):
+        return {"count": a["count"] + b["count"], "sum": a["sum"] + b["sum"]}
+
+    def merge(self, slate, delta):
+        return {"count": slate["count"] + delta["count"],
+                "sum": slate["sum"] + delta["sum"]}
+
+
+class LastValueUpdater(SequentialUpdater):
+    """Order-sensitive: slate keeps the last event value and a step count;
+    emits the running count each event."""
+    name = "U2"
+    subscribes = ("S2",)
+    in_value_spec = VSPEC
+    out_streams = {"S3": VSPEC}
+    table_capacity = 512
+    max_run = 8
+
+    def slate_spec(self):
+        return {"last": ((), jnp.int32), "n": ((), jnp.int32)}
+
+    def step(self, slate, ev):
+        new = {"last": ev["value"]["x"], "n": slate["n"] + 1}
+        emit = {"S3": {"key": ev["key"], "value": {"x": new["n"]},
+                       "emit": jnp.bool_(True)}}
+        return new, emit
+
+
+def make_batch(keys, xs=None, ts=None, valid=None):
+    keys = np.asarray(keys, np.int32)
+    xs = np.asarray(xs if xs is not None else keys, np.int32)
+    return EventBatch.of(key=keys, value={"x": xs}, ts=ts, valid=valid)
+
+
+@pytest.fixture
+def counting_workflow():
+    from repro.core.workflow import Workflow
+    return Workflow([PassThroughMapper(), CountingUpdater()],
+                    external_streams=("S1",))

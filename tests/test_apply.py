@@ -1,0 +1,81 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import apply as apply_mod
+from repro.slates import table as tbl
+from tests.conftest import CountingUpdater, LastValueUpdater, make_batch
+
+
+def brute_counts(keys, xs, valid):
+    out = {}
+    for k, x, v in zip(keys, xs, valid):
+        if v:
+            c, s = out.get(k, (0, 0.0))
+            out[k] = (c + 1, s + x)
+    return out
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.integers(0, 12), min_size=1, max_size=64), st.data())
+def test_associative_matches_bruteforce(keys, data):
+    xs = data.draw(st.lists(st.integers(-50, 50), min_size=len(keys),
+                            max_size=len(keys)))
+    valid = data.draw(st.lists(st.booleans(), min_size=len(keys),
+                               max_size=len(keys)))
+    up = CountingUpdater()
+    table = tbl.make_table(256, up.slate_spec())
+    batch = make_batch(keys, xs, valid=valid)
+    table, _, n = apply_mod.apply_associative(up, table, batch, tick=0)
+    want = brute_counts(keys, xs, valid)
+    assert int(n) == sum(valid)
+    for k, (c, s) in want.items():
+        slot, found = tbl.lookup(table, jnp.asarray([k], jnp.int32))
+        assert bool(found[0]), k
+        assert int(table.vals["count"][int(slot[0])]) == c
+        assert abs(float(table.vals["sum"][int(slot[0])]) - s) < 1e-4
+
+
+def test_associative_accumulates_across_batches():
+    up = CountingUpdater()
+    table = tbl.make_table(128, up.slate_spec())
+    for i in range(5):
+        table, _, _ = apply_mod.apply_associative(
+            up, table, make_batch([1, 2, 1]), tick=i)
+    slot, found = tbl.lookup(table, jnp.asarray([1], jnp.int32))
+    assert int(table.vals["count"][int(slot[0])]) == 10
+
+
+def test_sequential_respects_ts_order():
+    """slate['last'] must be the value of the max-ts event per key."""
+    up = LastValueUpdater()
+    table = tbl.make_table(128, up.slate_spec())
+    keys = [5, 5, 5, 9, 9]
+    xs = [10, 20, 30, 7, 8]
+    ts = [2, 0, 1, 1, 0]     # key 5 order: 20,30,10 ; key 9 order: 8,7
+    batch = make_batch(keys, xs, ts=ts)
+    table, ems, deferred, n = apply_mod.apply_sequential(up, table, batch,
+                                                         tick=0)
+    assert int(n) == 5 and int(deferred.count()) == 0
+    slot, _ = tbl.lookup(table, jnp.asarray([5, 9], jnp.int32))
+    assert int(table.vals["last"][int(slot[0])]) == 10   # ts=2 last
+    assert int(table.vals["last"][int(slot[1])]) == 7    # ts=1 last
+    assert int(table.vals["n"][int(slot[0])]) == 3
+    # emissions: one per processed event with running count
+    em = ems["S3"]
+    got = sorted(np.asarray(em.value["x"])[np.asarray(em.valid)].tolist())
+    assert got == [1, 1, 2, 2, 3]
+
+
+def test_sequential_defers_over_budget_runs():
+    up = LastValueUpdater()   # max_run = 8
+    table = tbl.make_table(128, up.slate_spec())
+    batch = make_batch([3] * 20, list(range(20)),
+                       ts=list(range(20)))
+    table, _, deferred, n = apply_mod.apply_sequential(up, table, batch,
+                                                       tick=0)
+    assert int(n) == 8
+    assert int(deferred.count()) == 12
+    slot, _ = tbl.lookup(table, jnp.asarray([3], jnp.int32))
+    assert int(table.vals["n"][int(slot[0])]) == 8

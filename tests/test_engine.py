@@ -1,0 +1,166 @@
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.engine import Engine, EngineConfig
+from repro.core.event import EventBatch
+from repro.core.operators import AssociativeUpdater, Mapper
+from repro.core.queues import OverflowPolicy
+from repro.core.workflow import Workflow
+from tests.conftest import (CountingUpdater, LastValueUpdater,
+                            PassThroughMapper, VSPEC, make_batch)
+
+
+def drain(eng, state, ticks=6, cap=8):
+    for t in range(ticks):
+        state, _ = eng.step(state, {"S1": make_batch(
+            [0] * cap, valid=[False] * cap, ts=[900 + t] * cap)})
+    return state
+
+
+def test_counting_exact(counting_workflow):
+    eng = Engine(counting_workflow, EngineConfig(batch_size=32,
+                                                 queue_capacity=128))
+    state = eng.init_state()
+    rng = np.random.default_rng(0)
+    truth = {}
+    for t in range(10):
+        keys = rng.integers(0, 20, size=16).astype(np.int32)
+        xs = rng.integers(0, 9, size=16).astype(np.int32)
+        for k, x in zip(keys, xs):
+            c, s = truth.get(int(k), (0, 0))
+            truth[int(k)] = (c + 1, s + int(x))
+        state, _ = eng.step(state, {"S1": make_batch(
+            keys, xs, ts=[t] * 16)})
+    state = drain(eng, state, cap=16)
+    for k, (c, s) in truth.items():
+        slate = eng.read_slate(state, "U1", k)
+        assert slate is not None and int(slate["count"]) == c
+        assert abs(float(slate["sum"]) - s) < 1e-3
+
+
+def test_pipeline_latency_is_graph_depth(counting_workflow):
+    """An event injected at tick t is visible in U1's slate after the
+    mapper hop (tick t) + updater hop (tick t+1)."""
+    eng = Engine(counting_workflow, EngineConfig(batch_size=8,
+                                                 queue_capacity=64))
+    state = eng.init_state()
+    state, _ = eng.step(state, {"S1": make_batch([42])})
+    assert eng.read_slate(state, "U1", 42) is None   # still in flight
+    state = drain(eng, state, ticks=1)
+    assert int(eng.read_slate(state, "U1", 42)["count"]) == 1
+
+
+def test_overflow_drop_counts(counting_workflow):
+    eng = Engine(counting_workflow, EngineConfig(batch_size=4,
+                                                 queue_capacity=8))
+    state = eng.init_state()
+    state, _ = eng.step(state, {"S1": make_batch(list(range(32)))})
+    stats = eng.stats(state)
+    assert stats["queue_dropped"]["M1"] == 24
+
+
+def test_overflow_stream_degraded_path():
+    """OVERFLOW_STREAM diverts excess to a degraded updater (section
+    4.3's 'slightly degraded service')."""
+    class DegradedCounter(CountingUpdater):
+        name = "U_degraded"
+        subscribes = ("S_overflow",)
+
+    class SecondMapper(PassThroughMapper):
+        name = "M2"
+
+    # two mappers fan S1 into S2: U1 receives 2x its drain rate
+    wf = Workflow([PassThroughMapper(), SecondMapper(), CountingUpdater(),
+                   DegradedCounter()],
+                  external_streams=("S1", "S_overflow"))
+    eng = Engine(wf, EngineConfig(
+        batch_size=4, queue_capacity=8,
+        overflow={"U1": OverflowPolicy.OVERFLOW_STREAM},
+        overflow_stream={"U1": "S_overflow"}))
+    state = eng.init_state()
+    for t in range(6):
+        state, _ = eng.step(state, {"S1": make_batch([1] * 4,
+                                                     ts=[t] * 4)})
+    state = drain(eng, state, ticks=12)
+    main = eng.read_slate(state, "U1", 1)
+    degraded = eng.read_slate(state, "U_degraded", 1)
+    assert degraded is not None and int(degraded["count"]) > 0
+    assert int(main["count"]) + int(degraded["count"]) == 48
+
+
+def test_throttle_signal():
+    wf = Workflow([PassThroughMapper(), CountingUpdater()],
+                  external_streams=("S1",))
+    eng = Engine(wf, EngineConfig(batch_size=4, queue_capacity=8,
+                                  overflow={"M1": OverflowPolicy.THROTTLE}))
+    state = eng.init_state()
+    state, _ = eng.step(state, {"S1": make_batch(list(range(32)))})
+    assert eng.stats(state)["throttle_hits"] > 0
+
+
+def test_source_throttling_run_loop():
+    wf = Workflow([PassThroughMapper(), CountingUpdater()],
+                  external_streams=("S1",))
+    eng = Engine(wf, EngineConfig(batch_size=4, queue_capacity=8,
+                                  overflow={"M1": OverflowPolicy.THROTTLE}))
+    state = eng.init_state()
+    sizes = []
+
+    def source(t, max_events):
+        n = 16
+        take = min(max_events, n) if max_events else n
+        sizes.append(take)
+        return {"S1": make_batch(list(range(n)), ts=[t] * n,
+                                 valid=[i < take for i in range(n)])}
+
+    state, _ = eng.run(state, source, 12)
+    assert min(sizes) < 16    # the loop backed off under pressure
+
+
+def test_ttl_expires_slates():
+    class TTLCounter(CountingUpdater):
+        ttl = 3
+
+    wf = Workflow([PassThroughMapper(), TTLCounter()],
+                  external_streams=("S1",))
+    eng = Engine(wf, EngineConfig(batch_size=8, queue_capacity=64))
+    state = eng.init_state()
+    state, _ = eng.step(state, {"S1": make_batch([7])})
+    state = drain(eng, state, ticks=1)
+    assert eng.read_slate(state, "U1", 7) is not None
+    state = drain(eng, state, ticks=6)   # > ttl idle ticks
+    assert eng.read_slate(state, "U1", 7) is None
+
+
+def test_sequential_updater_in_engine_emits():
+    wf = Workflow([PassThroughMapper(), LastValueUpdater()],
+                  external_streams=("S1",))
+    eng = Engine(wf, EngineConfig(batch_size=16, queue_capacity=64))
+    state = eng.init_state()
+    outs = []
+    state, o = eng.step(state, {"S1": make_batch([4, 4, 5],
+                                                 [10, 20, 30],
+                                                 ts=[0, 1, 2])})
+    outs.append(o)
+    for t in range(3):
+        state, o = eng.step(state, {"S1": make_batch(
+            [0], valid=[False], ts=[50 + t])})
+        outs.append(o)
+    emitted = [o["S3"] for o in outs if "S3" in o]
+    assert emitted, "S3 events should surface as engine outputs"
+    xs = np.concatenate([np.asarray(e.value["x"])[np.asarray(e.valid)]
+                         for e in emitted])
+    assert sorted(xs.tolist()) == [1, 1, 2]
+
+
+def test_workflow_validation():
+    with pytest.raises(ValueError):
+        Workflow([PassThroughMapper()], external_streams=())  # S1 missing
+
+    class BadMapper(PassThroughMapper):
+        out_streams = {"S1": VSPEC}   # emits into external stream
+
+    with pytest.raises(ValueError):
+        Workflow([BadMapper(), CountingUpdater()],
+                 external_streams=("S1",))

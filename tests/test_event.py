@@ -1,0 +1,58 @@
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.event import EventBatch, compact, concat
+from tests.conftest import make_batch
+
+
+def test_sort_by_key_ts_orders_runs():
+    b = make_batch([3, 1, 3, 2, 1], ts=[4, 2, 1, 0, 3])
+    s = b.sort_by_key_ts()
+    keys = np.asarray(s.key)
+    ts = np.asarray(s.ts)
+    assert list(keys) == [1, 1, 2, 3, 3]
+    assert list(ts) == [2, 3, 0, 1, 4]
+
+
+def test_sort_sinks_invalid():
+    b = make_batch([5, 0, 7], valid=[True, False, True])
+    s = b.sort_by_key_ts()
+    assert list(np.asarray(s.valid)) == [True, True, False]
+    assert np.asarray(s.key)[-1] == np.int32(2**31 - 1)
+
+
+def test_compact_moves_valid_first():
+    b = make_batch([1, 2, 3, 4], valid=[False, True, False, True])
+    c = compact(b)
+    assert list(np.asarray(c.valid)) == [True, True, False, False]
+    assert list(np.asarray(c.key)[:2]) == [2, 4]
+
+
+def test_concat_and_pad():
+    a = make_batch([1, 2])
+    b = make_batch([3])
+    c = concat([a, b])
+    assert c.capacity == 3
+    p = c.pad_to(8)
+    assert p.capacity == 8
+    assert int(p.count()) == 3
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.integers(0, 20), min_size=1, max_size=40),
+       st.data())
+def test_sort_is_stable_permutation(keys, data):
+    ts = data.draw(st.lists(st.integers(0, 10), min_size=len(keys),
+                            max_size=len(keys)))
+    b = make_batch(keys, ts=ts)
+    s = b.sort_by_key_ts()
+    # same multiset of (key, ts)
+    got = sorted(zip(np.asarray(s.key).tolist(),
+                     np.asarray(s.ts).tolist()))
+    want = sorted(zip(keys, ts))
+    assert got == want
+    # nondecreasing lexicographic order
+    pairs = list(zip(np.asarray(s.key).tolist(),
+                     np.asarray(s.ts).tolist()))
+    assert pairs == sorted(pairs)

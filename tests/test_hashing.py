@@ -1,0 +1,66 @@
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.hashing import HashRing, hash_key, route, route_secondary
+
+
+def test_route_targets_alive_shards_only():
+    ring = HashRing(8)
+    ring.fail(3)
+    ring.fail(5)
+    rh, rs = ring.table()
+    keys = jnp.arange(10_000, dtype=jnp.int32)
+    dest = np.asarray(route(keys, 0xABC, rh, rs))
+    assert set(np.unique(dest)) <= {0, 1, 2, 4, 6, 7}
+
+
+def test_consistent_hashing_minimal_movement():
+    ring = HashRing(16)
+    rh, rs = ring.table()
+    keys = jnp.arange(50_000, dtype=jnp.int32)
+    before = np.asarray(route(keys, 1, rh, rs))
+    ring.fail(7)
+    rh2, rs2 = ring.table()
+    after = np.asarray(route(keys, 1, rh2, rs2))
+    moved = (before != after)
+    # only events owned by the dead shard move
+    assert np.all(moved == (before == 7))
+    assert not np.any(after == 7)
+
+
+def test_secondary_differs_from_primary():
+    ring = HashRing(8)
+    rh, rs = ring.table()
+    keys = jnp.arange(5_000, dtype=jnp.int32)
+    p = np.asarray(route(keys, 42, rh, rs))
+    s = np.asarray(route_secondary(keys, 42, rh, rs))
+    assert np.mean(p != s) > 0.99     # virtually always a distinct shard
+
+
+def test_salt_decorrelates_destinations():
+    ring = HashRing(8)
+    rh, rs = ring.table()
+    keys = jnp.arange(20_000, dtype=jnp.int32)
+    a = np.asarray(route(keys, 1, rh, rs))
+    b = np.asarray(route(keys, 2, rh, rs))
+    assert np.mean(a == b) < 0.4      # near 1/8 for independent hashing
+
+
+def test_load_balance_roughly_uniform():
+    ring = HashRing(8, vnodes=128)
+    rh, rs = ring.table()
+    keys = jnp.arange(80_000, dtype=jnp.int32)
+    d = np.asarray(route(keys, 7, rh, rs))
+    counts = np.bincount(d, minlength=8)
+    assert counts.min() > 0.5 * counts.mean()
+    assert counts.max() < 1.8 * counts.mean()
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(2, 32), st.integers(0, 2**31 - 1))
+def test_route_in_range(n_shards, key):
+    ring = HashRing(n_shards)
+    rh, rs = ring.table()
+    d = int(route(jnp.asarray([key], jnp.int32), 9, rh, rs)[0])
+    assert 0 <= d < n_shards

@@ -1,0 +1,35 @@
+import json
+import urllib.request
+
+from repro.core.engine import Engine, EngineConfig
+from repro.core.workflow import Workflow
+from repro.slates.http import SlateServer
+from tests.conftest import CountingUpdater, PassThroughMapper, make_batch
+
+
+def test_slate_http_reads():
+    wf = Workflow([PassThroughMapper(), CountingUpdater()],
+                  external_streams=("S1",))
+    eng = Engine(wf, EngineConfig(batch_size=16, queue_capacity=64))
+    state = eng.init_state()
+    state, _ = eng.step(state, {"S1": make_batch([5, 5, 9])})
+    state, _ = eng.step(state, {"S1": make_batch(
+        [0], valid=[False], ts=[99])})
+
+    box = {"state": state}
+    srv = SlateServer(
+        read_fn=lambda upd, key: eng.read_slate(box["state"], upd, key),
+        stats_fn=lambda: eng.stats(box["state"]))
+    try:
+        url = f"http://127.0.0.1:{srv.port}"
+        got = json.load(urllib.request.urlopen(f"{url}/slate/U1/5"))
+        assert got["count"] == 2
+        st = json.load(urllib.request.urlopen(f"{url}/status"))
+        assert st["processed"]["U1"] == 3
+        try:
+            urllib.request.urlopen(f"{url}/slate/U1/12345")
+            assert False, "expected 404"
+        except urllib.error.HTTPError as e:
+            assert e.code == 404
+    finally:
+        srv.close()

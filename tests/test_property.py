@@ -1,0 +1,81 @@
+"""System-level property tests (hypothesis)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.engine import Engine, EngineConfig
+from repro.core.hotspot import merge_keys, split_keys
+from repro.core.workflow import Workflow
+from tests.conftest import (CountingUpdater, PassThroughMapper, VSPEC,
+                            make_batch)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_engine_is_deterministic(seed):
+    """Same inputs -> bit-identical slates and stats (the paper's
+    well-definedness conditions, section 3)."""
+    def run():
+        wf = Workflow([PassThroughMapper(), CountingUpdater()],
+                      external_streams=("S1",))
+        eng = Engine(wf, EngineConfig(batch_size=32, queue_capacity=128))
+        state = eng.init_state()
+        rng = np.random.default_rng(seed)
+        for t in range(5):
+            keys = rng.integers(0, 30, size=24).astype(np.int32)
+            xs = rng.integers(0, 9, size=24).astype(np.int32)
+            state, _ = eng.step(state, {"S1": make_batch(keys, xs,
+                                                         ts=[t] * 24)})
+        t_ = state["tables"]["U1"]
+        return (np.asarray(t_.keys).copy(),
+                np.asarray(t_.vals["count"]).copy(),
+                np.asarray(t_.vals["sum"]).copy())
+
+    a, b = run(), run()
+    for x, y in zip(a, b):
+        assert np.array_equal(x, y)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(0, 50), min_size=1, max_size=100),
+       st.integers(2, 16))
+def test_key_split_conserves_and_spreads(keys, ways):
+    """Splitting is lossless (merge recovers the key) and per-event."""
+    karr = jnp.asarray(keys, jnp.int32)
+    ts = jnp.arange(len(keys), dtype=jnp.int32)
+    split = split_keys(karr, ts, ways)
+    back = merge_keys(split, ways)
+    assert np.array_equal(np.asarray(back), np.asarray(karr))
+    subs = np.asarray(split % ways)
+    if len(set(keys)) == 1 and len(keys) >= 32:
+        # a hot key's events hit several sub-keys
+        assert len(np.unique(subs)) >= min(ways, 4) // 2
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 15), st.integers(0, 99)),
+                min_size=1, max_size=60))
+def test_event_conservation(pairs):
+    """Every valid event is either processed into a slate count, still
+    queued, or counted as dropped — none vanish."""
+    wf = Workflow([PassThroughMapper(), CountingUpdater()],
+                  external_streams=("S1",))
+    eng = Engine(wf, EngineConfig(batch_size=16, queue_capacity=32))
+    state = eng.init_state()
+    keys = [k for k, _ in pairs]
+    xs = [x for _, x in pairs]
+    state, _ = eng.step(state, {"S1": make_batch(keys, xs)})
+    for t in range(12):
+        state, _ = eng.step(state, {"S1": make_batch(
+            [0], valid=[False], ts=[100 + t])})
+    s = eng.stats(state)
+    counted = sum(int(np.asarray(jax.device_get(
+        state["tables"]["U1"].vals["count"]))[i])
+        for i in range(512)
+        if int(np.asarray(jax.device_get(
+            state["tables"]["U1"].keys))[i]) != -1)
+    dropped = sum(s["queue_dropped"].values()) + \
+        sum(s["table_dropped"].values())
+    queued = sum(s["queue_size"].values())
+    assert counted + dropped + queued == len(pairs)

@@ -1,0 +1,58 @@
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import queues as q_mod
+from tests.conftest import VSPEC, make_batch
+
+
+def test_fifo_roundtrip():
+    q = q_mod.make_queue(16, VSPEC)
+    q, ovf = q_mod.enqueue(q, make_batch([1, 2, 3]))
+    assert int(ovf.count()) == 0
+    q, out = q_mod.dequeue(q, 2)
+    assert list(np.asarray(out.key)[np.asarray(out.valid)]) == [1, 2]
+    q, out = q_mod.dequeue(q, 8)
+    assert list(np.asarray(out.key)[np.asarray(out.valid)]) == [3]
+    assert int(q.size) == 0
+
+
+def test_overflow_returned():
+    q = q_mod.make_queue(4, VSPEC)
+    q, ovf = q_mod.enqueue(q, make_batch(list(range(10))))
+    assert int(ovf.count()) == 6
+    assert int(q.size) == 4
+    q = q_mod.count_drop(q, ovf)
+    assert int(q.dropped) == 6
+
+
+def test_wraparound():
+    q = q_mod.make_queue(4, VSPEC)
+    for i in range(6):
+        q, _ = q_mod.enqueue(q, make_batch([i]))
+        q, out = q_mod.dequeue(q, 1)
+        assert list(np.asarray(out.key)[np.asarray(out.valid)]) == [i]
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.lists(st.integers(0, 100), min_size=0, max_size=6),
+                min_size=1, max_size=20))
+def test_queue_preserves_order_and_counts(batches):
+    """Property: dequeued stream == concatenation of enqueued (minus
+    overflow), in order."""
+    q = q_mod.make_queue(32, VSPEC)
+    expect = []
+    dropped = 0
+    got = []
+    for keys in batches:
+        if keys:
+            q, ovf = q_mod.enqueue(q, make_batch(keys))
+            n_over = int(ovf.count())
+            dropped += n_over
+            expect.extend(keys[:len(keys) - n_over])
+        q, out = q_mod.dequeue(q, 4)
+        got.extend(np.asarray(out.key)[np.asarray(out.valid)].tolist())
+    while int(q.size):
+        q, out = q_mod.dequeue(q, 8)
+        got.extend(np.asarray(out.key)[np.asarray(out.valid)].tolist())
+    assert got == expect

@@ -1,0 +1,75 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed import sharding as shd
+from repro.launch.mesh import make_host_mesh
+
+
+def mesh1():
+    return make_host_mesh(n_data=1, n_model=1)
+
+
+def test_divisibility_fallback():
+    mesh = mesh1()
+    rules = {"tp": ("model",), "fsdp": ("data",)}
+    # both divisible by 1 -> sharded specs named
+    spec = shd.to_pspec(("fsdp", "tp"), (8, 16), mesh, rules)
+    assert spec == P("data", "model")
+    # dims not divisible -> replicated
+    rules2 = {"tp": ("model",), "fsdp": ("data",)}
+    mesh_big = mesh  # 1-dev mesh: everything divides; simulate via prod
+    spec2 = shd.to_pspec(("fsdp", None), (8, 16), mesh_big, rules2)
+    assert spec2 == P("data")
+
+
+def test_duplicate_axis_priority():
+    mesh = mesh1()
+    rules = {"kv_heads": ("model",), "kv_seq": ("model",),
+             "act_batch": ("data",)}
+    spec = shd.to_pspec(("act_batch", "kv_seq", "kv_heads", None),
+                        (4, 128, 16, 64), mesh, rules)
+    # kv_heads wins "model"; kv_seq falls back to replicated
+    assert spec == P("data", None, "model")
+
+
+def test_rules_phase_behaviour():
+    mesh = make_host_mesh(n_data=1, n_model=1)
+    train = shd.rules_for(mesh, phase="train")
+    dec = shd.rules_for(mesh, phase="decode")
+    lng = shd.rules_for(mesh, phase="decode", long_context=True)
+    assert train["kv_seq"] == ()
+    assert dec["kv_seq"] == ("model",)
+    assert set(lng["kv_seq"]) >= {"model"}
+    assert train["act_seq"] == ("model",)
+    assert dec["act_seq"] == ()
+
+
+def test_tree_shardings_on_model():
+    from repro.configs import reduced_config
+    from repro.models import lm
+    cfg = reduced_config("qwen2-0.5b")
+    model = lm.build(cfg)
+    mesh = mesh1()
+    rules = shd.rules_for(mesh, phase="train")
+    shapes, specs = lm.param_specs(model)
+    shardings = shd.tree_shardings(specs, shapes, mesh, rules)
+    n = len(jax.tree.leaves(shardings,
+                            is_leaf=lambda x: hasattr(x, "spec")))
+    assert n == len(jax.tree.leaves(shapes))
+
+
+def test_constrainer_identity_semantics():
+    mesh = mesh1()
+    rules = shd.rules_for(mesh, phase="train")
+    constrain = shd.make_constrainer(mesh, rules)
+    x = jnp.ones((4, 8, 16))
+
+    @jax.jit
+    def f(y):
+        return constrain(y, ("act_batch", "act_seq", None))
+
+    with mesh:
+        out = f(x)
+    assert np.allclose(np.asarray(out), 1.0)

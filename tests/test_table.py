@@ -1,0 +1,78 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.slates import table as tbl
+
+SPEC = {"v": ((), jnp.float32)}
+
+
+def test_insert_lookup_roundtrip():
+    t = tbl.make_table(64, SPEC)
+    keys = jnp.asarray([7, 13, 99], jnp.int32)
+    t, slot, found, placed = tbl.insert_or_find(t, keys,
+                                                jnp.ones(3, bool))
+    assert bool(placed.all()) and not bool(found.any())
+    t = tbl.write_slates(t, slot, placed,
+                         {"v": jnp.asarray([1., 2., 3.])}, 0)
+    slot2, found2 = tbl.lookup(t, keys)
+    assert bool(found2.all())
+    assert np.allclose(np.asarray(t.vals["v"])[np.asarray(slot2)],
+                       [1., 2., 3.])
+
+
+def test_missing_key_gets_insertion_point():
+    t = tbl.make_table(32, SPEC)
+    slot, found = tbl.lookup(t, jnp.asarray([5], jnp.int32))
+    assert not bool(found[0]) and int(slot[0]) >= 0
+
+
+def test_ttl_expiry():
+    t = tbl.make_table(32, SPEC)
+    keys = jnp.asarray([1, 2], jnp.int32)
+    t, slot, _, placed = tbl.insert_or_find(t, keys, jnp.ones(2, bool))
+    t = tbl.write_slates(t, slot, placed, {"v": jnp.asarray([1., 2.])},
+                         tick=0)
+    # touch key 1 at tick 50
+    t, slot1, _, p1 = tbl.insert_or_find(t, jnp.asarray([1], jnp.int32),
+                                         jnp.ones(1, bool))
+    t = tbl.write_slates(t, slot1, p1, {"v": jnp.asarray([9.])}, tick=50)
+    t = tbl.expire_ttl(t, now=60, ttl=30)
+    _, found = tbl.lookup(t, keys)
+    assert bool(found[0]) and not bool(found[1])   # 2 expired, 1 alive
+
+
+def test_read_slates_initializes_missing():
+    t = tbl.make_table(32, SPEC)
+    keys = jnp.asarray([4], jnp.int32)
+    t, slot, found, placed = tbl.insert_or_find(t, keys, jnp.ones(1, bool))
+    init = lambda n: {"v": jnp.full((n,), 7.0)}
+    vals = tbl.read_slates(t, slot, found, init)
+    assert float(vals["v"][0]) == 7.0   # fresh slate initialized
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.sets(st.integers(0, 10_000), min_size=1, max_size=200))
+def test_no_key_lost_under_load(keys):
+    """Property: unique keys inserted below ~50% load factor all land."""
+    cap = max(512, 4 * len(keys))
+    t = tbl.make_table(cap, SPEC)
+    karr = jnp.asarray(sorted(keys), jnp.int32)
+    t, slot, found, placed = tbl.insert_or_find(
+        t, karr, jnp.ones(len(keys), bool))
+    assert bool(placed.all())
+    assert int(t.dropped) == 0
+    slot2, found2 = tbl.lookup(t, karr)
+    assert bool(found2.all())
+    # slots are unique
+    assert len(np.unique(np.asarray(slot2))) == len(keys)
+
+
+def test_dropped_counted_when_full():
+    t = tbl.make_table(8, SPEC)  # tiny
+    keys = jnp.arange(64, dtype=jnp.int32)
+    t, slot, found, placed = tbl.insert_or_find(t, keys,
+                                                jnp.ones(64, bool))
+    assert int(t.dropped) > 0
+    assert int(placed.sum()) <= 8
