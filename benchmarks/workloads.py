@@ -32,6 +32,7 @@ class CounterUpdater(AssociativeUpdater):
     in_value_spec = VSPEC
     out_streams = {}
     table_capacity = 1 << 16
+    sum_mergeable = True   # counter: combine/merge are elementwise sums
 
     def slate_spec(self):
         return {"count": ((), jnp.int32), "sum": ((), jnp.float32)}
@@ -67,11 +68,12 @@ class SequentialCounter(SequentialUpdater):
 
 
 def counting_engine(batch_size=2048, queue_capacity=8192,
-                    sequential=False):
+                    sequential=False, fused="auto"):
     upd = SequentialCounter() if sequential else CounterUpdater()
     wf = Workflow([SourceMapper(), upd], external_streams=("S1",))
     eng = Engine(wf, EngineConfig(batch_size=batch_size,
-                                  queue_capacity=queue_capacity))
+                                  queue_capacity=queue_capacity,
+                                  fused=fused))
     return eng, eng.init_state()
 
 

@@ -2,8 +2,13 @@
 
 - ``apply_associative``: sort by key -> segmented associative scan
   pre-combines every key's events into one delta -> single slate
-  gather/merge/scatter.  O(B log B) with batch-wide parallelism; this is
-  the path the ``slate_update`` Pallas kernel accelerates.
+  gather/merge/scatter.  O(B log B) with batch-wide parallelism.
+  Updaters declaring ``sum_mergeable`` (and no output streams) skip the
+  generic scan entirely: their deltas and slate table are packed into
+  lane-aligned [B, D] / [C, D] f32 buffers (``core/packing.py``) and the
+  whole combine+scatter runs as one fused ``kernels/slate_update`` call
+  (Pallas on TPU, segment-sum oracle elsewhere), in-place via
+  ``input_output_aliases``.
 
 - ``apply_sequential``: sort by (key, ts) -> padded-run scan preserving
   the paper's strict per-key timestamp order: vmap over key runs, scan
@@ -19,8 +24,11 @@ from typing import Dict, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import packing
 from repro.core.event import EventBatch
 from repro.core.operators import AssociativeUpdater, SequentialUpdater
+from repro.kernels.slate_update import ops as slate_ops
+from repro.kernels.slate_update import ref as slate_ref
 from repro.slates import table as tbl
 
 
@@ -44,11 +52,36 @@ def _segmented_combine(updater, deltas, boundary):
     return scanned
 
 
+def fused_eligible(updater: AssociativeUpdater) -> bool:
+    """The fused slate_update path handles updaters whose combine/merge
+    are elementwise sums (``sum_mergeable``) and that emit nothing (the
+    packed path never materializes old/new slates per key)."""
+    return (getattr(updater, "sum_mergeable", False)
+            and not updater.out_streams)
+
+
 def apply_associative(updater: AssociativeUpdater, table: tbl.SlateTable,
-                      batch: EventBatch, tick
+                      batch: EventBatch, tick, *, impl: str = "auto"
                       ) -> Tuple[tbl.SlateTable, Dict[str, EventBatch],
                                  jnp.ndarray]:
-    """Returns (table, emissions, n_processed)."""
+    """Returns (table, emissions, n_processed).
+
+    ``impl`` selects the backend for ``fused_eligible`` updaters:
+      - "off":  always the generic scan/gather/merge/scatter below
+      - "auto": Pallas kernel on TPU (where the in-place [C, D] alias
+                pays off); the generic path elsewhere
+      - "pallas" / "interpret": force the kernel (packed [C, D] table,
+        in-place via input_output_aliases; interpret runs on CPU)
+      - "jnp":  packed segment-sum + direct scatter-add, no table pack —
+        the portable fused fallback
+      - "ref": force the packed-table jnp oracle
+        (``kernels/slate_update/ref``) — exercises the same [C, D]
+        buffer layout as the kernel without Pallas
+    """
+    if impl != "off" and fused_eligible(updater):
+        if impl != "auto" or jax.default_backend() == "tpu":
+            return _apply_associative_fused(updater, table, batch, tick,
+                                            impl=impl)
     batch = batch.sort_by_key_ts()
     B = batch.capacity
     key = batch.key
@@ -70,6 +103,76 @@ def apply_associative(updater: AssociativeUpdater, table: tbl.SlateTable,
     emissions = updater.emit(key, old, new, batch.ts)
     emissions = {s: eb.mask(ok) for s, eb in emissions.items()}
     return table, emissions, batch.count()
+
+
+def _apply_associative_fused(updater: AssociativeUpdater,
+                             table: tbl.SlateTable, batch: EventBatch,
+                             tick, *, impl: str
+                             ) -> Tuple[tbl.SlateTable,
+                                        Dict[str, EventBatch],
+                                        jnp.ndarray]:
+    """Counter-style hot path: pack deltas/table to [B,D]/[C,D] f32 and
+    run the fused segmented-combine + in-place scatter-add.  Requires
+    ``fused_eligible(updater)`` — additive combine/merge, zero init
+    slates, no emissions — so skipping the generic gather/merge/scatter
+    is exact (modulo f32 summation, which the generic "sum" leaf already
+    uses)."""
+    batch = batch.sort_by_key_ts()
+    key = batch.key                       # invalid rows sorted to sink
+    next_key = jnp.concatenate([key[1:], jnp.full((1,), -3, jnp.int32)])
+    run_last = key != next_key
+    unique = run_last & batch.valid
+
+    spec = packing.pack_spec(updater.slate_spec())
+    deltas = updater.lift(batch)
+    if (jax.tree.structure(deltas)
+            != jax.tree.structure(updater.slate_spec(),
+                                  is_leaf=_is_spec_leaf)):
+        raise TypeError(
+            f"sum_mergeable updater {updater.name!r}: lift() pytree must "
+            "match slate_spec() structure for the packed path")
+    table, slot, found, placed = tbl.insert_or_find(table, key, unique)
+    ok = unique & placed
+    slots = jnp.where(ok, slot, jnp.int32(-1))            # -1 = no write
+    safe = jnp.where(ok, slot, table.capacity)
+
+    # Newly placed keys may land in a slot freed by expire_ttl /
+    # fail_shard, which clear the key but keep the dead occupant's vals;
+    # the generic path masks them out via read_slates' init_slate
+    # substitution, the additive path must zero them before the add.
+    safe_fresh = jnp.where(ok & ~found, slot, table.capacity)
+    base_vals = jax.tree.map(
+        lambda tv: tv.at[safe_fresh].set(0, mode="drop"), table.vals)
+
+    backend = impl
+    if backend == "auto":
+        backend = ("pallas" if jax.default_backend() == "tpu"
+                   else "jnp")
+    if backend == "jnp":
+        # combine via one segment sum, then scatter-add run totals into
+        # the slate leaves directly — no [C, D] table pack and no lane
+        # padding on this side, so the CPU/GPU fallback touches only B
+        # rows at the exact slate width.
+        packed_deltas = packing.pack(deltas, spec, pad=False)
+        totals = slate_ref.run_totals(key, packed_deltas)  # [B, D]
+        total_tree = packing.unpack(totals, spec)          # [B, ...]
+        vals = jax.tree.map(
+            lambda tv, dv: tv.at[safe].add(dv.astype(tv.dtype),
+                                           mode="drop"),
+            base_vals, total_tree)
+    else:
+        packed_deltas = packing.pack(deltas, spec)        # [B, D] aligned
+        packed_vals = packing.pack(base_vals, spec)       # [C, D]
+        packed_vals = slate_ops.slate_update(key, packed_deltas, slots,
+                                             packed_vals, impl=backend)
+        vals = packing.unpack(packed_vals, spec)
+
+    # bookkeeping scatter (ts / dirty), same slots write_slates would hit
+    ts = table.ts.at[safe].set(tick, mode="drop")
+    dirty = table.dirty.at[safe].set(True, mode="drop")
+    table = tbl.SlateTable(keys=table.keys, ts=ts, dirty=dirty, vals=vals,
+                           dropped=table.dropped)
+    return table, {}, batch.count()
 
 
 def apply_sequential(updater: SequentialUpdater, table: tbl.SlateTable,

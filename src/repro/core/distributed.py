@@ -15,6 +15,7 @@ bound the paper proves acceptable in production.
 """
 from __future__ import annotations
 
+from collections import deque
 from dataclasses import dataclass, field, replace
 from functools import partial
 from typing import Any, Dict, List, Optional, Tuple
@@ -36,6 +37,15 @@ from repro.core.workflow import Workflow
 from repro.slates import table as tbl
 
 
+def _axis_size(axis_names) -> int:
+    """Static size of the (possibly multi-) mesh axis we're mapped over.
+    ``jax.lax.axis_size`` only exists on newer jax; ``psum(1, axes)``
+    constant-folds to a python int on every version we support."""
+    if hasattr(jax.lax, "axis_size"):
+        return int(jax.lax.axis_size(axis_names))
+    return int(jax.lax.psum(1, axis_names))
+
+
 def _salt(name: str) -> int:
     h = 2166136261
     for c in name.encode():
@@ -51,7 +61,7 @@ def exchange(batch: EventBatch, dest, axis_names, cap_per_dest: int
     dropped and counted (bounded queues, paper section 4.3).  Returns the
     received local batch [n*cap] and the local overflow count.
     """
-    n = jax.lax.axis_size(axis_names)
+    n = _axis_size(axis_names)
     B = batch.capacity
     dest = jnp.where(batch.valid, dest, n)              # invalid -> sink
     order = jnp.argsort(dest, stable=True)
@@ -112,6 +122,7 @@ class DistributedEngine:
                   / self.n_shards)
         self.cap_per_dest = max(8, cap)
         self._step = None
+        self._chunk = None
 
     # ---- state ----
     def init_state(self):
@@ -162,11 +173,11 @@ class DistributedEngine:
 
         def deliver_all(items):
             nonlocal throttle_hits, exchange_dropped
-            work = list(items)
+            work = deque(items)
             for _ in range(len(work) + 64):
                 if not work:
                     return
-                stream, batch = work.pop(0)
+                stream, batch = work.popleft()
                 subs = wf.dests_of(stream)
                 if not subs:
                     outputs.setdefault(stream, []).append(batch)
@@ -207,7 +218,7 @@ class DistributedEngine:
                 processed[op.name] = processed[op.name] + batch.count()
             elif isinstance(op, AssociativeUpdater):
                 tables[op.name], ems, n = apply_mod.apply_associative(
-                    op, tables[op.name], batch, tick)
+                    op, tables[op.name], batch, tick, impl=cfg.fused)
                 emitted_now.extend(ems.items())
                 processed[op.name] = processed[op.name] + n
             elif isinstance(op, SequentialUpdater):
@@ -254,21 +265,21 @@ class DistributedEngine:
         return jnp.where(spill, secondary, primary)
 
     # ---- jit plumbing ----
+    def _spec_like(self, tree):
+        """Leading-dim-n_shards leaves are sharded, the rest replicated."""
+        sharded, rep = P(self.axes), P()
+        return jax.tree.map(
+            lambda x: sharded
+            if (hasattr(x, "ndim") and x.ndim >= 1
+                and x.shape[0] == self.n_shards) else rep, tree)
+
     def step(self, state, sources: Dict[str, EventBatch]):
         """sources: global batches with leading dim n_shards*B_loc or
         [n_shards, B_loc] — pass [n_shards, B_loc] (leading shard axis)."""
         from jax.experimental.shard_map import shard_map
         if self._step is None:
-            sharded = P(self.axes)
-            rep = P()
-
-            def spec_like(tree):
-                return jax.tree.map(
-                    lambda x: sharded
-                    if (hasattr(x, "ndim") and x.ndim >= 1
-                        and x.shape[0] == self.n_shards) else rep, tree)
-
-            state_specs = spec_like(state)
+            sharded, rep = P(self.axes), P()
+            state_specs = self._spec_like(state)
             src_specs = jax.tree.map(lambda _: sharded, sources)
 
             def run(st, src, rh, rs):
@@ -282,12 +293,49 @@ class DistributedEngine:
         rh, rs = self.ring.table()
         return self._step(state, sources, rh, rs)
 
+    def run_chunk(self, state, stacked_sources: Dict[str, EventBatch]):
+        """T device-resident ticks in one dispatch (DESIGN.md 2.2).
+
+        ``stacked_sources`` leaves are [T, n_shards, B, ...] — tick axis
+        leading (scanned), shard axis second (split by shard_map).
+        Returns ``(state, stacked_outputs, info)``; output leaves are
+        [T, n_shards, ...] and ``info['throttle_hits']`` is the
+        [T, n_shards] on-device per-tick trace, so the host syncs once
+        per chunk for the backpressure signal.
+        """
+        from jax.experimental.shard_map import shard_map
+        if self._chunk is None:
+            stacked = P(None, self.axes)
+            rep = P()
+            state_specs = self._spec_like(state)
+            src_specs = jax.tree.map(lambda _: stacked, stacked_sources)
+
+            def local_chunk(st, src, rh, rs):
+                def body(s, x):
+                    s2, outs = self._local_tick(s, x, rh, rs)
+                    return s2, (outs, s2["throttle_hits"])
+                final, (outs, hits) = jax.lax.scan(body, st, src)
+                return final, outs, hits
+
+            def run(st, src, rh, rs):
+                fn = shard_map(local_chunk, mesh=self.mesh,
+                               in_specs=(state_specs, src_specs, rep, rep),
+                               out_specs=(state_specs, stacked, stacked),
+                               check_rep=False)
+                return fn(st, src, rh, rs)
+
+            self._chunk = jax.jit(run, donate_argnums=(0,))
+        rh, rs = self.ring.table()
+        state, outs, hits = self._chunk(state, stacked_sources, rh, rs)
+        return state, outs, {"throttle_hits": hits}
+
     # ---- failure / elasticity (host side; master of section 4.3) ----
     def fail_shard(self, state, shard: int):
         """Machine crash: re-route ring; the dead shard's unflushed slates
         and queued events are lost (paper semantics)."""
         self.ring.fail(shard)
         self._step = None  # ring arrays change shape only on rebuild size
+        self._chunk = None
 
         def zap(leaf):
             if hasattr(leaf, "ndim") and leaf.ndim >= 1 and \

@@ -6,15 +6,24 @@ events are enqueued at their subscribers for the next tick.  End-to-end
 latency = graph depth x tick latency, mirroring Muppet's pipeline; there is
 no master on the data path.
 
+Two dispatch granularities (DESIGN.md section 2.2):
+  - ``step``: one jitted tick per host call (lowest latency to observe
+    state, one host<->device round-trip per tick);
+  - ``run_chunk``: N ticks rolled into a single ``jax.lax.scan`` over
+    pre-staged (stacked) sources — state, outputs, and the throttle
+    signal stay device-resident for the whole chunk, so the host pays
+    one dispatch + one sync per N ticks instead of per tick.
+
 The distributed engine (``core/distributed.py``) runs this same tick
 per-shard under ``shard_map`` with an all_to_all key-routing exchange in
 front of every enqueue.
 """
 from __future__ import annotations
 
+from collections import deque
 from dataclasses import dataclass, field
 from functools import partial
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -36,9 +45,54 @@ class EngineConfig:
     overflow: Dict[str, OverflowPolicy] = field(default_factory=dict)
     overflow_stream: Dict[str, str] = field(default_factory=dict)
     default_policy: OverflowPolicy = OverflowPolicy.DROP
+    # fused slate-update backend for sum_mergeable updaters:
+    # "auto" (Pallas on TPU, generic path elsewhere), "pallas",
+    # "interpret", "jnp", "ref", or "off" (always the generic path).
+    # See core/apply.apply_associative.
+    fused: str = "auto"
+    # ticks per device-resident scan in run(); 1 = per-tick dispatch
+    chunk_size: int = 8
 
     def policy_for(self, op_name: str) -> OverflowPolicy:
         return self.overflow.get(op_name, self.default_policy)
+
+
+def stack_sources(per_tick: Sequence[Dict[str, "EventBatch"]]
+                  ) -> Dict[str, "EventBatch"]:
+    """Stack T per-tick source dicts into one dict of EventBatches with
+    a leading tick axis [T, B, ...] — the pre-staged input format of
+    ``run_chunk`` (scanned over axis 0 on device).
+
+    Ticks may feed different stream subsets (including ``{}``) and
+    different batch capacities: missing streams are padded with
+    all-invalid batches and smaller batches are padded to the chunk's
+    max capacity, so a bursty ``source_fn`` stacks the same way it
+    would step.
+    """
+    assert per_tick, "need at least one tick of sources"
+    caps: Dict[str, int] = {}
+    templates: Dict[str, "EventBatch"] = {}
+    for d in per_tick:
+        for s, b in d.items():
+            if s not in caps or b.capacity > caps[s]:
+                caps[s], templates[s] = b.capacity, b
+
+    def get(d, s):
+        if s in d:
+            return d[s].pad_to(caps[s])
+        tmpl = templates[s]
+        return tmpl.mask(jnp.zeros_like(tmpl.valid))
+
+    return {s: jax.tree.map(lambda *xs: jnp.stack(xs),
+                            *[get(d, s) for d in per_tick])
+            for s in templates}
+
+
+def _limit_ingest(batch: "EventBatch", ingest) -> "EventBatch":
+    """Keep only the first ``ingest`` valid events (device-side source
+    throttling inside a chunk)."""
+    rank = jnp.cumsum(batch.valid.astype(jnp.int32)) - 1
+    return batch.mask(rank < ingest)
 
 
 class Engine:
@@ -48,6 +102,9 @@ class Engine:
         self.wf = workflow
         self.cfg = config or EngineConfig()
         self._step = jax.jit(self._tick, donate_argnums=(0,))
+        self._chunk = jax.jit(self._chunk_impl, donate_argnums=(0,),
+                              static_argnames=("n_ticks", "adapt",
+                                               "throttle_floor"))
 
     # ---- state ----
     def init_state(self) -> Dict[str, Any]:
@@ -84,11 +141,11 @@ class Engine:
             """Route batches to subscriber queues; overflow-stream policy
             may chain (bounded — cycles are a config error)."""
             nonlocal throttle_hits
-            work = list(items)
+            work = deque(items)
             for _ in range(len(work) + 64):
                 if not work:
                     return
-                stream, batch = work.pop(0)
+                stream, batch = work.popleft()
                 subs = wf.dests_of(stream)
                 if not subs:
                     outputs.setdefault(stream, []).append(batch)
@@ -123,7 +180,7 @@ class Engine:
                 processed[op.name] = processed[op.name] + batch.count()
             elif isinstance(op, AssociativeUpdater):
                 tables[op.name], ems, n = apply_mod.apply_associative(
-                    op, tables[op.name], batch, tick)
+                    op, tables[op.name], batch, tick, impl=cfg.fused)
                 emitted_now.extend(ems.items())
                 processed[op.name] = processed[op.name] + n
             elif isinstance(op, SequentialUpdater):
@@ -158,31 +215,113 @@ class Engine:
         }
         return new_state, out_batches
 
+    # ---- multi-tick chunk (jit: one dispatch, one sync per chunk) ----
+    def _chunk_impl(self, state, stacked_sources, ingest, *,
+                    n_ticks: int, adapt: bool, throttle_floor: int):
+        """Roll the tick over a [T, ...] stack of sources with lax.scan.
+
+        carry = (state, ingest).  With ``adapt`` the sources of each
+        tick are masked down to the first ``ingest`` valid events and
+        ingest halves/doubles *on device* from the tick's throttle-hits
+        delta — the device-resident version of ``run``'s source
+        throttling (paper section 5).  Without it the body is exactly
+        ``_tick``, so a chunk is bitwise-identical to T ``step`` calls.
+        """
+        ing_max = jnp.maximum(ingest, jnp.int32(self.cfg.batch_size))
+
+        def body(carry, src):
+            st, ing = carry
+            hits0 = st["throttle_hits"]
+            if adapt:
+                src = {s: _limit_ingest(b, ing) for s, b in src.items()}
+            st, outs = self._tick(st, src)
+            if adapt:
+                delta = st["throttle_hits"] - hits0
+                # halve under pressure; double back toward the ceiling
+                # (the caller's initial limit, at least batch_size)
+                ing = jnp.where(
+                    delta > 0,
+                    jnp.maximum(jnp.int32(throttle_floor), ing // 2),
+                    jnp.minimum(ing_max, ing * 2))
+            return (st, ing), (outs, st["throttle_hits"])
+
+        (state, ingest), (outs, hits) = jax.lax.scan(
+            body, (state, ingest), stacked_sources, length=n_ticks)
+        return state, outs, {"throttle_hits": hits, "ingest": ingest}
+
     # ---- host API ----
     def step(self, state, sources: Dict[str, EventBatch]):
         return self._step(state, sources)
 
+    def run_chunk(self, state, stacked_sources: Dict[str, EventBatch],
+                  n_ticks: Optional[int] = None, *,
+                  ingest: Optional[int] = None, throttle_floor: int = 8):
+        """Run T ticks in one device-resident dispatch.
+
+        ``stacked_sources``: dict of EventBatches with a leading tick
+        axis [T, B, ...] (see ``stack_sources``).  Returns
+        ``(state, stacked_outputs, info)`` where ``stacked_outputs``
+        leaves have leading dim T and ``info`` holds the on-device
+        per-tick ``throttle_hits`` trace plus the final ``ingest``.
+
+        With ``ingest=None`` the chunk is bitwise-identical to T
+        sequential ``step`` calls; passing an int enables on-device
+        source throttling (events beyond the running ingest limit are
+        masked before delivery).  An empty ``stacked_sources`` runs
+        ``n_ticks`` source-less (drain) ticks.
+        """
+        lead = {s: jax.tree.leaves(b)[0].shape[0]
+                for s, b in stacked_sources.items()}
+        t_dim = next(iter(lead.values())) if lead else n_ticks
+        if t_dim is None:
+            raise ValueError("empty stacked_sources needs an explicit "
+                             "n_ticks")
+        if n_ticks is not None and lead and t_dim != n_ticks:
+            raise ValueError(f"stacked sources have {t_dim} ticks, "
+                             f"caller asked for {n_ticks}")
+        adapt = ingest is not None
+        ing0 = jnp.asarray(ingest if adapt else self.cfg.batch_size,
+                           jnp.int32)
+        return self._chunk(state, stacked_sources, ing0, n_ticks=t_dim,
+                           adapt=adapt, throttle_floor=throttle_floor)
+
     def run(self, state, source_fn, n_ticks: int, *,
-            throttle_floor: int = 8):
+            throttle_floor: int = 8, chunk_size: Optional[int] = None):
         """Drive the engine; applies *source throttling* (paper section 5):
         if throttle hits grow, halve the ingest batch until queues drain.
-        ``source_fn(tick, max_events) -> dict[stream, EventBatch]``."""
+        ``source_fn(tick, max_events) -> dict[stream, EventBatch]``.
+
+        Ticks run in device-resident chunks of ``chunk_size`` (default
+        ``cfg.chunk_size``); the host reads the throttle signal once per
+        chunk — one sync per chunk, not per tick — and replays the
+        per-tick halve/double rule over the on-device hits trace, so the
+        ingest limit handed to ``source_fn`` reacts at chunk boundaries.
+        ``chunk_size=1`` recovers exact per-tick backpressure.
+        """
+        chunk = chunk_size or self.cfg.chunk_size
         outputs = []
         ingest = None
         last_hits = 0
-        for t in range(n_ticks):
-            sources = source_fn(t, ingest)
-            state, outs = self.step(state, sources)
-            outputs.append(outs)
-            hits = int(state["throttle_hits"])
-            if hits > last_hits:     # backpressure signal
-                cur = ingest if ingest is not None else self.cfg.batch_size
-                ingest = max(throttle_floor, cur // 2)
-            elif ingest is not None:
-                ingest = min(self.cfg.batch_size, ingest * 2)
-                if ingest == self.cfg.batch_size:
-                    ingest = None
-            last_hits = hits
+        t = 0
+        while t < n_ticks:
+            n = min(chunk, n_ticks - t)
+            per_tick = [source_fn(t + i, ingest) for i in range(n)]
+            state, outs, info = self.run_chunk(state,
+                                               stack_sources(per_tick), n)
+            for i in range(n):
+                outputs.append(jax.tree.map(lambda x, i=i: x[i], outs))
+            hits_trace = jax.device_get(info["throttle_hits"])  # 1 sync
+            for hits in (int(h) for h in hits_trace):
+                if hits > last_hits:     # backpressure signal
+                    cur = (ingest if ingest is not None
+                           else self.cfg.batch_size)
+                    ingest = max(throttle_floor, cur // 2)
+                elif ingest is not None:
+                    ingest = min(self.cfg.batch_size, ingest * 2)
+                    if ingest == self.cfg.batch_size:
+                        ingest = None
+                last_hits = hits
+            t += n
         return state, outputs
 
     # ---- introspection (paper section 4.4: reading slates live) ----

@@ -72,7 +72,22 @@ class AssociativeUpdater(Updater):
       total_k = combine(lift(e_1), ..., lift(e_m))   for key k's events
       slate_k' = merge(slate_k, total_k)
       emit(keys, old, new, ts) -> optional events (<=1 per key per stream)
+
+    ``sum_mergeable`` (DESIGN.md section 2.3): declare True iff
+      - ``combine(a, b)`` and ``merge(s, d)`` are both elementwise
+        additions of every slate/delta leaf, and
+      - a fresh slate (``init_slate``) is all zeros, and
+      - leaf values stay exact in f32 lanes (|v| < 2**24 for ints).
+    Counter-style updaters (paper Examples 1/2/4/5) all qualify.  The
+    engine then routes this updater through the fused
+    ``kernels/slate_update`` path: pack deltas -> segmented-sum combine
+    -> in-place scatter-add into the packed table, skipping the generic
+    gather/merge/scatter.  Declaring it for a non-additive updater is a
+    correctness bug, not a slowdown.  Updaters that emit downstream
+    events keep the generic path (emissions need old/new slates).
     """
+
+    sum_mergeable: bool = False
 
     def lift(self, batch: EventBatch):
         """EventBatch -> delta pytree with leading dim B."""

@@ -1,0 +1,93 @@
+"""Slate pytree <-> lane-aligned flat buffer for the fused update path.
+
+The ``slate_update`` Pallas kernel (``kernels/slate_update``) operates on
+a single ``[C, D]`` f32 table; real updaters declare slates as pytrees of
+mixed-dtype leaves.  This layer gives each updater a static *pack spec*:
+leaves are flattened in pytree order, each contributing
+``prod(shape_suffix)`` f32 columns, and D is padded up to a multiple of
+``LANE_ALIGN`` so the kernel's ``supported()`` check always holds.
+
+Pack/unpack are pure reshape/concat/cast ops, so under jit XLA fuses
+them into the surrounding gather/scatter — the kernel's
+``input_output_aliases`` donation chain stays intact through the tick.
+
+Contract (``AssociativeUpdater.sum_mergeable``): the packed
+representation is only sound when ``combine`` and ``merge`` are both
+elementwise float additions of every leaf and a fresh slate is all
+zeros; then a segmented sum of packed deltas scatter-added into the
+packed table is exactly ``merge(slate, combine(...))``.  Integer leaves
+(e.g. counters) ride in f32 lanes — exact up to 2**24, the same bound a
+float32 "sum" column already has.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+LANE_ALIGN = 8   # kernels/slate_update/kernel.supported(): D % 8 == 0
+
+
+def _is_spec_leaf(x):
+    return isinstance(x, tuple) and len(x) == 2 and isinstance(x[0], tuple)
+
+
+@dataclass(frozen=True)
+class PackSpec:
+    """Static layout: one (shape_suffix, dtype, width) per pytree leaf,
+    in ``jax.tree.leaves`` order, plus the padded row width D."""
+    leaves: Tuple[Tuple[Tuple[int, ...], Any, int], ...]
+    treedef: Any
+    width: int          # sum of leaf widths (unpadded)
+    padded_width: int   # D, multiple of LANE_ALIGN
+
+    @property
+    def d(self) -> int:
+        return self.padded_width
+
+
+def pack_spec(slate_spec) -> PackSpec:
+    """Build the layout from an updater's ``slate_spec()`` pytree of
+    ((shape_suffix), dtype) leaves."""
+    leaves, treedef = jax.tree.flatten(slate_spec, is_leaf=_is_spec_leaf)
+    rows = []
+    width = 0
+    for shape, dtype in leaves:
+        w = 1
+        for s in shape:
+            w *= int(s)
+        rows.append((tuple(int(s) for s in shape), jnp.dtype(dtype), w))
+        width += w
+    padded = max(LANE_ALIGN,
+                 -(-width // LANE_ALIGN) * LANE_ALIGN)
+    return PackSpec(leaves=tuple(rows), treedef=treedef, width=width,
+                    padded_width=padded)
+
+
+def pack(tree, spec: PackSpec, *, pad: bool = True) -> jnp.ndarray:
+    """[N, ...] pytree -> [N, D] f32.  ``pad`` zero-fills the tail
+    columns up to the lane-aligned width the kernel needs; jnp backends
+    can skip it and work at the exact width."""
+    leaves = jax.tree.leaves(tree)
+    assert len(leaves) == len(spec.leaves), (len(leaves), spec)
+    n = leaves[0].shape[0]
+    cols = [l.reshape(n, w).astype(jnp.float32)
+            for l, (_, _, w) in zip(leaves, spec.leaves)]
+    if pad and spec.padded_width > spec.width:
+        cols.append(jnp.zeros((n, spec.padded_width - spec.width),
+                              jnp.float32))
+    return cols[0] if len(cols) == 1 else jnp.concatenate(cols, axis=1)
+
+
+def unpack(buf: jnp.ndarray, spec: PackSpec):
+    """[N, D] f32 -> [N, ...] pytree with the original leaf dtypes."""
+    n = buf.shape[0]
+    leaves: List[jnp.ndarray] = []
+    off = 0
+    for shape, dtype, w in spec.leaves:
+        col = buf[:, off:off + w].reshape((n,) + shape)
+        leaves.append(col.astype(dtype))
+        off += w
+    return jax.tree.unflatten(spec.treedef, leaves)

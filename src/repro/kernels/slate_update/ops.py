@@ -1,4 +1,11 @@
-"""Dispatching wrapper for the fused slate update."""
+"""Dispatching wrapper for the fused slate update.
+
+``impl``:
+  - "auto":      Pallas on TPU, jnp oracle elsewhere
+  - "pallas":    force the kernel (falls back to ref if unsupported)
+  - "interpret": Pallas body in interpreter mode (CPU-testable)
+  - "ref":       pure-jnp segment-sum oracle
+"""
 from __future__ import annotations
 
 import jax
@@ -10,9 +17,12 @@ def slate_update(keys_sorted, deltas, slots, table_vals, *,
                  impl: str = "auto"):
     if impl == "auto":
         impl = "pallas" if jax.default_backend() == "tpu" else "ref"
-    if impl == "pallas":
+    if impl in ("pallas", "interpret"):
         from repro.kernels.slate_update import kernel as _k
         if _k.supported(deltas):
-            return _k.slate_update(keys_sorted, deltas, slots, table_vals)
+            return _k.slate_update(keys_sorted, deltas, slots, table_vals,
+                                   interpret=(impl == "interpret"))
         impl = "ref"
+    if impl != "ref":
+        raise ValueError(f"unknown slate_update impl {impl!r}")
     return _ref.slate_update(keys_sorted, deltas, slots, table_vals)

@@ -5,18 +5,24 @@ import jax
 import jax.numpy as jnp
 
 
-def slate_update(keys_sorted, deltas, slots, table_vals):
-    """Segment totals of sorted (key, delta) runs added into
-    table_vals[slot] for run-last rows (slot >= 0)."""
-    B = keys_sorted.shape[0]
+def run_totals(keys_sorted, deltas):
+    """[B] sorted keys + [B, D] deltas -> [B, D] f32 where every row
+    holds its run's total (shared by the oracle below and the fused
+    jnp backend in core/apply.py)."""
     seg_start = jnp.concatenate([
         jnp.ones((1,), bool), keys_sorted[1:] != keys_sorted[:-1]])
     seg_ids = jnp.cumsum(seg_start.astype(jnp.int32)) - 1
     totals = jax.ops.segment_sum(deltas.astype(jnp.float32), seg_ids,
-                                 num_segments=B)
-    run_totals = totals[seg_ids]                        # total at every row
+                                 num_segments=keys_sorted.shape[0])
+    return totals[seg_ids]
+
+
+def slate_update(keys_sorted, deltas, slots, table_vals):
+    """Segment totals of sorted (key, delta) runs added into
+    table_vals[slot] for run-last rows (slot >= 0)."""
+    totals = run_totals(keys_sorted, deltas)
     ok = slots >= 0
     safe = jnp.where(ok, slots, table_vals.shape[0])
     return table_vals.at[safe].add(
-        jnp.where(ok[:, None], run_totals, 0.0).astype(table_vals.dtype),
+        jnp.where(ok[:, None], totals, 0.0).astype(table_vals.dtype),
         mode="drop")

@@ -20,7 +20,7 @@ from typing import Any, Dict, Iterable, List, Optional, Tuple
 
 import msgpack
 import numpy as np
-import zstandard as zstd
+from repro.slates import _compress
 
 
 def _pack_tree(tree) -> bytes:
@@ -89,8 +89,8 @@ class KVStore:
         self.write_quorum = write_quorum
         self.read_quorum = read_quorum
         self.buckets = buckets
-        self._cctx = zstd.ZstdCompressor(level=3)
-        self._dctx = zstd.ZstdDecompressor()
+        self._cctx = _compress.Compressor(level=3)
+        self._dctx = _compress.Decompressor()
         self._lock = threading.Lock()
         self._buffer: Dict[Tuple[str, int], Record] = {}
         self._flush_buffer = flush_buffer

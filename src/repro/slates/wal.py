@@ -16,7 +16,7 @@ from typing import Dict, Iterator, Tuple
 import jax
 import msgpack
 import numpy as np
-import zstandard as zstd
+from repro.slates import _compress
 
 from repro.core.event import EventBatch
 
@@ -36,8 +36,8 @@ class WriteAheadLog:
     def __init__(self, path: str):
         self.path = path
         os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
-        self._cctx = zstd.ZstdCompressor(level=1)
-        self._dctx = zstd.ZstdDecompressor()
+        self._cctx = _compress.Compressor(level=1)
+        self._dctx = _compress.Decompressor()
         self._f = open(path, "ab")
 
     def append(self, tick: int, sources: Dict[str, EventBatch]):

@@ -1,10 +1,22 @@
 """Shared fixtures.  NOTE: no XLA_FLAGS here — tests see the real single
 CPU device; multi-shard behaviour is exercised via subprocess tests
 (test_multishard.py) so device-count init never leaks across suites."""
+try:                               # property tests need hypothesis; a
+    import hypothesis              # clean checkout without dev deps must
+except ImportError:                # still collect and run everything else
+    from tests import _hypothesis_stub
+    _hypothesis_stub.install()
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: subprocess / multi-device tests (deselect with "
+        "-m 'not slow')")
 
 from repro.core.event import EventBatch
 from repro.core.operators import AssociativeUpdater, Mapper, SequentialUpdater

@@ -1,0 +1,222 @@
+"""Device-resident multi-tick loop (``Engine.run_chunk``): bitwise
+equivalence with sequential ``step``, stacked output plumbing, on-device
+ingest throttling, and the chunked ``run`` driver."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.engine import Engine, EngineConfig, stack_sources
+from repro.core.queues import OverflowPolicy
+from repro.core.workflow import Workflow
+from tests.conftest import (CountingUpdater, LastValueUpdater,
+                            PassThroughMapper, make_batch)
+
+
+def counting_engine(**cfg):
+    wf = Workflow([PassThroughMapper(), CountingUpdater()],
+                  external_streams=("S1",))
+    eng = Engine(wf, EngineConfig(**cfg))
+    return eng, eng.init_state()
+
+
+def random_ticks(rng, n_ticks, cap=32, n_keys=20):
+    out = []
+    for t in range(n_ticks):
+        keys = rng.integers(0, n_keys, size=cap).astype(np.int32)
+        xs = rng.integers(0, 9, size=cap).astype(np.int32)
+        out.append({"S1": make_batch(keys, xs, ts=[t] * cap)})
+    return out
+
+
+def test_run_chunk_bitwise_identical_to_steps():
+    """Acceptance: run_chunk(n_ticks=32) == 32 sequential step() calls,
+    bitwise, on the counting workload."""
+    rng = np.random.default_rng(0)
+    ticks = random_ticks(rng, 32)
+
+    eng_a, st_a = counting_engine(batch_size=32, queue_capacity=256)
+    for src in ticks:
+        st_a, _ = eng_a.step(st_a, src)
+
+    eng_b, st_b = counting_engine(batch_size=32, queue_capacity=256)
+    st_b, outs, info = eng_b.run_chunk(st_b, stack_sources(ticks), 32)
+
+    la, lb = jax.tree.leaves(st_a), jax.tree.leaves(st_b)
+    assert len(la) == len(lb)
+    for a, b in zip(la, lb):
+        assert np.array_equal(np.asarray(a), np.asarray(b)), \
+            "chunked state diverged from sequential state"
+    assert int(st_b["tick"]) == 32
+    assert info["throttle_hits"].shape == (32,)
+
+
+def test_run_chunk_stacks_outputs():
+    """Engine outputs (streams nobody subscribes to) surface with a
+    leading tick axis and match per-tick step outputs."""
+    wf = Workflow([PassThroughMapper(), LastValueUpdater()],
+                  external_streams=("S1",))
+    eng = Engine(wf, EngineConfig(batch_size=16, queue_capacity=64))
+    ticks = [{"S1": make_batch([4, 4, 5], [10, 20, 30], ts=[0, 1, 2])}]
+    ticks += [{"S1": make_batch([0] * 3, valid=[False] * 3,
+                                ts=[50 + t] * 3)} for t in range(3)]
+
+    state = eng.init_state()
+    st, outs, _ = eng.run_chunk(state, stack_sources(ticks))
+    assert "S3" in outs
+    em = outs["S3"]
+    assert jax.tree.leaves(em)[0].shape[0] == 4      # tick axis
+    valid = np.asarray(em.valid)
+    xs = np.asarray(em.value["x"])[valid]
+    assert sorted(xs.tolist()) == [1, 1, 2]
+
+    # same emissions as per-tick stepping
+    state2 = eng.init_state()
+    got = []
+    for src in ticks:
+        state2, o = eng.step(state2, src)
+        if "S3" in o:
+            e = o["S3"]
+            got.extend(np.asarray(e.value["x"])[np.asarray(e.valid)]
+                       .tolist())
+    assert sorted(got) == [1, 1, 2]
+
+
+def test_run_chunk_validates_tick_count():
+    eng, state = counting_engine(batch_size=8, queue_capacity=32)
+    ticks = random_ticks(np.random.default_rng(1), 4, cap=8)
+    with pytest.raises(ValueError):
+        eng.run_chunk(state, stack_sources(ticks), 8)
+
+
+def test_run_chunk_on_device_throttling():
+    """With an ingest limit the chunk masks sources on device and the
+    carried limit halves under throttle pressure."""
+    eng, state = counting_engine(
+        batch_size=4, queue_capacity=8,
+        overflow={"M1": OverflowPolicy.THROTTLE})
+    ticks = random_ticks(np.random.default_rng(2), 8, cap=16)
+    st, outs, info = eng.run_chunk(state, stack_sources(ticks),
+                                   ingest=16, throttle_floor=2)
+    hits = np.asarray(info["throttle_hits"])
+    assert hits[-1] > 0                      # pressure was signalled
+    assert int(info["ingest"]) < 16          # and the limit backed off
+
+
+def test_run_chunk_ingest_above_batch_size_survives_quiet_ticks():
+    """An initial ingest limit above cfg.batch_size is the ceiling the
+    doubling recovers to — a quiet tick must not collapse it."""
+    eng, state = counting_engine(batch_size=8, queue_capacity=256,
+                                 overflow={"M1": OverflowPolicy.THROTTLE})
+    ticks = [{"S1": make_batch([k % 5 for k in range(16)],
+                               ts=[t] * 16)} for t in range(4)]
+    st, _, info = eng.run_chunk(state, stack_sources(ticks), ingest=64)
+    assert np.asarray(info["throttle_hits"])[-1] == 0   # no pressure
+    assert int(info["ingest"]) == 64                    # ceiling kept
+
+
+def test_run_driver_chunked_backpressure():
+    """The chunked run() still backs off ingest (one sync per chunk)."""
+    eng, _ = counting_engine(batch_size=4, queue_capacity=8,
+                             overflow={"M1": OverflowPolicy.THROTTLE})
+    state = eng.init_state()
+    sizes = []
+
+    def source(t, max_events):
+        n = 16
+        take = min(max_events, n) if max_events else n
+        sizes.append(take)
+        return {"S1": make_batch(list(range(n)), ts=[t] * n,
+                                 valid=[i < take for i in range(n)])}
+
+    state, outputs = eng.run(state, source, 12, chunk_size=4)
+    assert len(outputs) == 12
+    assert min(sizes) < 16    # the loop backed off under pressure
+
+
+def test_run_chunk_size_one_matches_legacy_per_tick():
+    """chunk_size=1 reproduces the old per-tick driver: one step per
+    tick, hits read every tick, same halve/double ingest schedule."""
+    def make_source(sizes):
+        def source(t, max_events):
+            n = 16
+            take = min(max_events, n) if max_events else n
+            sizes.append(take)
+            return {"S1": make_batch(list(range(n)), ts=[t] * n,
+                                     valid=[i < take for i in range(n)])}
+        return source
+
+    # the pre-chunking driver, verbatim
+    def legacy_run(eng, state, source_fn, n_ticks, throttle_floor=8):
+        ingest = None
+        last_hits = 0
+        for t in range(n_ticks):
+            state, _ = eng.step(state, source_fn(t, ingest))
+            hits = int(state["throttle_hits"])
+            if hits > last_hits:
+                cur = (ingest if ingest is not None
+                       else eng.cfg.batch_size)
+                ingest = max(throttle_floor, cur // 2)
+            elif ingest is not None:
+                ingest = min(eng.cfg.batch_size, ingest * 2)
+                if ingest == eng.cfg.batch_size:
+                    ingest = None
+            last_hits = hits
+        return state
+
+    cfg = dict(batch_size=4, queue_capacity=8,
+               overflow={"M1": OverflowPolicy.THROTTLE})
+    eng_a, st_a = counting_engine(**cfg)
+    legacy_sizes = []
+    st_a = legacy_run(eng_a, st_a, make_source(legacy_sizes), 10)
+
+    eng_b, st_b = counting_engine(**cfg)
+    new_sizes = []
+    st_b, _ = eng_b.run(st_b, make_source(new_sizes), 10, chunk_size=1)
+
+    assert new_sizes == legacy_sizes
+    assert min(new_sizes) < 16      # backpressure engaged in both
+    assert int(st_b["throttle_hits"]) == int(st_a["throttle_hits"])
+
+
+def test_run_handles_bursty_source_streams():
+    """source_fn may return different stream subsets per tick (e.g. {}
+    once the input is exhausted) — the chunked driver pads instead of
+    crashing, like the old per-tick loop."""
+    eng, state = counting_engine(batch_size=8, queue_capacity=64)
+
+    def source(t, max_events):
+        if t < 2:
+            return {"S1": make_batch([1, 2, 3], ts=[t] * 3)}
+        return {}
+
+    state, outputs = eng.run(state, source, 6, chunk_size=4)
+    assert len(outputs) == 6
+    for k, want in ((1, 2), (2, 2), (3, 2)):
+        slate = eng.read_slate(state, "U1", k)
+        assert slate is not None and int(slate["count"]) == want
+
+
+def test_stack_sources_pads_missing_streams():
+    ticks = [{"S1": make_batch([1, 2])}, {},
+             {"S1": make_batch([3, 4])}]
+    stacked = stack_sources(ticks)
+    assert jax.tree.leaves(stacked["S1"])[0].shape[0] == 3
+    valid = np.asarray(stacked["S1"].valid)
+    assert valid[0].all() and not valid[1].any() and valid[2].all()
+
+
+def test_run_handles_varying_batch_capacities():
+    """source_fn may emit differently-sized batches per tick (e.g. a
+    final partial batch); stack_sources pads to the chunk max."""
+    eng, state = counting_engine(batch_size=8, queue_capacity=64)
+
+    def source(t, max_events):
+        n = 4 - t if t < 3 else 1        # capacities 4, 3, 2, 1, 1, ...
+        return {"S1": make_batch([1] * n, ts=[t] * n)}
+
+    state, outputs = eng.run(state, source, 6, chunk_size=3)
+    assert len(outputs) == 6
+    state, _ = eng.step(state, {"S1": make_batch(
+        [0] * 4, valid=[False] * 4, ts=[99] * 4)})
+    assert int(eng.read_slate(state, "U1", 1)["count"]) == 4 + 3 + 2 + 3

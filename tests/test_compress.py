@@ -1,0 +1,65 @@
+"""Self-describing compression frames: WAL / KV blobs must replay in an
+environment with a different codec installed than the writer's."""
+import pytest
+
+from repro.slates import _compress
+
+
+def test_roundtrip():
+    c, d = _compress.Compressor(3), _compress.Decompressor()
+    data = b"slate " * 100
+    frame = c.compress(data)
+    assert frame[:1] in (b"z", b"g")        # tagged
+    assert d.decompress(frame) == data
+
+
+def test_zlib_frame_decompresses_everywhere():
+    """A zlib-tagged frame (written where zstandard was absent) must
+    decompress regardless of the local codec preference."""
+    import zlib
+    frame = b"g" + zlib.compress(b"payload", 1)
+    assert _compress.Decompressor().decompress(frame) == b"payload"
+
+
+def test_unknown_tag_rejected():
+    with pytest.raises(ValueError):
+        _compress.Decompressor().decompress(b"?garbage")
+
+
+def test_legacy_untagged_zlib_blob_sniffed():
+    """Blobs written before the codec tag existed start with the raw
+    codec header; the decompressor must still read them."""
+    import zlib
+    legacy = zlib.compress(b"old slate", 3)
+    assert legacy[:1] == b"\x78"
+    assert _compress.Decompressor().decompress(legacy) == b"old slate"
+
+
+@pytest.mark.skipif(not _compress.HAVE_ZSTD, reason="needs zstandard")
+def test_legacy_untagged_zstd_blob_sniffed():
+    import zstandard
+    legacy = zstandard.ZstdCompressor(3).compress(b"old slate")
+    assert _compress.Decompressor().decompress(legacy) == b"old slate"
+
+
+@pytest.mark.skipif(_compress.HAVE_ZSTD, reason="zstandard installed")
+def test_zstd_frame_without_zstandard_errors_actionably():
+    with pytest.raises(RuntimeError, match="zstandard"):
+        _compress.Decompressor().decompress(b"z\x28\xb5\x2f\xfd")
+
+
+def test_wal_replay_roundtrip(tmp_path):
+    import numpy as np
+    from repro.core.event import EventBatch
+    from repro.slates.wal import WriteAheadLog
+    p = str(tmp_path / "w.log")
+    wal = WriteAheadLog(p)
+    b = EventBatch.of(key=np.array([1, 2], np.int32),
+                      value={"x": np.ones(2, np.float32)})
+    wal.append(0, {"S1": b})
+    wal.close()
+    wal2 = WriteAheadLog(p)
+    ticks = list(wal2.replay())
+    wal2.close()
+    assert len(ticks) == 1 and ticks[0][0] == 0
+    assert np.asarray(ticks[0][1]["S1"].key).tolist() == [1, 2]
