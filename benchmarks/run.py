@@ -328,6 +328,75 @@ def bench_wal():
         wal2.close()
 
 
+def bench_durability():
+    """Durable-runtime costs (DESIGN.md section 10): the write-ahead
+    append on the ingest path (target: <= 15% of latency_per_tick) and
+    end-to-end crash recovery (store restore + WAL replay)."""
+    from repro.core.durability import DurabilityConfig
+    from repro.core.engine import Engine, EngineConfig
+    from repro.core.workflow import Workflow
+    from repro.slates.flush import FlushConfig, FlushPolicy
+    from repro.slates.wal import WriteAheadLog
+    from benchmarks.workloads import (CounterUpdater, SourceMapper,
+                                      zipf_batch)
+
+    rng = np.random.default_rng(8)
+    lat = next((u for n, u, _ in ROWS if n == "latency_per_tick"), None)
+
+    # WAL append of one 256-event tick (what run() adds per tick)
+    with tempfile.TemporaryDirectory() as d:
+        wal = WriteAheadLog(os.path.join(d, "w.log"))
+        batches = [zipf_batch(rng, 256, tick=t) for t in range(8)]
+        box = {"t": 0}
+
+        def append():
+            wal.append(box["t"], {"S1": batches[box["t"] % 8]})
+            box["t"] += 1
+
+        us = _time(append, n=50)
+        pct = f", {100 * us / lat:.1f}% of latency_per_tick" if lat else ""
+        row("wal_append_per_tick", us,
+            f"write-ahead ingest logging (256-event batch{pct}; "
+            f"target <= 15%)")
+        wal.close()
+
+    # crash recovery: 32 durable ticks @256 events, flush every 8,
+    # crash, then restore + replay on a fresh engine
+    def build(d):
+        wf = Workflow([SourceMapper(), CounterUpdater()],
+                      external_streams=("S1",))
+        cfg = EngineConfig(
+            batch_size=256, queue_capacity=2048, chunk_size=8,
+            durability=DurabilityConfig(
+                dir=d, flush=FlushConfig(policy=FlushPolicy.EVERY_K,
+                                         every_k=8)))
+        return Engine(wf, cfg)
+
+    with tempfile.TemporaryDirectory() as d:
+        eng = build(d)
+
+        def src(t, ingest=None):
+            r = np.random.default_rng(t)
+            return {"S1": zipf_batch(r, 256, tick=t)}
+
+        state, _ = eng.run(eng.init_state(), src, 32)
+        n_slates = int(np.asarray(jax.device_get(
+            state["tables"]["U1"].occupancy())))
+        del state                      # crash
+        eng.close()
+
+        eng2 = build(d)
+        t0 = time.perf_counter()
+        s2 = eng2.recover()
+        jax.block_until_ready(s2["tick"])
+        us = (time.perf_counter() - t0) * 1e6
+        tick2 = int(np.asarray(jax.device_get(s2["tick"])))
+        eng2.close()
+        row("recovery_time", us,
+            f"restore {n_slates} slates + replay to tick {tick2} "
+            f"({us/1e3:.1f} ms; includes replay jit compile)")
+
+
 # ----------------------------------------------------------------------
 # serving: tokens/s on the reduced LM (slate-managed decode)
 # ----------------------------------------------------------------------
@@ -388,6 +457,7 @@ def main() -> None:
     bench_slate_store()
     bench_failover()
     bench_wal()
+    bench_durability()
     bench_serving()
     bench_kernels()
     root = os.path.join(os.path.dirname(__file__), "..")

@@ -27,6 +27,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import apply as apply_mod
 from repro.core import queues as q_mod
+from repro.core.durability import (DurabilityConfig, EngineDurability,
+                                   merge_replay_ticks)
 from repro.core.engine import EngineConfig
 from repro.core.event import EventBatch, concat
 from repro.core.hashing import HashRing, route, route_secondary
@@ -34,6 +36,7 @@ from repro.core.operators import (AssociativeUpdater, Mapper,
                                   SequentialUpdater, Updater)
 from repro.core.queues import OverflowPolicy
 from repro.core.workflow import Workflow
+from repro.slates import flush as flush_mod
 from repro.slates import table as tbl
 
 
@@ -123,6 +126,10 @@ class DistributedEngine:
         self.cap_per_dest = max(8, cap)
         self._step = None
         self._chunk = None
+        self._empty_step = None
+        self.dur: Optional[EngineDurability] = None
+        if self.cfg.durability is not None:
+            self.attach_durability(self.cfg.durability)
 
     # ---- state ----
     def init_state(self):
@@ -329,6 +336,198 @@ class DistributedEngine:
         state, outs, hits = self._chunk(state, stacked_sources, rh, rs)
         return state, outs, {"throttle_hits": hits}
 
+    # ---- durability (DESIGN.md section 10): per-shard WAL + frontier --
+    def attach_durability(self, cfg: DurabilityConfig):
+        """One WAL per shard (on durable storage, the role Cassandra's
+        commit log plays), one shared slate store, one barrier frontier.
+        Incompatible with two-choice dispatch: partial aggregates of the
+        same key on two shards would clobber each other in the store."""
+        if self.cfg.two_choice_threshold:
+            raise ValueError("durability requires two_choice_threshold=0 "
+                             "(per-key partials are not store-mergeable)")
+        self.dur = EngineDurability(cfg, self.wf,
+                                    self.cfg.queue_capacity,
+                                    self.cfg.batch_size,
+                                    n_shards=self.n_shards)
+
+    def append_sources(self, tick: int, sources: Dict[str, EventBatch]):
+        """Write-ahead: log each shard's slice of the [n_shards, B]
+        source batches to that shard's WAL (call before ``step``)."""
+        host = {s: jax.tree.map(lambda x: np.asarray(jax.device_get(x)), b)
+                for s, b in sources.items()}
+        for sh in range(self.n_shards):
+            sl = {s: EventBatch(sid=b.sid[sh], ts=b.ts[sh], key=b.key[sh],
+                                value=jax.tree.map(lambda x: x[sh],
+                                                   b.value),
+                                valid=b.valid[sh])
+                  for s, b in host.items()}
+            sl = {s: b for s, b in sl.items() if b.valid.any()}
+            self.dur.append(tick, sl, shard=sh)
+
+    def _step_empty(self, state):
+        """One source-less tick (drain barriers, replay gap ticks)."""
+        from jax.experimental.shard_map import shard_map
+        if self._empty_step is None:
+            sharded, rep = P(self.axes), P()
+            state_specs = self._spec_like(state)
+
+            def run(st, rh, rs):
+                fn = shard_map(
+                    lambda s, h, r: self._local_tick(s, {}, h, r),
+                    mesh=self.mesh,
+                    in_specs=(state_specs, rep, rep),
+                    out_specs=sharded, check_rep=False)
+                return fn(st, rh, rs)
+
+            self._empty_step = jax.jit(run, donate_argnums=(0,))
+        rh, rs = self.ring.table()
+        state, _ = self._empty_step(state, rh, rs)
+        return state
+
+    def _drain_queues(self, state, max_ticks: int):
+        d = 0
+        while d < max_ticks:
+            sizes = jax.device_get({k: q.size
+                                    for k, q in state["queues"].items()})
+            if all(int(v.sum()) == 0 for v in sizes.values()):
+                break
+            state = self._step_empty(state)
+            d += 1
+        return state, d
+
+    def _flush_boundary(self, state, tick: int):
+        """Barrier-drain, flush every shard's dirty slates (one
+        device_get per table), record the frontier."""
+        dur = self.dur
+        if dur.cfg.barrier:
+            state, d = self._drain_queues(state, dur.cfg.drain_ticks_max)
+            tick += d
+        new_tables = {}
+        for up in self.wf.updaters():
+            t = state["tables"][up.name]
+            dirty = np.asarray(jax.device_get(t.dirty))
+            keys = np.asarray(jax.device_get(t.keys))
+            ts = np.asarray(jax.device_get(t.ts))
+            vals = jax.tree.map(lambda v: np.asarray(jax.device_get(v)),
+                                t.vals)
+            for sh in range(self.n_shards):
+                idx = np.nonzero(dirty[sh] & (keys[sh] != -1))[0]
+                dur.flusher.flush_rows(
+                    up.name, keys[sh][idx], ts[sh][idx],
+                    jax.tree.map(lambda v: v[sh][idx], vals), up.ttl)
+            new_tables[up.name] = tbl.SlateTable(
+                keys=t.keys, ts=t.ts, dirty=jnp.zeros_like(t.dirty),
+                vals=t.vals, dropped=t.dropped)
+        state = dict(state)
+        state["tables"] = new_tables
+        dur.record_frontier(tick)
+        return state, tick
+
+    def run_durable(self, state, source_fn, n_ticks: int, *,
+                    start_tick: int = 0):
+        """Host driver: per-tick step with write-ahead logging and
+        policy-driven flush boundaries.  ``source_fn(tick)`` returns
+        [n_shards, B]-leading source batches.  Returns
+        ``(state, next_tick)`` (drain ticks included)."""
+        assert self.dur is not None, "attach_durability first"
+        t = start_tick
+        for _ in range(n_ticks):
+            srcs = source_fn(t)
+            self.append_sources(t, srcs)
+            state, _ = self.step(state, srcs)
+            t += 1
+            if self.dur.due(t, state["tables"]):
+                state, t = self._flush_boundary(state, t)
+        return state, t
+
+    def recover(self, *, frontier=None):
+        """Rebuild sharded state after losing any subset of machines:
+        flushed slates are re-inserted on whatever shard the *current*
+        ring routes them to (so a dead shard's keys land on survivors —
+        the elastic-restore move of ``distributed/checkpoint.py``:
+        host rows -> ``device_put`` with the target sharding), then each
+        shard's WAL suffix replays through the shard_map tick, which
+        re-routes every replayed event with the current ring."""
+        dur = self.dur
+        assert dur is not None, "attach_durability first"
+        frontier = frontier or dur.frontier
+        f_tick = int(frontier.tick)
+        offs = list(frontier.wal_offset) \
+            if isinstance(frontier.wal_offset, (list, tuple)) \
+            else [frontier.wal_offset] * self.n_shards
+
+        state = jax.device_get(self.init_state())
+        state["tick"] = np.full((self.n_shards,), f_tick, np.int32)
+        rh, rs = self.ring.table()
+        for up in self.wf.updaters():
+            recs = dur.store.scan_records(
+                up.name, now=f_tick if up.ttl else None)
+            if not recs:
+                continue
+            ks = np.asarray(sorted(recs), np.int32)
+            shard_of = np.asarray(jax.device_get(
+                route(jnp.asarray(ks), _salt(up.name), rh, rs)))
+            t = state["tables"][up.name]
+            per_shard = []
+            for sh in range(self.n_shards):
+                local = jax.tree.map(lambda x: jnp.asarray(x[sh]), t)
+                sel = np.nonzero(shard_of == sh)[0]
+                if len(sel):
+                    ts = np.asarray([recs[int(k)][0] for k in ks[sel]],
+                                    np.int32)
+                    slates = jax.tree.map(
+                        lambda *r: np.stack(r),
+                        *[recs[int(k)][1] for k in ks[sel]])
+                    local = flush_mod.restore_into(local, ks[sel],
+                                                   slates, ts)
+                per_shard.append(jax.device_get(local))
+            state["tables"][up.name] = jax.tree.map(
+                lambda *xs: np.stack(xs), *per_shard)
+        state = jax.tree.map(jnp.asarray, state,
+                             is_leaf=lambda x: isinstance(x, np.ndarray))
+        state = jax.device_put(state, self._shard_tree(state))
+
+        cur = f_tick
+        for tk, by_shard in merge_replay_ticks(dur.wals, offs):
+            if tk < f_tick:
+                continue
+            while cur < tk:
+                state = self._step_empty(state)
+                cur += 1
+            state, _ = self.step(state, self._stack_shard_sources(
+                by_shard))
+            cur += 1
+        return state
+
+    def _stack_shard_sources(self, by_shard: Dict[int, Dict[str, Any]]
+                             ) -> Dict[str, EventBatch]:
+        """Per-shard replay records -> [n_shards, B] source batches
+        (missing shards/streams become all-invalid rows)."""
+        caps: Dict[str, int] = {}
+        tmpl: Dict[str, EventBatch] = {}
+        for src in by_shard.values():
+            for s, b in src.items():
+                if s not in caps or b.capacity > caps[s]:
+                    caps[s], tmpl[s] = b.capacity, b
+
+        def one(sh, s):
+            b = by_shard.get(sh, {}).get(s)
+            if b is None:
+                t = tmpl[s]
+                return EventBatch.empty(
+                    caps[s], jax.tree.map(
+                        lambda a: (a.shape[1:], a.dtype), t.value))
+            return EventBatch(sid=jnp.asarray(b.sid),
+                              ts=jnp.asarray(b.ts),
+                              key=jnp.asarray(b.key),
+                              value=jax.tree.map(jnp.asarray, b.value),
+                              valid=jnp.asarray(b.valid)).pad_to(caps[s])
+
+        return {s: jax.tree.map(
+            lambda *xs: jnp.stack(xs),
+            *[one(sh, s) for sh in range(self.n_shards)])
+            for s in tmpl}
+
     # ---- failure / elasticity (host side; master of section 4.3) ----
     def fail_shard(self, state, shard: int):
         """Machine crash: re-route ring; the dead shard's unflushed slates
@@ -336,6 +535,7 @@ class DistributedEngine:
         self.ring.fail(shard)
         self._step = None  # ring arrays change shape only on rebuild size
         self._chunk = None
+        self._empty_step = None
 
         def zap(leaf):
             if hasattr(leaf, "ndim") and leaf.ndim >= 1 and \

@@ -1,0 +1,204 @@
+"""Durability layer threaded through the engine drivers (DESIGN.md 10).
+
+Muppet keeps slates recoverable by continuously flushing them to
+Cassandra and restoring on restart (paper sections 4.2-4.3); event
+replay is the paper's stated future work.  This module wires both into
+one runtime:
+
+- every ingested source batch is appended to a per-shard
+  :class:`~repro.slates.wal.WriteAheadLog` *before* the tick that
+  consumes it (write-ahead);
+- per :class:`~repro.slates.flush.FlushPolicy`, every updater's
+  :class:`~repro.slates.table.SlateTable` is flushed to the
+  :class:`~repro.slates.kvstore.KVStore` and a
+  :class:`~repro.slates.flush.FlushFrontier` ``(tick, wal_offset)`` is
+  recorded atomically once the writes are durable;
+- recovery = restore flushed slates + replay the WAL suffix from the
+  frontier through the same jitted tick path.
+
+Guarantees (see DESIGN.md section 10 for the full table): with the
+default drain **barrier** the pipeline is empty at every frontier, so
+replay applies each surviving event exactly once — bitwise-identical
+slates for associative updaters.  With ``barrier=False`` the frontier is
+set ``replay_slack`` ticks behind the flush, which re-applies in-flight
+events already captured by the snapshot: *at-least-once*, acceptable for
+idempotent sequential updaters (e.g. last-value), wrong for counters.
+"""
+from __future__ import annotations
+
+import os
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+from repro.slates.flush import FlushConfig, Flusher, FlushFrontier
+from repro.slates.kvstore import KVStore
+from repro.slates.wal import WriteAheadLog
+
+
+@dataclass
+class DurabilityConfig:
+    """Pure configuration (paths + knobs) — runtime handles live in
+    :class:`EngineDurability` so configs stay copyable/shareable."""
+
+    dir: str                          # root: wal(s), store, FRONTIER.json
+    flush: FlushConfig = field(default_factory=FlushConfig)
+    # drain in-flight queues before each flush: exactly-once replay.
+    # False skips the drain ticks and backdates the frontier by
+    # replay_slack: at-least-once replay (see module docstring).
+    barrier: bool = True
+    drain_ticks_max: int = 64
+    replay_slack: Optional[int] = None   # None = auto from workflow shape
+    truncate_wal: bool = False        # compact the log at each frontier
+    sync_wal: bool = False            # fsync every append
+    # KV store replication (1 replica: plain local dir; >1 simulates the
+    # paper's Cassandra quorum cluster)
+    replicas: int = 1
+    write_quorum: int = 1
+    read_quorum: int = 1
+
+    def store_root(self) -> str:
+        return os.path.join(self.dir, "store")
+
+    def wal_path(self, shard: Optional[int] = None) -> str:
+        if shard is None:
+            return os.path.join(self.dir, "wal.log")
+        return os.path.join(self.dir, f"shard_{shard:03d}", "wal.log")
+
+    def frontier_path(self) -> str:
+        return os.path.join(self.dir, "FRONTIER.json")
+
+    def make_store(self) -> KVStore:
+        return KVStore(self.store_root(), replicas=self.replicas,
+                       write_quorum=self.write_quorum,
+                       read_quorum=self.read_quorum)
+
+
+def auto_replay_slack(workflow, queue_capacity: int,
+                      batch_size: int) -> int:
+    """Sound residence bound for barrier-less frontiers: an event sits at
+    most ceil(Q/B) ticks per hop (bounded FIFO draining B per tick), for
+    at most graph-depth hops.  Sustained hotspot deferral past this bound
+    voids the guarantee — use the barrier (DESIGN.md 10.3)."""
+    depth = max(1, len(workflow.operators))
+    per_hop = -(-queue_capacity // max(1, batch_size))   # ceil
+    return depth * (1 + per_hop) + 1
+
+
+class EngineDurability:
+    """Runtime durability state for one engine (or one shard group).
+
+    Owns the WAL(s), the KV store + background flusher, and the frontier
+    file.  ``n_shards=None`` is the single-shard engine (one WAL);
+    an int opens one WAL per shard sharing a single store + frontier
+    barrier (each shard's offset tracked independently).
+    """
+
+    def __init__(self, cfg: DurabilityConfig, workflow,
+                 queue_capacity: int, batch_size: int,
+                 n_shards: Optional[int] = None):
+        self.cfg = cfg
+        self.wf = workflow
+        self.n_shards = n_shards
+        os.makedirs(cfg.dir, exist_ok=True)
+        self.store = cfg.make_store()
+        self.flusher = Flusher(self.store, cfg.flush)
+        if n_shards is None:
+            self.wals = [WriteAheadLog(cfg.wal_path(), sync=cfg.sync_wal)]
+        else:
+            self.wals = [WriteAheadLog(cfg.wal_path(s), sync=cfg.sync_wal)
+                         for s in range(n_shards)]
+        self.frontier = FlushFrontier.load(cfg.frontier_path()) or \
+            FlushFrontier(tick=0, wal_offset=self._offsets())
+        self.slack = cfg.replay_slack if cfg.replay_slack is not None \
+            else auto_replay_slack(workflow, queue_capacity, batch_size)
+        # tick -> per-wal offsets *before* that tick's appends; needed to
+        # backdate barrier-less frontiers.  Pruned against the frontier.
+        self._tick_offsets: Dict[int, List[int]] = {}
+
+    @property
+    def wal(self) -> WriteAheadLog:
+        assert self.n_shards is None, "per-shard WALs: use .wals[s]"
+        return self.wals[0]
+
+    def _offsets(self) -> List[int]:
+        return [w.offset for w in self.wals]
+
+    # ---- write-ahead ----
+    def append(self, tick: int, sources, shard: Optional[int] = None):
+        """Log one tick's sources (single-shard) or one shard's slice.
+        Must run *before* the tick executes (write-ahead)."""
+        if not self.cfg.barrier:
+            # barrier-less frontiers backdate by replay_slack ticks, so
+            # only a sliding window of pre-append offsets is needed
+            self._tick_offsets.setdefault(int(tick), self._offsets())
+            for t in [t for t in self._tick_offsets
+                      if t < int(tick) - 2 * self.slack]:
+                del self._tick_offsets[t]
+        if sources:
+            self.wals[shard or 0].append(tick, sources)
+
+    # ---- frontier ----
+    def due(self, tick: int, tables=None) -> bool:
+        """Flush decision at a chunk boundary.  EVERY_K fires when the
+        boundary crossed a multiple of k since the last frontier."""
+        from repro.slates.flush import FlushPolicy
+        p = self.cfg.flush.policy
+        if p is FlushPolicy.IMMEDIATE:
+            return tick > self.frontier.tick
+        if p is FlushPolicy.EVERY_K:
+            k = self.cfg.flush.every_k
+            return tick // k > self.frontier.tick // k
+        if tables is None:
+            return False
+        return any(self.flusher.should_flush(tick, t)
+                   for t in tables.values())
+
+    def record_frontier(self, tick: int, meta: Optional[dict] = None):
+        """Drain the flusher (re-raises on store failure), then advance
+        and persist the frontier.  With the barrier the pipeline is
+        empty, so the frontier is exactly ``tick``; without it the
+        frontier is backdated by ``replay_slack`` ticks.  ``meta`` is an
+        opaque driver cursor stored alongside (None keeps the previous
+        one)."""
+        self.flusher.drain()
+        if self.cfg.barrier:
+            f_tick, f_offs = int(tick), self._offsets()
+        else:
+            f_tick = max(self.frontier.tick, int(tick) - self.slack)
+            cands = [offs for t, offs in self._tick_offsets.items()
+                     if t >= f_tick]
+            f_offs = [min(c[i] for c in cands) if cands
+                      else self.wals[i].offset
+                      for i in range(len(self.wals))]
+        self._tick_offsets = {t: o for t, o in self._tick_offsets.items()
+                              if t >= f_tick}
+        self.frontier = FlushFrontier(
+            tick=f_tick,
+            wal_offset=f_offs[0] if self.n_shards is None else f_offs,
+            meta=meta if meta is not None else self.frontier.meta)
+        self.frontier.save(self.cfg.frontier_path())
+        if self.cfg.truncate_wal:
+            for w, off in zip(self.wals, f_offs):
+                w.truncate_before(off)
+
+    def frontier_offsets(self) -> List[int]:
+        off = self.frontier.wal_offset
+        return list(off) if isinstance(off, (list, tuple)) else [off]
+
+    def close(self):
+        try:
+            self.flusher.close()
+        finally:
+            for w in self.wals:
+                w.close()
+
+
+def merge_replay_ticks(wals: List[WriteAheadLog], offsets: List[int]):
+    """Merge per-shard WAL suffixes into a sorted per-tick stream:
+    yields ``(tick, {shard: {stream: EventBatch}})``."""
+    by_tick: Dict[int, Dict[int, dict]] = {}
+    for s, (w, off) in enumerate(zip(wals, offsets)):
+        for t, src in w.replay(from_offset=off):
+            by_tick.setdefault(int(t), {})[s] = src
+    for t in sorted(by_tick):
+        yield t, by_tick[t]

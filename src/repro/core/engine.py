@@ -27,14 +27,17 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import apply as apply_mod
 from repro.core import queues as q_mod
+from repro.core.durability import DurabilityConfig, EngineDurability
 from repro.core.event import EventBatch, concat
 from repro.core.operators import (AssociativeUpdater, Mapper,
                                   SequentialUpdater, Updater)
 from repro.core.queues import OverflowPolicy
 from repro.core.workflow import Workflow
+from repro.slates import flush as flush_mod
 from repro.slates import table as tbl
 
 
@@ -52,6 +55,9 @@ class EngineConfig:
     fused: str = "auto"
     # ticks per device-resident scan in run(); 1 = per-tick dispatch
     chunk_size: int = 8
+    # durable runtime (WAL + slate flush + crash recovery, DESIGN.md 10);
+    # None = fast-but-amnesiac (the seed behavior)
+    durability: Optional[DurabilityConfig] = None
 
     def policy_for(self, op_name: str) -> OverflowPolicy:
         return self.overflow.get(op_name, self.default_policy)
@@ -105,6 +111,11 @@ class Engine:
         self._chunk = jax.jit(self._chunk_impl, donate_argnums=(0,),
                               static_argnames=("n_ticks", "adapt",
                                                "throttle_floor"))
+        self.dur: Optional[EngineDurability] = None
+        if self.cfg.durability is not None:
+            self.dur = EngineDurability(self.cfg.durability, workflow,
+                                        self.cfg.queue_capacity,
+                                        self.cfg.batch_size)
 
     # ---- state ----
     def init_state(self) -> Dict[str, Any]:
@@ -286,7 +297,8 @@ class Engine:
                            adapt=adapt, throttle_floor=throttle_floor)
 
     def run(self, state, source_fn, n_ticks: int, *,
-            throttle_floor: int = 8, chunk_size: Optional[int] = None):
+            throttle_floor: int = 8, chunk_size: Optional[int] = None,
+            source_offset: int = 0):
         """Drive the engine; applies *source throttling* (paper section 5):
         if throttle hits grow, halve the ingest batch until queues drain.
         ``source_fn(tick, max_events) -> dict[stream, EventBatch]``.
@@ -297,15 +309,38 @@ class Engine:
         per-tick halve/double rule over the on-device hits trace, so the
         ingest limit handed to ``source_fn`` reacts at chunk boundaries.
         ``chunk_size=1`` recovers exact per-tick backpressure.
+
+        With ``cfg.durability`` set, every per-tick source dict is
+        appended to the WAL *before* the chunk that consumes it, and at
+        chunk boundaries the flush policy may trigger a durable slate
+        flush + frontier advance (DESIGN.md section 10).  Durability
+        drain ticks advance the engine tick counter, so ``source_fn``'s
+        tick argument (the source index) and ``stats()['tick']`` diverge
+        by the number of drain ticks.
+
+        ``source_offset`` resumes an interrupted source stream:
+        ``source_fn`` is called with absolute indices ``offset ..
+        offset+n_ticks`` and chunk grouping stays aligned to the absolute
+        index, so a recovered run flushes (and drains) at the same
+        boundaries as the uninterrupted run — the bitwise-parity
+        contract of ``recover()``.
         """
         chunk = chunk_size or self.cfg.chunk_size
         outputs = []
         ingest = None
-        last_hits = 0
-        t = 0
-        while t < n_ticks:
-            n = min(chunk, n_ticks - t)
+        # throttle_hits is cumulative: resuming from prior state (second
+        # run() call, or a recovered state) must not read old hits as a
+        # fresh backpressure signal
+        last_hits = int(jax.device_get(state["throttle_hits"]))
+        t = source_offset
+        end = source_offset + n_ticks
+        eng_tick = int(jax.device_get(state["tick"])) if self.dur else 0
+        while t < end:
+            n = min(chunk - t % chunk, end - t)
             per_tick = [source_fn(t + i, ingest) for i in range(n)]
+            if self.dur:
+                for i, srcs in enumerate(per_tick):
+                    self.dur.append(eng_tick + i, srcs)
             state, outs, info = self.run_chunk(state,
                                                stack_sources(per_tick), n)
             for i in range(n):
@@ -322,7 +357,120 @@ class Engine:
                         ingest = None
                 last_hits = hits
             t += n
+            eng_tick += n
+            if self.dur and self.dur.due(eng_tick, state["tables"]):
+                state, eng_tick = self._flush_boundary(
+                    state, eng_tick, meta={"source_tick": t})
         return state, outputs
+
+    # ---- durability (DESIGN.md section 10) ----
+    def _drain_queues(self, state, max_ticks: int):
+        """Run source-less ticks until every queue is empty — the flush
+        barrier.  Each probe costs one host sync; barriers are rare
+        (flush boundaries only).  Returns (state, ticks_run)."""
+        d = 0
+        while d < max_ticks:
+            sizes = jax.device_get({k: q.size
+                                    for k, q in state["queues"].items()})
+            if all(int(v) == 0 for v in sizes.values()):
+                break
+            state, _ = self._step(state, {})
+            d += 1
+        return state, d
+
+    def _flush_boundary(self, state, eng_tick: int, meta=None):
+        """Drain (per config), flush every updater table, record the
+        frontier once the store writes are durable.  ``meta`` is the
+        driver cursor stored with the frontier (run() records the source
+        index so a --recover driver can resume its stream even after
+        full WAL truncation)."""
+        dur = self.dur
+        if dur.cfg.barrier:
+            state, d = self._drain_queues(state, dur.cfg.drain_ticks_max)
+            eng_tick += d
+        for up in self.wf.updaters():
+            state["tables"][up.name] = dur.flusher.flush_table(
+                up.name, state["tables"][up.name], ttl=up.ttl)
+        dur.record_frontier(eng_tick, meta=meta)
+        return state, eng_tick
+
+    def checkpoint(self, state):
+        """Force a flush boundary now (shutdown / test hook); returns the
+        new state (flushed tables are marked clean)."""
+        assert self.dur is not None, "engine has no durability config"
+        eng_tick = int(jax.device_get(state["tick"]))
+        state, _ = self._flush_boundary(state, eng_tick)
+        return state
+
+    def recover(self, store=None, wal=None, *, frontier=None):
+        """Rebuild engine state after a crash: restore flushed slates
+        from the KV store, then replay the WAL suffix from the flush
+        frontier through the jitted chunk path (DESIGN.md section 10).
+
+        ``store`` / ``wal`` / ``frontier`` default to the engine's own
+        durability runtime (``cfg.durability.dir``).  Returns the
+        recovered state, positioned at the last WAL tick; resume with
+        ``run()``/``step()`` as usual.  Stats counters (processed,
+        drops) restart at the frontier — only slates and the tick
+        counter are recovered state.
+        """
+        dur = self.dur
+        store = store if store is not None else (dur and dur.store)
+        wal = wal if wal is not None else (dur and dur.wal)
+        if frontier is None:
+            frontier = dur.frontier if dur else flush_mod.FlushFrontier()
+        assert store is not None and wal is not None, \
+            "recover() needs a store + wal (or cfg.durability)"
+        f_tick = int(frontier.tick)
+        f_off = frontier.wal_offset
+        f_off = f_off[0] if isinstance(f_off, (list, tuple)) else f_off
+
+        state = self.init_state()
+        state["tick"] = jnp.asarray(f_tick, jnp.int32)
+        for up in self.wf.updaters():
+            recs = store.scan_records(
+                up.name, now=f_tick if up.ttl else None)
+            if not recs:
+                continue
+            ks = np.asarray(sorted(recs), np.int32)
+            ts = np.asarray([recs[int(k)][0] for k in ks], np.int32)
+            slates = jax.tree.map(
+                lambda *rows: np.stack(rows),
+                *[recs[int(k)][1] for k in ks])
+            state["tables"][up.name] = flush_mod.restore_into(
+                state["tables"][up.name], ks, slates, ts)
+
+        # replay, preserving the per-tick batch structure (gaps in the
+        # log — drain ticks, empty-source ticks — replay as empty ticks)
+        chunk = self.cfg.chunk_size
+        pending: List[Dict[str, EventBatch]] = []
+        replayed = 0
+
+        def flush_pending():
+            nonlocal state, pending, replayed
+            while pending:
+                group, pending = pending[:chunk], pending[chunk:]
+                state, _, _ = self.run_chunk(
+                    state, stack_sources(group), len(group))
+                replayed += len(group)
+
+        cur = f_tick
+        for tk, srcs in wal.replay(from_offset=f_off):
+            if tk < f_tick:
+                continue
+            while cur < tk:
+                pending.append({})
+                cur += 1
+            pending.append(srcs)
+            cur += 1
+            if len(pending) >= 4 * chunk:
+                flush_pending()
+        flush_pending()
+        return state
+
+    def close(self):
+        if self.dur is not None:
+            self.dur.close()
 
     # ---- introspection (paper section 4.4: reading slates live) ----
     def read_slate(self, state, updater: str, key: int):

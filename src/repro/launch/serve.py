@@ -10,6 +10,13 @@ the per-shard slot manager.
 
 Tick = (admit up to ``admit_per_tick`` prefills) + (one decode step for
 every active slot).  Prefill shapes are bucketed to keep jit cache small.
+
+Durability (DESIGN.md section 10 applied to serving): with a ``journal``
+path, every accepted request is appended to a WriteAheadLog before it is
+served and a completion record is appended when it finishes.  After a
+crash, ``recover_requests`` returns the accepted-but-unfinished requests
+for re-submission — at-least-once request processing (a request racing
+the crash may decode twice; token streams already sent are re-sent).
 """
 from __future__ import annotations
 
@@ -22,11 +29,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.event import EventBatch
 from repro.distributed import sharding as shd
 from repro.launch import cells
 from repro.launch.mesh import make_host_mesh
 from repro.models import lm
 from repro.models.context import Ctx
+from repro.slates.wal import WriteAheadLog
 
 
 @dataclass
@@ -50,7 +59,9 @@ class ServeConfig:
 
 
 class ServingEngine:
-    def __init__(self, cfg_model, serve_cfg: ServeConfig = None, mesh=None):
+    def __init__(self, cfg_model, serve_cfg: ServeConfig = None, mesh=None,
+                 journal: Optional[str] = None):
+        self.journal = WriteAheadLog(journal) if journal else None
         self.scfg = serve_cfg or ServeConfig()
         self.mesh = mesh or make_host_mesh(n_model=1)
         self.rules = shd.rules_for(self.mesh, phase="decode")
@@ -73,6 +84,7 @@ class ServingEngine:
         self.slot_req: List[Optional[Request]] = [None] * sc.n_slots
 
         self.queue: deque = deque()
+        self.journal_max_rid = -1          # set by recover_requests
         self.shed = 0                      # overflow drops (paper 4.3)
         self.tick = 0
         self.finished: List[Request] = []
@@ -80,13 +92,48 @@ class ServingEngine:
         self._insert = jax.jit(self._insert_impl, donate_argnums=(0,))
 
     # ---- admission (the "M0 source mapper") ----
-    def submit(self, req: Request) -> bool:
+    def submit(self, req: Request, *, journal: bool = True) -> bool:
         if len(self.queue) >= self.scfg.queue_capacity:
             self.shed += 1                 # queue overflow: drop + count
             return False
+        if self.journal is not None and journal:
+            self.journal.append(req.rid, {"req": EventBatch.of(
+                key=np.asarray([req.rid], np.int32),
+                value={"prompt": req.prompt[None],
+                       "max_new": np.asarray([req.max_new], np.int32)})})
         req.arrived_tick = self.tick
         self.queue.append(req)
         return True
+
+    def _journal_done(self, req: Request):
+        if self.journal is not None:
+            self.journal.append(req.rid, {"done": EventBatch.of(
+                key=np.asarray([req.rid], np.int32),
+                value={"n_out": np.asarray([len(req.tokens_out)],
+                                           np.int32)})})
+
+    def recover_requests(self) -> List[Request]:
+        """Replay the journal: accepted requests with no completion
+        record — the work a crashed server owes its clients.  Re-submit
+        via ``submit(req, journal=False)`` (already logged) and **check
+        the return value**: an overfull admission queue still sheds.
+        Also sets ``journal_max_rid`` so new requests can pick rids that
+        don't collide with journaled ones (a reused rid would match an
+        old completion record and be dropped by the next recovery)."""
+        assert self.journal is not None, "no journal configured"
+        reqs: Dict[int, Request] = {}
+        done = set()
+        self.journal_max_rid = -1
+        for rid, rec in self.journal.replay():
+            self.journal_max_rid = max(self.journal_max_rid, rid)
+            if "req" in rec:
+                v = rec["req"].value
+                reqs[rid] = Request(
+                    rid=rid, prompt=np.asarray(v["prompt"][0], np.int32),
+                    max_new=int(np.asarray(v["max_new"])[0]))
+            if "done" in rec:
+                done.add(rid)
+        return [r for rid, r in sorted(reqs.items()) if rid not in done]
 
     @staticmethod
     def _insert_impl(states, new_states, slot, cur_index, cur_value,
@@ -155,6 +202,7 @@ class ServingEngine:
                 if hit_eos or out_of_budget or out_of_cache:
                     req.done_tick = self.tick
                     self.finished.append(req)
+                    self._journal_done(req)
                     self.active[slot] = False   # slate TTL expiry
                     self.slot_req[slot] = None
         self.tick += 1
@@ -195,13 +243,28 @@ def main():
     ap.add_argument("--arch", default="qwen2-0.5b")
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--ticks", type=int, default=64)
+    ap.add_argument("--journal", default=None,
+                    help="request WAL path (durable at-least-once "
+                         "admission)")
+    ap.add_argument("--recover", action="store_true",
+                    help="re-submit journaled unfinished requests "
+                         "before accepting new ones")
     args = ap.parse_args()
     cfg = reduced_config(args.arch)
     eng = ServingEngine(cfg, ServeConfig(n_slots=4, cache_len=128,
-                                         prompt_bucket=32))
+                                         prompt_bucket=32),
+                        journal=args.journal)
+    rid0 = 0
+    if args.recover:
+        pending = eng.recover_requests()
+        rid0 = eng.journal_max_rid + 1   # never reuse journaled rids
+        shed = [r.rid for r in pending if not eng.submit(r, journal=False)]
+        print(f"recovered {len(pending)} unfinished request(s)"
+              + (f"; SHED {shed} (queue full — resubmit later)"
+                 if shed else ""))
     rng = np.random.default_rng(0)
     for i in range(args.requests):
-        eng.submit(Request(rid=i, prompt=rng.integers(
+        eng.submit(Request(rid=rid0 + i, prompt=rng.integers(
             0, cfg.vocab_size, size=rng.integers(4, 30)).astype(np.int32),
             max_new=8))
     eng.run(args.ticks)

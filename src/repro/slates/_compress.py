@@ -15,6 +15,7 @@ import zlib as _zlib
 
 _ZSTD = b"z"
 _ZLIB = b"g"
+_RAW = b"r"
 
 try:
     import zstandard as _zstd
@@ -26,18 +27,24 @@ except ImportError:
 
 class Compressor:
     """Compresses with the best codec available; output is a tagged
-    frame (1 codec byte + payload)."""
+    frame (1 codec byte + payload).  ``level <= 0`` stores raw (still
+    tagged): latency-critical writers (the WAL append hot path) opt out
+    of compression without changing the frame format."""
 
     def __init__(self, level: int = 3):
-        if HAVE_ZSTD:
+        self._c = None
+        if level <= 0:
+            self._tag = _RAW
+        elif HAVE_ZSTD:
             self._tag = _ZSTD
             self._c = _zstd.ZstdCompressor(level=level)
         else:
             self._tag = _ZLIB
             self._level = min(max(level, 1), 9)
-            self._c = None
 
     def compress(self, data: bytes) -> bytes:
+        if self._tag == _RAW:
+            return self._tag + data
         if self._c is not None:
             return self._tag + self._c.compress(data)
         return self._tag + _zlib.compress(data, self._level)
@@ -64,6 +71,8 @@ class Decompressor:
 
     def decompress(self, data: bytes) -> bytes:
         tag, payload = data[:1], data[1:]
+        if tag == _RAW:
+            return payload
         if tag == _ZLIB:
             return _zlib.decompress(payload)
         if tag == _ZSTD:

@@ -3,15 +3,19 @@
 Implements the paper's flush knob ("immediate write-through" ...
 "only when evicted from cache"), background-thread flushing (the Muppet
 2.0 background-I/O thread, so the update hot loop never blocks on the
-store), and read-through restore after a crash.
+store), read-through restore after a crash, and the *flush frontier*
+(DESIGN.md section 10): the durable ``(tick, wal_offset)`` watermark
+from which WAL replay resumes after recovery.
 """
 from __future__ import annotations
 
 import enum
+import json
+import os
 import queue as pyqueue
 import threading
 from dataclasses import dataclass
-from typing import Any, Dict, Optional
+from typing import List, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
@@ -34,6 +38,54 @@ class FlushConfig:
     occupancy_evict: float = 0.85   # ON_EVICT pressure threshold
 
 
+class FlushError(RuntimeError):
+    """One or more background flush writes failed; ``.errors`` holds the
+    underlying exceptions in arrival order."""
+
+    def __init__(self, errors: Sequence[BaseException]):
+        self.errors = list(errors)
+        super().__init__(
+            f"{len(self.errors)} flush write(s) failed: "
+            f"{self.errors[0]!r}")
+
+
+# ---------------------------------------------------------------------------
+# flush frontier: the durable replay watermark
+# ---------------------------------------------------------------------------
+
+@dataclass
+class FlushFrontier:
+    """Everything before ``tick`` / ``wal_offset`` is durably reflected
+    in the KV store; recovery restores slates and replays the WAL from
+    here.  ``wal_offset`` is an int (single shard) or a per-shard list
+    (DistributedEngine: one WAL per shard, one barrier tick).  ``meta``
+    is an opaque json-serializable driver cursor (e.g. the source index
+    at the boundary) that survives even full WAL truncation."""
+
+    tick: int = 0
+    wal_offset: Union[int, List[int]] = 0
+    meta: Optional[dict] = None
+
+    def save(self, path: str):
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump({"tick": int(self.tick),
+                       "wal_offset": self.wal_offset,
+                       "meta": self.meta}, f)
+        os.replace(tmp, path)   # atomic: a crash mid-save keeps the old
+                                # frontier, replay just covers more ticks
+
+    @staticmethod
+    def load(path: str) -> Optional["FlushFrontier"]:
+        if not os.path.exists(path):
+            return None
+        with open(path) as f:
+            d = json.load(f)
+        return FlushFrontier(tick=int(d["tick"]),
+                             wal_offset=d["wal_offset"],
+                             meta=d.get("meta"))
+
+
 def dirty_snapshot(table: tbl.SlateTable):
     """Host copies of (keys, ts, slates) for dirty slots, and the cleared
     table.  The device->host fetch is the only sync point; serialization
@@ -53,7 +105,14 @@ def dirty_snapshot(table: tbl.SlateTable):
 
 def restore_into(table: tbl.SlateTable, keys: np.ndarray, slates,
                  ts: np.ndarray) -> tbl.SlateTable:
-    """Re-insert flushed slates after a crash (read-through warm-up)."""
+    """Re-insert flushed slates after a crash (read-through warm-up).
+
+    ``ts`` is per-key (each slate's last-update tick, as recorded by the
+    store): restoring per-slot timestamps keeps TTL eviction after
+    recovery identical to the pre-crash schedule.  Idempotent: keys
+    already present are overwritten, not merged, so a crash *during*
+    recovery just means recovering again from the same frontier.
+    """
     if len(keys) == 0:
         return table
     k = jnp.asarray(keys, jnp.int32)
@@ -61,7 +120,7 @@ def restore_into(table: tbl.SlateTable, keys: np.ndarray, slates,
     table, slot, found, placed = tbl.insert_or_find(table, k, valid)
     vals = jax.tree.map(jnp.asarray, slates)
     table = tbl.write_slates(table, slot, placed, vals,
-                             jnp.asarray(ts, jnp.int32).max())
+                             jnp.asarray(ts, jnp.int32))
     # restored slates are clean (they came *from* the store)
     return tbl.SlateTable(keys=table.keys, ts=table.ts,
                           dirty=jnp.zeros_like(table.dirty),
@@ -70,8 +129,10 @@ def restore_into(table: tbl.SlateTable, keys: np.ndarray, slates,
 
 class Flusher:
     """Background flusher thread: consumes dirty snapshots, writes to the
-    KV store.  ``flush_tables`` is called from the engine driver per the
-    policy; ``drain`` joins outstanding work (tests / shutdown)."""
+    KV store.  ``flush_table`` is called from the engine driver per the
+    policy; ``drain`` joins outstanding work (flush barriers / shutdown)
+    and **re-raises** any write error as :class:`FlushError` — a frontier
+    must never advance past a failed store write."""
 
     def __init__(self, store: KVStore, cfg: Optional[FlushConfig] = None):
         self.store = store
@@ -88,13 +149,13 @@ class Flusher:
                 self._q.task_done()
                 return
             try:
-                updater, keys, ts, vals, tick, ttl = item
+                updater, keys, ts, vals, ttl = item
                 rows = _rows_of(vals, len(keys))
                 self.store.put_many(updater,
                                     zip(keys.tolist(), rows),
-                                    ts=tick, ttl=ttl)
+                                    ts=ts.tolist(), ttl=ttl)
                 self.store.flush()
-            except Exception as e:  # pragma: no cover
+            except Exception as e:
                 self.errors.append(e)
             finally:
                 self._q.task_done()
@@ -108,21 +169,43 @@ class Flusher:
         occ = float(jax.device_get(table.occupancy()))
         return occ >= self.cfg.occupancy_evict * table.capacity
 
-    def flush_table(self, updater: str, table: tbl.SlateTable, tick: int,
+    def flush_rows(self, updater: str, keys: np.ndarray, ts: np.ndarray,
+                   vals, ttl: int = 0):
+        """Enqueue pre-snapshotted host rows (the per-shard flush path of
+        ``DistributedEngine`` snapshots all shards in one device_get and
+        feeds each shard's rows here).  Store write ticks are the
+        per-row ``ts`` (each slate's last-update tick)."""
+        if len(keys):
+            self._q.put((updater, np.asarray(keys), np.asarray(ts), vals,
+                         ttl))
+
+    def flush_table(self, updater: str, table: tbl.SlateTable,
                     ttl: int = 0) -> tbl.SlateTable:
         keys, ts, vals, cleared = dirty_snapshot(table)
-        if len(keys):
-            self._q.put((updater, keys, ts, vals, int(tick), ttl))
+        self.flush_rows(updater, keys, ts, vals, ttl)
         return cleared
 
+    def _raise_accumulated(self):
+        if self.errors:
+            errs, self.errors = self.errors, []
+            raise FlushError(errs)
+
     def drain(self):
+        """Join outstanding writes; raises :class:`FlushError` if any
+        failed (callers must not record a frontier past the failure)."""
         self._q.join()
-        self.store.flush()
+        try:
+            self.store.flush()
+        except Exception as e:
+            self.errors.append(e)
+        self._raise_accumulated()
 
     def close(self):
-        self.drain()
-        self._q.put(None)
-        self._thread.join(timeout=5)
+        try:
+            self.drain()
+        finally:
+            self._q.put(None)
+            self._thread.join(timeout=5)
 
 
 def _rows_of(vals, n: int):

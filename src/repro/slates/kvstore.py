@@ -111,9 +111,14 @@ class KVStore:
                 self._flush_locked()
 
     def put_many(self, updater: str, items: Iterable[Tuple[int, Any]], *,
-                 ts: int, ttl: int = 0):
-        for key, slate in items:
-            self.put(updater, key, slate, ts=ts, ttl=ttl)
+                 ts, ttl: int = 0):
+        """``ts`` is one write tick for the whole batch or a per-item
+        sequence (each slate's own last-update tick, so TTL expiry and
+        newest-wins reads stay per-key exact across flushes)."""
+        per_item = isinstance(ts, (list, tuple, np.ndarray))
+        for i, (key, slate) in enumerate(items):
+            self.put(updater, key, slate,
+                     ts=int(ts[i]) if per_item else int(ts), ttl=ttl)
 
     def flush(self):
         with self._lock:
@@ -201,8 +206,16 @@ class KVStore:
     def scan(self, updater: str, *, now: Optional[int] = None):
         """Bulk read of every live slate (paper section 5 'bulk reading of
         slates')."""
+        return {k: slate
+                for k, (_, slate) in self.scan_records(updater,
+                                                       now=now).items()}
+
+    def scan_records(self, updater: str, *, now: Optional[int] = None
+                     ) -> Dict[int, Tuple[int, Any]]:
+        """Like ``scan`` but returns ``{key: (ts, slate)}`` — recovery
+        needs each slate's write tick to restore per-slot TTL clocks."""
         self.flush()
-        out: Dict[int, Any] = {}
+        out: Dict[int, bytes] = {}
         meta: Dict[int, int] = {}
         for i in range(self.replicas):
             if self._replica_down[i]:
@@ -218,7 +231,7 @@ class KVStore:
                     if k not in meta or ts > meta[k]:
                         meta[k] = ts
                         out[k] = blob
-        return {k: _unpack_tree(self._dctx.decompress(v))
+        return {k: (meta[k], _unpack_tree(self._dctx.decompress(v)))
                 for k, v in out.items()}
 
     # ---- maintenance ----

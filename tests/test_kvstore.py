@@ -72,7 +72,7 @@ def test_flusher_and_crash_restore(store):
     t = tbl.write_slates(t, slot, placed,
                          {"count": jnp.asarray([30, 50], jnp.int32)}, 2)
     fl = Flusher(store, FlushConfig(policy=FlushPolicy.IMMEDIATE))
-    t = fl.flush_table("U1", t, tick=2)
+    t = fl.flush_table("U1", t)
     fl.drain()
     assert not fl.errors
     assert not bool(np.asarray(jax.device_get(t.dirty)).any())

@@ -11,6 +11,10 @@ from repro.models import lm
 from repro.models.config import SHAPE_BY_NAME, cell_is_applicable
 from repro.models.context import Ctx
 
+# minutes of compile time across all architectures: tier-1 runs the
+# stream engine + durability suites; these run in the CI `slow` job
+pytestmark = pytest.mark.slow
+
 ALL_ARCHS = sorted(ARCHS)
 
 

@@ -4,6 +4,9 @@ import pytest
 from repro.configs import reduced_config
 from repro.launch.serve import Request, ServeConfig, ServingEngine
 
+# LM build + prefill/decode jit: runs in the CI `slow` job
+pytestmark = pytest.mark.slow
+
 
 @pytest.fixture(scope="module")
 def engine():
@@ -51,3 +54,33 @@ def test_continuous_batching_interleaves(engine):
     r200 = next(r for r in engine.finished if r.rid == 200)
     r201 = next(r for r in engine.finished if r.rid == 201)
     assert r201.done_tick < r200.done_tick  # shorter request finished first
+
+
+def test_request_journal_recovery(tmp_path):
+    """Crash the server mid-serve: the journal replays accepted-but-
+    unfinished requests for re-submission (at-least-once serving)."""
+    cfg = reduced_config("qwen2-0.5b")
+    j = str(tmp_path / "requests.log")
+    scfg = ServeConfig(n_slots=2, cache_len=64, prompt_bucket=16)
+    eng = ServingEngine(cfg, scfg, journal=j)
+    rng = np.random.default_rng(3)
+    reqs = [_req(i, rng, max_new=4) for i in range(5)]
+    for r in reqs:
+        assert eng.submit(r)
+    eng.run(6)                      # finishes some, not all
+    finished = {r.rid for r in eng.finished}
+    assert 0 < len(finished) < 5
+    eng.journal.close()             # crash: slots + queue lost
+
+    eng2 = ServingEngine(cfg, scfg, journal=j)
+    pending = eng2.recover_requests()
+    assert {r.rid for r in pending} == set(range(5)) - finished
+    for r in pending:               # journaled prompts survive bit-exact
+        orig = next(o for o in reqs if o.rid == r.rid)
+        assert np.array_equal(r.prompt, orig.prompt)
+        assert r.max_new == orig.max_new
+        assert eng2.submit(r, journal=False)
+    eng2.run(60)
+    assert {r.rid for r in eng2.finished} == {r.rid for r in pending}
+    # a second recovery sees everything completed
+    assert eng2.recover_requests() == []
