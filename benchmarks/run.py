@@ -20,8 +20,8 @@ import numpy as np
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
-from benchmarks.workloads import (counting_engine, uniform_batch,
-                                  zipf_batch)
+from benchmarks.workloads import (chain_engine, counting_engine,
+                                  uniform_batch, zipf_batch)
 
 ROWS = []
 
@@ -162,6 +162,40 @@ def bench_fused_slate_update():
             row(f"slate_update_fused_{impl}", us,
                 f"{baseline / us:.2f}x vs generic; Pallas kernel engages "
                 f"on TPU (validated in tests via interpret)")
+
+
+# ----------------------------------------------------------------------
+# planner mapper fusion: a 3-mapper linear chain as 3 queue hops vs one
+# fused jitted stage (DESIGN.md 11.2; the api-layer dispatch win)
+# ----------------------------------------------------------------------
+
+def bench_fused_mapper_chain():
+    rng = np.random.default_rng(9)
+    batches = [zipf_batch(rng, 512, tick=t) for t in range(8)]
+    baseline = None
+    for fuse in (False, True):
+        eng, state = chain_engine(n_mappers=3, batch_size=512,
+                                  queue_capacity=2048, fuse=fuse)
+        box = {"s": state, "i": 0}
+
+        def step():
+            b = batches[box["i"] % len(batches)]
+            box["s"], _ = eng.step(box["s"], {"S1": b})
+            box["i"] += 1
+            jax.block_until_ready(box["s"]["tick"])
+
+        us = _time_min(step, n=20)
+        if not fuse:
+            baseline = us
+            row("mapper_chain3_unfused", us,
+                "3 mapper queue hops + updater per tick (builder, "
+                "fuse=False)")
+        else:
+            n_ops = len(eng.wf.operators)
+            row("mapper_chain3_fused", us,
+                f"planner-fused to {n_ops} ops: {baseline / us:.2f}x vs "
+                f"unfused per tick (target >= 1x; latency also drops "
+                f"3 hops -> 1)")
 
 
 # ----------------------------------------------------------------------
@@ -452,6 +486,7 @@ def main() -> None:
     bench_sequential_throughput()
     bench_chunked_vs_pertick()
     bench_fused_slate_update()
+    bench_fused_mapper_chain()
     bench_latency()
     bench_hotspot_key_splitting()
     bench_slate_store()

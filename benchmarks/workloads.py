@@ -77,6 +77,33 @@ def counting_engine(batch_size=2048, queue_capacity=8192,
     return eng, eng.init_state()
 
 
+def chain_engine(n_mappers=3, batch_size=2048, queue_capacity=8192,
+                 fuse=True):
+    """A linear n-mapper chain ending in the counting updater, built
+    via the declarative App layer so the planner's mapper fusion can be
+    toggled (BENCH mapper_chain3_*)."""
+    from repro.api import App
+
+    app = App("chain_bench")
+    app.source("S1", VSPEC)
+    prev = "S1"
+    for i in range(n_mappers):
+        nxt = f"S{i + 2}"
+
+        @app.mapper(prev, out=nxt, name=f"M{i + 1}")
+        def hop(batch):
+            return EventBatch(sid=batch.sid, ts=batch.ts + 1,
+                              key=batch.key,
+                              value={"x": batch.value["x"] + 1.0},
+                              valid=batch.valid)
+        prev = nxt
+    app.add(CounterUpdater(), subscribes=(prev,))
+    eng = Engine(app.build(fuse=fuse),
+                 EngineConfig(batch_size=batch_size,
+                              queue_capacity=queue_capacity))
+    return eng, eng.init_state()
+
+
 def zipf_batch(rng, n, n_keys=100_000, alpha=1.2, tick=0):
     ranks = np.arange(1, n_keys + 1, dtype=np.float64)
     p = ranks ** (-alpha)

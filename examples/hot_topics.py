@@ -1,162 +1,133 @@
-"""Paper Example 2/5: detect hot topics on a tweet stream.
+"""Paper Example 2/5: detect hot topics on a tweet stream — declarative
+builder edition.
 
-Workflow (Figure 1c):
+Workflow (Figure 1c)::
+
   tweets --M1(classify into topic_minute)--> S2
   S2 --U1(count per topic_minute; emit count each minute)--> S3
   S3 --U2(compare to per-minute historical average; emit hot topics)--> S4
 
-M1's "classifier" here is a real (tiny) transformer scoring topics from
-the tweet's feature vector — the model stack and the stream engine
-compose (DESIGN.md section 3).
+M1's "classifier" is a real (tiny) matched filter against learned topic
+embeddings — the map function runs a model inside the stream, as
+Kosmix's classifiers did.  All three operators are plain functions: M1
+a traced mapper, U1 a sequential (order-sensitive) step function, U2 an
+associative lift + emit pair.  ``U2`` subscribes to ``S3`` before its
+producer is declared — forward stream references are how the builder
+expresses arbitrary graph shapes (including cycles).
 
 Run:  PYTHONPATH=src python examples/hot_topics.py
 """
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.engine import Engine, EngineConfig
-from repro.core.event import EventBatch
-from repro.core.operators import (AssociativeUpdater, Mapper,
-                                  SequentialUpdater)
-from repro.core.workflow import Workflow
+from repro import App, EventBatch, RuntimeConfig
 
 N_TOPICS = 16
 FEAT = 32
 TICKS_PER_MINUTE = 4
+HOT_THRESHOLD = 2.0
 
 
-class TopicClassifierMapper(Mapper):
-    """M1: classify the tweet's feature vector into a topic (a matched
-    filter against learned topic embeddings — the map function runs a
-    model inside the stream, as Kosmix's classifiers did)."""
-    name = "M1"
-    subscribes = ("tweets",)
-    in_value_spec = {"feat": ((FEAT,), jnp.float32)}
-    out_streams = {"S2": {"topic": ((), jnp.int32)}}
+def build_app(topic_embeds) -> App:
+    app = App("hot_topics")
+    tweets = app.source("tweets", {"feat": ((FEAT,), jnp.float32)})
+    w = jnp.asarray(topic_embeds.T)            # [FEAT, N_TOPICS]
 
-    def __init__(self, topic_embeds):
-        self.w = jnp.asarray(topic_embeds.T)     # [FEAT, N_TOPICS]
-
-    def map_batch(self, batch):
-        topic = jnp.argmax(batch.value["feat"] @ self.w,
+    @app.mapper(tweets, out="S2", name="M1")
+    def classify(batch):
+        topic = jnp.argmax(batch.value["feat"] @ w,
                            axis=-1).astype(jnp.int32)
         minute = batch.ts // TICKS_PER_MINUTE
         key = topic * 100_000 + minute          # "v_m" composite key
-        return {"S2": EventBatch(sid=batch.sid, ts=batch.ts + 1, key=key,
-                                 value={"topic": topic},
-                                 valid=batch.valid)}
+        return EventBatch(sid=batch.sid, ts=batch.ts + 1, key=key,
+                          value={"topic": topic}, valid=batch.valid)
 
-
-class MinuteCounter(SequentialUpdater):
-    """U1: count events per <topic, minute>; when the minute rolls over,
-    emit <topic_minute, count> into S3 (the paper emits after a minute —
-    we emit on the first event of the next minute, same content)."""
-    name = "U1"
-    subscribes = ("S2",)
-    in_value_spec = {"topic": ((), jnp.int32)}
-    out_streams = {"S3": {"count": ((), jnp.int32)}}
-    table_capacity = 4096
-    max_run = 192
-
-    def slate_spec(self):
-        return {"count": ((), jnp.int32), "emitted": ((), jnp.int32)}
-
-    def step(self, slate, ev):
-        new_count = slate["count"] + 1
-        minute_now = ev["ts"] // TICKS_PER_MINUTE
-        key_minute = ev["key"] % 100_000
-        closed = minute_now > key_minute        # this minute has passed
-        do_emit = closed & (slate["emitted"] == 0)
-        # re-key to the TOPIC: U2's slate holds the topic's history
-        # across minutes (the paper's avg_count_{v_m} across days)
-        out = {"S3": {"key": ev["key"] // 100_000,
-                      "value": {"count": new_count},
-                      "emit": do_emit}}
-        return ({"count": new_count,
-                 "emitted": jnp.where(do_emit, 1,
-                                      slate["emitted"])}, out)
-
-
-class HotTopicDetector(AssociativeUpdater):
-    """U2: slate keeps total_count/periods per topic-minute-of-day;
-    emits hot topics when count / avg > threshold."""
-    name = "U2"
-    subscribes = ("S3",)
-    in_value_spec = {"count": ((), jnp.int32)}
-    out_streams = {"hot": {"ratio_x100": ((), jnp.int32)}}
-    table_capacity = 4096
-    threshold = 2.0
-
-    def slate_spec(self):
-        return {"total": ((), jnp.float32), "periods": ((), jnp.int32)}
-
-    def lift(self, batch):
-        return {"total": batch.value["count"].astype(jnp.float32),
-                "periods": jnp.ones_like(batch.key)}
-
-    def combine(self, a, b):
-        return {"total": a["total"] + b["total"],
-                "periods": a["periods"] + b["periods"]}
-
-    def merge(self, slate, delta):
-        return {"total": slate["total"] + delta["total"],
-                "periods": slate["periods"] + delta["periods"]}
-
-    def emit(self, keys, old, new, ts):
+    # U2 declared against "S3" before U1 (its producer) exists: forward
+    # stream reference.  The lift/emit pair is the paper's
+    # current-vs-historical-average comparison.
+    def hot_emit(keys, old, new, ts):
         cur = new["total"] - old["total"]       # this period's count
         avg = jnp.where(old["periods"] > 0,
                         old["total"] / jnp.maximum(old["periods"], 1),
                         cur)
         ratio = cur / jnp.maximum(avg, 1e-6)
-        hot = ratio > self.threshold
         return {"hot": EventBatch(
             sid=jnp.zeros_like(keys), ts=ts + 1, key=keys,
             value={"ratio_x100": (ratio * 100).astype(jnp.int32)},
-            valid=hot)}
+            valid=ratio > HOT_THRESHOLD)}
+
+    @app.updater("S3", name="U2",
+                 slate={"total": ((), jnp.float32),
+                        "periods": ((), jnp.int32)},
+                 emit=hot_emit)
+    def track(batch):
+        return {"total": batch.value["count"].astype(jnp.float32),
+                "periods": jnp.ones_like(batch.key)}
+
+    @app.seq_updater("S2", name="U1", max_run=192,
+                     slate={"count": ((), jnp.int32),
+                            "emitted": ((), jnp.int32)})
+    def minute_count(slate, ev):
+        """Count events per <topic, minute>; on the first event of the
+        next minute emit <topic, count> into S3 (re-keyed to the topic:
+        U2's slate holds the topic's history across minutes)."""
+        new_count = slate["count"] + 1
+        minute_now = ev["ts"] // TICKS_PER_MINUTE
+        key_minute = ev["key"] % 100_000
+        closed = minute_now > key_minute        # this minute has passed
+        do_emit = closed & (slate["emitted"] == 0)
+        out = {"S3": {"key": ev["key"] // 100_000,
+                      "value": {"count": new_count},
+                      "emit": do_emit}}
+        return ({"count": new_count,
+                 "emitted": jnp.where(do_emit, 1, slate["emitted"])}, out)
+
+    return app
 
 
 def main():
     rng = np.random.default_rng(0)
     topic_dirs = rng.normal(size=(N_TOPICS, FEAT)).astype(np.float32)
-    m1 = TopicClassifierMapper(topic_dirs)
-    wf = Workflow([m1, MinuteCounter(), HotTopicDetector()],
-                  external_streams=("tweets",))
-    eng = Engine(wf, EngineConfig(batch_size=2048, queue_capacity=8192))
-    state = eng.init_state()
+    app = build_app(topic_dirs)
+    app.start(RuntimeConfig(batch_size=2048, queue_capacity=8192,
+                            chunk_size=1))
+
     hot_events = []
     N = 512
-    for tick in range(40):
+
+    def source_fn(tick, max_events):
         minute = tick // TICKS_PER_MINUTE
         # minute 5+: topic burst — 60% of tweets about one topic
         if minute >= 5:
             burst = rng.random(N) < 0.6
-            t_ids = np.where(burst, 3,
-                             rng.integers(0, N_TOPICS, N))
+            t_ids = np.where(burst, 3, rng.integers(0, N_TOPICS, N))
         else:
             t_ids = rng.integers(0, N_TOPICS, N)
         feat = topic_dirs[t_ids] * 3 + rng.normal(
             size=(N, FEAT)).astype(np.float32)
-        batch = EventBatch.of(
+        return {"tweets": EventBatch.of(
             key=rng.integers(0, 1 << 30, N).astype(np.int32),
             value={"feat": feat.astype(np.float32)},
-            ts=np.full(N, tick, np.int32))
-        state, outs = eng.step(state, {"tweets": batch})
-        if "hot" in outs:
-            hb = outs["hot"]
-            for k, r in zip(np.asarray(hb.key)[np.asarray(hb.valid)],
-                            np.asarray(hb.value["ratio_x100"])
-                            [np.asarray(hb.valid)]):
-                hot_events.append((int(k), tick, r / 100))
-                print(f"tick {tick}: HOT topic={int(k)} "
-                      f"ratio={r/100:.1f}x")
+            ts=np.full(N, tick, np.int32))}
+
+    outs = app.run(source_fn, n_ticks=40)
+    for tick, o in enumerate(outs):
+        if "hot" not in o:
+            continue
+        hb = o["hot"]
+        for k, r in zip(np.asarray(hb.key)[np.asarray(hb.valid)],
+                        np.asarray(hb.value["ratio_x100"])
+                        [np.asarray(hb.valid)]):
+            hot_events.append((int(k), tick, r / 100))
+            print(f"tick {tick}: HOT topic={int(k)} ratio={r/100:.1f}x")
 
     assert hot_events, "the burst should surface a hot topic"
     from collections import Counter
     top = Counter(t for t, _, _ in hot_events).most_common(1)[0][0]
     assert top == 3, f"burst topic 3 should dominate, got {top}"
     print(f"\ndetected {len(hot_events)} hot <topic,minute> pairs; "
-          f"stats: {eng.stats(state)['processed']}")
+          f"stats: {app.stats()['processed']}")
+    app.close()
 
 
 if __name__ == "__main__":

@@ -1,9 +1,26 @@
 """Quickstart: the paper's Example 1/4 — count Foursquare checkins per
-retailer, live.
+retailer, live — in ~15 lines of app code.
 
-A map function inspects each checkin and emits the retailer id; an
-associative update function counts per retailer; slates are queryable
-live over HTTP while the stream flows (paper section 4.4).
+The declarative builder (DESIGN.md section 11) replaces the subclass
+boilerplate: declare a source, decorate a map function (its name,
+subscription, and output value spec are inferred by tracing), attach a
+prebuilt counter, and ``app.run()`` owns engine selection and state
+threading — slates stay queryable over HTTP while the stream flows
+(paper section 4.4), with no ``init_state``/``box`` plumbing::
+
+    app = App("quickstart")
+    checkins = app.source("checkins", {"retailer": ((), jnp.int32)})
+
+    @app.mapper(checkins, out="S2", name="M1")
+    def at_retailer(batch):           # M1: checkin -> <retailer, checkin>
+        rid = batch.value["retailer"]
+        return EventBatch(sid=batch.sid, ts=batch.ts + 1, key=rid,
+                          value={"retailer": rid},
+                          valid=batch.valid & (rid >= 0))
+
+    at_retailer.update(ops.counter("U1"))          # U1: count per key
+    app.run(source_fn, n_ticks=50, runtime=RuntimeConfig(...), drain=True)
+    app.read_slate("U1", key)
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -13,87 +30,53 @@ import urllib.request
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.engine import Engine, EngineConfig
-from repro.core.event import EventBatch
-from repro.core.operators import AssociativeUpdater, Mapper
-from repro.core.workflow import Workflow
-from repro.slates.http import SlateServer
+from repro import App, EventBatch, RuntimeConfig, ops
 
 RETAILERS = ["Walmart", "Sam's Club", "JCPenney", "Best Buy"]
-VSPEC = {"retailer": ((), jnp.int32)}
+
+# --- app (paper Example 1) -------------------------------------------
+app = App("quickstart")
+checkins = app.source("checkins", {"retailer": ((), jnp.int32)})
 
 
-class RetailerMapper(Mapper):
+@app.mapper(checkins, out="S2", name="M1")
+def at_retailer(batch):
     """M1: checkin -> <retailer, checkin> event (or nothing)."""
-    name = "M1"
-    subscribes = ("checkins",)
-    in_value_spec = VSPEC
-    out_streams = {"S2": VSPEC}
-
-    def map_batch(self, batch):
-        rid = batch.value["retailer"]          # -1 = not at a retailer
-        return {"S2": EventBatch(sid=batch.sid, ts=batch.ts + 1, key=rid,
-                                 value={"retailer": rid},
-                                 valid=batch.valid & (rid >= 0))}
+    rid = batch.value["retailer"]          # -1 = not at a retailer
+    return EventBatch(sid=batch.sid, ts=batch.ts + 1, key=rid,
+                      value={"retailer": rid},
+                      valid=batch.valid & (rid >= 0))
 
 
-class Counter(AssociativeUpdater):
-    """U1: slate = {count}; merge adds combined per-key deltas."""
-    name = "U1"
-    subscribes = ("S2",)
-    in_value_spec = VSPEC
-    out_streams = {}
-    table_capacity = 256
-
-    def slate_spec(self):
-        return {"count": ((), jnp.int32)}
-
-    def lift(self, batch):
-        return {"count": jnp.ones_like(batch.key)}
-
-    def combine(self, a, b):
-        return {"count": a["count"] + b["count"]}
-
-    def merge(self, slate, delta):
-        return {"count": slate["count"] + delta["count"]}
+at_retailer.update(ops.counter("U1", table_capacity=256))
+# --- end app ---------------------------------------------------------
 
 
 def main():
-    wf = Workflow([RetailerMapper(), Counter()],
-                  external_streams=("checkins",))
-    engine = Engine(wf, EngineConfig(batch_size=512, queue_capacity=2048))
-    state = engine.init_state()
-
-    box = {"state": state}
-    server = SlateServer(
-        read_fn=lambda u, k: engine.read_slate(box["state"], u, k),
-        stats_fn=lambda: engine.stats(box["state"]))
+    app.start(RuntimeConfig(batch_size=512, queue_capacity=2048))
+    server = app.serve()
     print(f"slate reads live at http://127.0.0.1:{server.port}"
           f"/slate/U1/<retailer-id>")
 
     rng = np.random.default_rng(0)
     true = np.zeros(len(RETAILERS), np.int64)
-    for tick in range(50):
-        # checkin stream: 20% at a known retailer
+
+    def source_fn(tick, max_events):
+        # checkin stream: 20% at a known retailer; respect the engine's
+        # ingest limit (source throttling, paper section 5) and count
+        # ground truth only over what was actually fed
         rid = np.where(rng.random(512) < 0.2,
                        rng.integers(0, len(RETAILERS), 512),
                        -1).astype(np.int32)
-        for r in rid[rid >= 0]:
+        valid = np.arange(512) < (max_events or 512)
+        for r in rid[(rid >= 0) & valid]:
             true[r] += 1
-        batch = EventBatch.of(key=rng.integers(0, 1 << 30, 512)
-                              .astype(np.int32),
-                              value={"retailer": rid},
-                              ts=np.full(512, tick, np.int32))
-        box["state"], _ = engine.step(box["state"], {"checkins": batch})
+        return {"checkins": EventBatch.of(
+            key=rng.integers(0, 1 << 30, 512).astype(np.int32),
+            value={"retailer": rid},
+            ts=np.full(512, tick, np.int32), valid=valid)}
 
-    # drain the pipeline (2 hops)
-    for tick in range(50, 53):
-        empty = EventBatch.of(key=np.zeros(512, np.int32),
-                              value={"retailer": np.full(512, -1,
-                                                         np.int32)},
-                              ts=np.full(512, tick, np.int32),
-                              valid=np.zeros(512, bool))
-        box["state"], _ = engine.step(box["state"], {"checkins": empty})
+    app.run(source_fn, n_ticks=50, drain=True)
 
     print("\nlive counts (HTTP slate fetches):")
     for i, name in enumerate(RETAILERS):
@@ -102,8 +85,8 @@ def main():
         status = "OK" if got == true[i] else f"MISMATCH (true {true[i]})"
         print(f"  {name:12s} {got:8d}  {status}")
         assert got == true[i]
-    print("\nstats:", json.dumps(engine.stats(box["state"]), indent=1))
-    server.close()
+    print("\nstats:", json.dumps(app.stats(), indent=1))
+    app.close()
 
 
 if __name__ == "__main__":

@@ -1,100 +1,71 @@
-"""Paper Example 3: maintain a reputation score per Twitter user.
+"""Paper Example 3: maintain a reputation score per Twitter user —
+declarative builder edition.
 
 "if a user A retweets or replies to a user B, then the score of B may
 change, depending on the score of A" — order matters (B's bump depends
-on A's *current* score), so this is a SequentialUpdater: strict per-key
-timestamp order via the padded-run scan.
-
-The interaction event carries the actor's score snapshot (as the engine's
-previous-tick output — scores are read live, section 4.4); the target's
-slate folds it in with exponential decay.
+on A's *current* score), so the update is a sequential step function:
+strict per-key timestamp order via the padded-run scan.  Both operators
+are plain decorated functions; subscriptions and value specs are
+inferred by tracing.
 
 Run:  PYTHONPATH=src python examples/reputation.py
 """
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.engine import Engine, EngineConfig
-from repro.core.event import EventBatch
-from repro.core.operators import Mapper, SequentialUpdater
-from repro.core.workflow import Workflow
+from repro import App, EventBatch, RuntimeConfig
 
 N_USERS = 200
 
+app = App("reputation")
+tweets = app.source("tweets", {"target": ((), jnp.int32),
+                               "actor_score": ((), jnp.float32)})
 
-class InteractionMapper(Mapper):
+
+@app.mapper(tweets, out="S2", name="M1")
+def interaction(batch):
     """M1: tweet -> <target_user, actor_score> scoring event."""
-    name = "M1"
-    subscribes = ("tweets",)
-    in_value_spec = {"target": ((), jnp.int32),
-                     "actor_score": ((), jnp.float32)}
-    out_streams = {"S2": {"actor_score": ((), jnp.float32)}}
-
-    def map_batch(self, batch):
-        return {"S2": EventBatch(
-            sid=batch.sid, ts=batch.ts + 1, key=batch.value["target"],
-            value={"actor_score": batch.value["actor_score"]},
-            valid=batch.valid)}
+    return EventBatch(sid=batch.sid, ts=batch.ts + 1,
+                      key=batch.value["target"],
+                      value={"actor_score": batch.value["actor_score"]},
+                      valid=batch.valid)
 
 
-class ReputationUpdater(SequentialUpdater):
-    """U1: score' = 0.95 * score + 0.05 * actor_score + 0.01 (sequential:
+@app.seq_updater("S2", name="U1", table_capacity=1024, max_run=32,
+                 slate={"score": ((), jnp.float32),
+                        "interactions": ((), jnp.int32)})
+def reputation(slate, ev):
+    """U1: score' = 0.95*score + 0.05*actor_score + 0.01 (sequential:
     the bump size depends on the score's current value)."""
-    name = "U1"
-    subscribes = ("S2",)
-    in_value_spec = {"actor_score": ((), jnp.float32)}
-    out_streams = {}
-    table_capacity = 1024
-    max_run = 32
-
-    def slate_spec(self):
-        return {"score": ((), jnp.float32),
-                "interactions": ((), jnp.int32)}
-
-    def step(self, slate, ev):
-        new_score = (0.95 * slate["score"]
-                     + 0.05 * ev["value"]["actor_score"] + 0.01)
-        return ({"score": new_score,
-                 "interactions": slate["interactions"] + 1}, {})
+    new_score = (0.95 * slate["score"]
+                 + 0.05 * ev["value"]["actor_score"] + 0.01)
+    return ({"score": new_score,
+             "interactions": slate["interactions"] + 1}, {})
 
 
 def main():
-    wf = Workflow([InteractionMapper(), ReputationUpdater()],
-                  external_streams=("tweets",))
-    eng = Engine(wf, EngineConfig(batch_size=1024, queue_capacity=4096))
-    state = eng.init_state()
-
     rng = np.random.default_rng(0)
-    # celebrity users 0..4 get mentioned by high-score actors
-    true_score = np.zeros(N_USERS, np.float64)
     N = 512
-    for tick in range(30):
+
+    def source_fn(tick, max_events):
+        # celebrity users 0..4 get mentioned by high-score actors
         celebrity = rng.random(N) < 0.3
         target = np.where(celebrity, rng.integers(0, 5, N),
                           rng.integers(5, N_USERS, N)).astype(np.int32)
-        actor_score = np.where(celebrity,
-                               rng.uniform(0.8, 1.0, N),
-                               rng.uniform(0.0, 0.3, N)
-                               ).astype(np.float32)
-        batch = EventBatch.of(
+        actor_score = np.where(celebrity, rng.uniform(0.8, 1.0, N),
+                               rng.uniform(0.0, 0.3, N)).astype(np.float32)
+        return {"tweets": EventBatch.of(
             key=rng.integers(0, 1 << 30, N).astype(np.int32),
             value={"target": target, "actor_score": actor_score},
-            ts=np.full(N, tick, np.int32))
-        state, _ = eng.step(state, {"tweets": batch})
+            ts=np.full(N, tick, np.int32))}
 
-    # drain
-    for tick in range(30, 40):
-        empty = EventBatch.of(
-            key=np.zeros(4, np.int32),
-            value={"target": np.zeros(4, np.int32),
-                   "actor_score": np.zeros(4, np.float32)},
-            ts=np.full(4, tick, np.int32), valid=np.zeros(4, bool))
-        state, _ = eng.step(state, {"tweets": empty})
+    app.run(source_fn, n_ticks=30,
+            runtime=RuntimeConfig(batch_size=1024, queue_capacity=4096),
+            drain=True)
 
     scores = []
     for u in range(N_USERS):
-        s = eng.read_slate(state, "U1", u)
+        s = app.read_slate("U1", u)
         if s is not None:
             scores.append((float(s["score"]), int(s["interactions"]), u))
     scores.sort(reverse=True)
@@ -104,7 +75,8 @@ def main():
     top5 = {u for _, _, u in scores[:5]}
     assert top5 == {0, 1, 2, 3, 4}, top5
     print("\ncelebrities 0-4 rank on top — OK")
-    print("processed:", eng.stats(state)["processed"])
+    print("processed:", app.stats()["processed"])
+    app.close()
 
 
 if __name__ == "__main__":

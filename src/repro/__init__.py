@@ -1,0 +1,27 @@
+"""MapUpdate on jax/Pallas — a reproduction of "Muppet: MapReduce-Style
+Processing of Fast Data" grown toward production scale.
+
+Curated public surface: application authors should need nothing beyond
+``from repro import App, RuntimeConfig, EventBatch, ops`` — the
+declarative builder compiles to the engine layer below, which stays
+importable (``repro.core.*``, ``repro.slates.*``) for engine work.
+"""
+from repro.api import App, PlanError, RuntimeConfig, Stream, ops
+from repro.core.engine import Engine, EngineConfig, StateHandle
+from repro.core.event import EventBatch
+from repro.core.operators import (AssociativeUpdater, Mapper, Operator,
+                                  SequentialUpdater, Updater)
+from repro.core.queues import OverflowPolicy
+from repro.core.workflow import Workflow
+from repro.slates.http import SlateServer
+
+__all__ = [
+    # declarative app layer (the front door)
+    "App", "RuntimeConfig", "Stream", "ops", "PlanError",
+    # events & operators (shared by both API styles)
+    "EventBatch", "Operator", "Mapper", "Updater", "AssociativeUpdater",
+    "SequentialUpdater",
+    # engine layer (explicit control when the builder is not enough)
+    "Workflow", "Engine", "EngineConfig", "StateHandle", "OverflowPolicy",
+    "SlateServer",
+]

@@ -1,0 +1,9 @@
+"""Declarative application layer: builder, planner, combinators, one
+``App.run()`` front door (DESIGN.md section 11)."""
+from repro.api import ops
+from repro.api.app import App, OpRef, Stream
+from repro.api.planner import FusedMapper, Plan, PlanError
+from repro.api.runtime import RuntimeConfig
+
+__all__ = ["App", "FusedMapper", "OpRef", "Plan", "PlanError",
+           "RuntimeConfig", "Stream", "ops"]

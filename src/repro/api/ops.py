@@ -1,0 +1,127 @@
+"""Prebuilt update combinators for the declarative builder.
+
+Each factory returns an :class:`~repro.core.operators.Updater` instance
+with its subscriptions and input spec left blank — ``Stream.update``
+(or ``App.add``) wires those in, and the planner fills ``in_value_spec``
+from the upstream stream's traced spec.  They are ordinary operators:
+the subclass API can use them too by setting ``subscribes`` /
+``in_value_spec`` by hand.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.operators import AssociativeUpdater, SequentialUpdater
+
+
+class Counter(AssociativeUpdater):
+    """Count events per key — the paper's Examples 1/4 update function.
+
+    ``sum_mergeable`` by construction (all-adds, zero init), so the
+    engine routes it through the fused ``kernels/slate_update`` path
+    where that pays off.
+    """
+
+    def __init__(self, name: str = "counter", *, table_capacity: int = 4096,
+                 ttl: int = 0, sum_mergeable: bool = True):
+        self.name = name
+        self.table_capacity = table_capacity
+        self.ttl = ttl
+        self.sum_mergeable = sum_mergeable
+        self.subscribes = ()
+        self.out_streams = {}
+
+    def slate_spec(self):
+        return {"count": ((), jnp.int32)}
+
+    def lift(self, batch):
+        return {"count": jnp.ones_like(batch.key)}
+
+    def combine(self, a, b):
+        return {"count": a["count"] + b["count"]}
+
+    def merge(self, slate, delta):
+        return {"count": slate["count"] + delta["count"]}
+
+
+class TopK(AssociativeUpdater):
+    """Keep the k largest values of ``field`` seen per key.
+
+    Top-k is a commutative monoid (merge two sorted top-k lists, keep
+    the k largest), so it rides the associative pre-combine path.
+    """
+
+    def __init__(self, k: int, field: str = "x", name: str = "topk", *,
+                 table_capacity: int = 4096, ttl: int = 0):
+        self.k = k
+        self.field = field
+        self.name = name
+        self.table_capacity = table_capacity
+        self.ttl = ttl
+        self.subscribes = ()
+        self.out_streams = {}
+
+    def slate_spec(self):
+        return {"top": ((self.k,), jnp.float32)}
+
+    def init_slate(self, n: int):
+        return {"top": jnp.full((n, self.k), -jnp.inf, jnp.float32)}
+
+    def _merge_top(self, a, b):
+        cat = jnp.concatenate([a, b], axis=-1)
+        return -jnp.sort(-cat, axis=-1)[..., :self.k]
+
+    def lift(self, batch):
+        x = batch.value[self.field].astype(jnp.float32)
+        pad = jnp.full(x.shape + (self.k - 1,), -jnp.inf, jnp.float32) \
+            if self.k > 1 else jnp.zeros(x.shape + (0,), jnp.float32)
+        return {"top": jnp.concatenate([x[..., None], pad], axis=-1)}
+
+    def combine(self, a, b):
+        return {"top": self._merge_top(a["top"], b["top"])}
+
+    def merge(self, slate, delta):
+        return {"top": self._merge_top(slate["top"], delta["top"])}
+
+
+class Ema(SequentialUpdater):
+    """Exponential moving average of ``field`` per key.
+
+    Order-sensitive (the bump depends on the running value), so it runs
+    on the strict per-key-timestamp-order padded-run path.
+    """
+
+    def __init__(self, alpha: float = 0.1, field: str = "x",
+                 name: str = "ema", *, table_capacity: int = 4096,
+                 ttl: int = 0, max_run: int = 32):
+        self.alpha = float(alpha)
+        self.field = field
+        self.name = name
+        self.table_capacity = table_capacity
+        self.ttl = ttl
+        self.max_run = max_run
+        self.subscribes = ()
+        self.out_streams = {}
+
+    def slate_spec(self):
+        return {"ema": ((), jnp.float32), "n": ((), jnp.int32)}
+
+    def step(self, slate, ev):
+        x = ev["value"][self.field].astype(jnp.float32)
+        first = slate["n"] == 0
+        new = jnp.where(first, x,
+                        (1.0 - self.alpha) * slate["ema"] + self.alpha * x)
+        return {"ema": new, "n": slate["n"] + 1}, {}
+
+
+def counter(name: str = "counter", **kw) -> Counter:
+    return Counter(name, **kw)
+
+
+def topk(k: int, field: str = "x", name: str = "topk", **kw) -> TopK:
+    return TopK(k, field, name, **kw)
+
+
+def ema(alpha: float = 0.1, field: str = "x", name: str = "ema",
+        **kw) -> Ema:
+    return Ema(alpha, field, name, **kw)

@@ -1,0 +1,97 @@
+"""One front door for runtime selection (DESIGN.md section 11.3).
+
+``RuntimeConfig`` subsumes ``EngineConfig`` + ``DistConfig`` +
+``DurabilityConfig``: the app author states batch/queue sizes, a shard
+count, and (optionally) a durability directory, and ``App.run`` picks
+``Engine`` vs ``DistributedEngine`` and the chunked vs durable drive
+paths internally.  The underlying configs stay the source of truth —
+this is a declarative veneer that compiles down to them.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+from repro.core.engine import EngineConfig
+from repro.core.queues import OverflowPolicy
+
+
+@dataclass
+class RuntimeConfig:
+    batch_size: int = 256
+    queue_capacity: int = 0          # 0 = 4 * batch_size
+    chunk_size: int = 8              # ticks per device-resident scan
+    fused: str = "auto"              # slate-update backend (EngineConfig)
+    overflow: Dict[str, OverflowPolicy] = field(default_factory=dict)
+    overflow_stream: Dict[str, str] = field(default_factory=dict)
+    default_policy: OverflowPolicy = OverflowPolicy.DROP
+    # distribution: shards > 1 (or an explicit mesh) selects
+    # DistributedEngine; shards must not exceed len(jax.devices())
+    shards: int = 1
+    mesh: Optional[object] = None    # jax.sharding.Mesh
+    exchange_slack: float = 2.0
+    two_choice_threshold: int = 0
+    # durability (DESIGN.md section 10): a directory turns on the WAL +
+    # slate flush + crash recovery runtime
+    durable_dir: Optional[str] = None
+    flush_every: int = 16
+    barrier: bool = True
+    truncate_wal: bool = False
+
+    @property
+    def distributed(self) -> bool:
+        return self.shards > 1 or self.mesh is not None
+
+    def _queue_capacity(self) -> int:
+        return self.queue_capacity or 4 * self.batch_size
+
+    def _durability(self):
+        if self.durable_dir is None:
+            return None
+        from repro.core.durability import DurabilityConfig
+        from repro.slates.flush import FlushConfig, FlushPolicy
+        return DurabilityConfig(
+            dir=self.durable_dir,
+            flush=FlushConfig(policy=FlushPolicy.EVERY_K,
+                              every_k=self.flush_every),
+            barrier=self.barrier,
+            truncate_wal=self.truncate_wal)
+
+    def engine_config(self) -> EngineConfig:
+        return EngineConfig(
+            batch_size=self.batch_size,
+            queue_capacity=self._queue_capacity(),
+            overflow=dict(self.overflow),
+            overflow_stream=dict(self.overflow_stream),
+            default_policy=self.default_policy,
+            fused=self.fused,
+            chunk_size=self.chunk_size,
+            durability=self._durability())
+
+    def dist_config(self):
+        from repro.core.distributed import DistConfig
+        return DistConfig(
+            batch_size=self.batch_size,
+            queue_capacity=self._queue_capacity(),
+            overflow=dict(self.overflow),
+            overflow_stream=dict(self.overflow_stream),
+            default_policy=self.default_policy,
+            fused=self.fused,
+            chunk_size=self.chunk_size,
+            durability=self._durability(),
+            exchange_slack=self.exchange_slack,
+            two_choice_threshold=self.two_choice_threshold)
+
+    def make_mesh(self):
+        if self.mesh is not None:
+            return self.mesh
+        import jax
+        import numpy as np
+        from jax.sharding import Mesh
+        devs = jax.devices()
+        if len(devs) < self.shards:
+            raise ValueError(
+                f"RuntimeConfig(shards={self.shards}) but only "
+                f"{len(devs)} jax device(s) are visible; pass an "
+                f"explicit mesh= or lower shards")
+        return Mesh(np.asarray(devs[:self.shards]), ("data",))

@@ -127,6 +127,7 @@ class DistributedEngine:
         self._step = None
         self._chunk = None
         self._empty_step = None
+        self.tick_cursor = 0      # post-run() tick (drains included)
         self.dur: Optional[EngineDurability] = None
         if self.cfg.durability is not None:
             self.attach_durability(self.cfg.durability)
@@ -423,22 +424,51 @@ class DistributedEngine:
         dur.record_frontier(tick)
         return state, tick
 
+    def run(self, state, source_fn, n_ticks: int, *, start_tick: int = 0,
+            handle=None):
+        """Uniform host driver (same shape as ``Engine.run``):
+        ``source_fn(tick, max_events) -> dict[stream, EventBatch]`` with
+        [n_shards, B]-leading batches; ``max_events`` is always ``None``
+        here (per-shard backpressure is the exchange/queue bound, not a
+        host-side ingest limit).  With durability attached, sources are
+        write-ahead logged per shard and flush boundaries fire per the
+        flush policy — the ``run_durable`` path.  ``handle`` (a
+        :class:`~repro.core.engine.StateHandle`) is republished every
+        tick.  Returns ``(state, outputs)`` with one output dict per
+        source tick; the post-run tick cursor (drain ticks included) is
+        left on ``self.tick_cursor`` for durable drivers that resume."""
+        outputs = []
+        t = start_tick
+        for _ in range(n_ticks):
+            srcs = source_fn(t, None)
+            if self.dur is not None:
+                self.append_sources(t, srcs)
+            state, outs = self.step(state, srcs)
+            outputs.append(outs)
+            t += 1
+            if self.dur is not None and self.dur.due(t, state["tables"]):
+                state, t = self._flush_boundary(state, t)
+            if handle is not None:
+                handle.state = state
+        self.tick_cursor = t
+        return state, outputs
+
+    def drain(self, state, max_ticks: int = 64):
+        """Run source-less ticks until every shard's queues are empty
+        (or ``max_ticks``).  Returns ``(state, ticks_run)``."""
+        return self._drain_queues(state, max_ticks)
+
     def run_durable(self, state, source_fn, n_ticks: int, *,
                     start_tick: int = 0):
         """Host driver: per-tick step with write-ahead logging and
         policy-driven flush boundaries.  ``source_fn(tick)`` returns
         [n_shards, B]-leading source batches.  Returns
-        ``(state, next_tick)`` (drain ticks included)."""
+        ``(state, next_tick)`` (drain ticks included).  Thin wrapper
+        over :meth:`run` — one durable drive loop to maintain."""
         assert self.dur is not None, "attach_durability first"
-        t = start_tick
-        for _ in range(n_ticks):
-            srcs = source_fn(t)
-            self.append_sources(t, srcs)
-            state, _ = self.step(state, srcs)
-            t += 1
-            if self.dur.due(t, state["tables"]):
-                state, t = self._flush_boundary(state, t)
-        return state, t
+        state, _ = self.run(state, lambda t, _mx: source_fn(t), n_ticks,
+                            start_tick=start_tick)
+        return state, self.tick_cursor
 
     def recover(self, *, frontier=None):
         """Rebuild sharded state after losing any subset of machines:
@@ -527,6 +557,10 @@ class DistributedEngine:
             lambda *xs: jnp.stack(xs),
             *[one(sh, s) for sh in range(self.n_shards)])
             for s in tmpl}
+
+    def close(self):
+        if self.dur is not None:
+            self.dur.close()
 
     # ---- failure / elasticity (host side; master of section 4.3) ----
     def fail_shard(self, state, shard: int):

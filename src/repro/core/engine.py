@@ -101,6 +101,37 @@ def _limit_ingest(batch: "EventBatch", ingest) -> "EventBatch":
     return batch.mask(rank < ingest)
 
 
+class StateHandle:
+    """Live view of ``(engine, state)`` for concurrent readers.
+
+    The engine is functional — ``run()``/``step()`` thread an immutable
+    state value — but live slate reads (paper section 4.4: the HTTP
+    slate server answers *while the stream flows*) need the *current*
+    state.  Drivers used to hand the server a mutable
+    ``box = {"state": state}`` and rebind it every tick; instead,
+    ``Engine.run(..., handle=h)`` republishes ``h.state`` after every
+    chunk, and the server binds ``h.read_slate`` / ``h.stats`` directly.
+    Works for :class:`~repro.core.distributed.DistributedEngine` too
+    (same ``read_slate(state, ...)`` / ``stats(state)`` shape).
+    """
+
+    def __init__(self, engine, state=None):
+        self.engine = engine
+        self.state = state
+
+    def read_slate(self, updater: str, key: int):
+        return self.engine.read_slate(self.state, updater, key)
+
+    def stats(self) -> Dict[str, Any]:
+        return self.engine.stats(self.state)
+
+    def serve(self, port: int = 0):
+        """Start an HTTP slate server bound to this handle."""
+        from repro.slates.http import SlateServer
+        return SlateServer(read_fn=self.read_slate, stats_fn=self.stats,
+                           port=port)
+
+
 class Engine:
     """Host-side wrapper owning the jitted tick."""
 
@@ -298,7 +329,8 @@ class Engine:
 
     def run(self, state, source_fn, n_ticks: int, *,
             throttle_floor: int = 8, chunk_size: Optional[int] = None,
-            source_offset: int = 0):
+            source_offset: int = 0,
+            handle: Optional[StateHandle] = None):
         """Drive the engine; applies *source throttling* (paper section 5):
         if throttle hits grow, halve the ingest batch until queues drain.
         ``source_fn(tick, max_events) -> dict[stream, EventBatch]``.
@@ -324,6 +356,10 @@ class Engine:
         index, so a recovered run flushes (and drains) at the same
         boundaries as the uninterrupted run — the bitwise-parity
         contract of ``recover()``.
+
+        ``handle``: a :class:`StateHandle` republished with the current
+        state after every chunk, so concurrent readers (the HTTP slate
+        server) see live slates without the driver threading state.
         """
         chunk = chunk_size or self.cfg.chunk_size
         outputs = []
@@ -361,7 +397,15 @@ class Engine:
             if self.dur and self.dur.due(eng_tick, state["tables"]):
                 state, eng_tick = self._flush_boundary(
                     state, eng_tick, meta={"source_tick": t})
+            if handle is not None:
+                handle.state = state
         return state, outputs
+
+    def drain(self, state, max_ticks: int = 64):
+        """Run source-less ticks until every queue is empty (or
+        ``max_ticks``) — flushes in-flight events through the remaining
+        pipeline hops.  Returns ``(state, ticks_run)``."""
+        return self._drain_queues(state, max_ticks)
 
     # ---- durability (DESIGN.md section 10) ----
     def _drain_queues(self, state, max_ticks: int):

@@ -113,6 +113,41 @@ def _is_spec_leaf(x):
             and isinstance(x[0], tuple))
 
 
+# ---- value-spec utilities (shared by workflow validation + the
+#      declarative api layer) ----
+
+def is_spec_leaf(x) -> bool:
+    """A value_spec leaf is ``(shape_suffix_tuple, dtype)``."""
+    return _is_spec_leaf(x)
+
+
+def spec_of(value) -> Any:
+    """value pytree with leading batch dim -> value_spec pytree."""
+    return jax.tree.map(lambda a: (tuple(a.shape[1:]), a.dtype), value)
+
+
+def spec_matches(a, b) -> bool:
+    """Structural equality of two value_specs: same pytree shape, same
+    shape suffixes, same dtypes (dtype aliases normalized)."""
+    la, ta = jax.tree.flatten(a, is_leaf=_is_spec_leaf)
+    lb, tb = jax.tree.flatten(b, is_leaf=_is_spec_leaf)
+    if ta != tb:
+        return False
+    for x, y in zip(la, lb):
+        if not (_is_spec_leaf(x) and _is_spec_leaf(y)):
+            return False
+        if tuple(x[0]) != tuple(y[0]) or np.dtype(x[1]) != np.dtype(y[1]):
+            return False
+    return True
+
+
+def format_spec(spec) -> str:
+    """Compact human-readable value_spec (for validation errors)."""
+    def leaf(s):
+        return f"{np.dtype(s[1]).name}{list(s[0])}"
+    return str(jax.tree.map(leaf, spec, is_leaf=_is_spec_leaf))
+
+
 def concat(batches) -> EventBatch:
     cat = lambda *xs: jnp.concatenate(xs, axis=0)
     return EventBatch(

@@ -11,6 +11,7 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Dict, List, Sequence
 
+from repro.core.event import format_spec, spec_matches
 from repro.core.operators import Mapper, Operator, SequentialUpdater, Updater
 
 
@@ -50,6 +51,22 @@ class Workflow:
                         f"{op.name!r} emits into external stream {s!r}; "
                         "the paper forbids this (source-throttling "
                         "deadlock analysis, section 5)")
+        # producer/subscriber spec agreement: a mismatch here would
+        # otherwise surface as an opaque shape/dtype error inside jit
+        # (enqueue of a batch into a queue preallocated with the
+        # subscriber's in_value_spec).  External streams carry no
+        # declared spec — the subscriber's spec is authoritative there.
+        for prod in self.operators:
+            for s, out_spec in prod.out_streams.items():
+                for sub_name in self.subscribers.get(s, []):
+                    sub = self.by_name[sub_name]
+                    if not spec_matches(out_spec, sub.in_value_spec):
+                        raise ValueError(
+                            f"stream {s!r}: producer {prod.name!r} emits "
+                            f"value_spec {format_spec(out_spec)} but "
+                            f"subscriber {sub_name!r} expects "
+                            f"{format_spec(sub.in_value_spec)} "
+                            f"(in_value_spec)")
 
     # ---- helpers ----
     def updaters(self) -> List[Updater]:

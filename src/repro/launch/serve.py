@@ -211,6 +211,36 @@ class ServingEngine:
         for _ in range(n_ticks):
             self.step()
 
+    def status_server(self, port: int = 0):
+        """Live HTTP introspection while serving (the stream engine's
+        slate-server pattern applied to decode state): ``GET /status``
+        -> stats; ``GET /slate/requests/<rid>`` -> that request's token
+        stream so far.  Request state is keyed by rid exactly like a
+        slate table, so the same :class:`SlateServer` front end serves
+        both engines."""
+        from repro.slates.http import SlateServer
+
+        def read_fn(updater: str, rid: int):
+            if updater != "requests":
+                return None
+            # snapshot: the decode loop mutates these on the main
+            # thread while HTTP handlers run on server threads
+            for r in list(self.finished):
+                if r is not None and r.rid == rid:
+                    return {"tokens_out": list(r.tokens_out),
+                            "done": True}
+            for r in list(self.slot_req):
+                if r is not None and r.rid == rid:
+                    return {"tokens_out": list(r.tokens_out),
+                            "done": False}
+            for r in list(self.queue):
+                if r is not None and r.rid == rid:
+                    return {"tokens_out": [], "done": False}
+            return None
+
+        return SlateServer(read_fn=read_fn, stats_fn=self.stats,
+                           port=port)
+
     def stats(self) -> Dict[str, Any]:
         lat = [r.done_tick - r.arrived_tick for r in self.finished
                if r.done_tick is not None]
@@ -249,11 +279,18 @@ def main():
     ap.add_argument("--recover", action="store_true",
                     help="re-submit journaled unfinished requests "
                          "before accepting new ones")
+    ap.add_argument("--status-port", type=int, default=None,
+                    help="serve live /status + /slate/requests/<rid> "
+                         "over HTTP while decoding (0 = any free port)")
     args = ap.parse_args()
     cfg = reduced_config(args.arch)
     eng = ServingEngine(cfg, ServeConfig(n_slots=4, cache_len=128,
                                          prompt_bucket=32),
                         journal=args.journal)
+    server = None
+    if args.status_port is not None:
+        server = eng.status_server(args.status_port)
+        print(f"status live at http://127.0.0.1:{server.port}/status")
     rid0 = 0
     if args.recover:
         pending = eng.recover_requests()
@@ -269,6 +306,8 @@ def main():
             max_new=8))
     eng.run(args.ticks)
     print(eng.stats())
+    if server is not None:
+        server.close()
 
 
 if __name__ == "__main__":

@@ -1,6 +1,6 @@
 """Durable stream-engine launcher: the counting workflow (paper Examples
 1/4) with the DESIGN.md section 10 durability layer, exposing the
-``--recover`` path.
+``--recover`` path — built on the declarative app layer (section 11).
 
 Normal run::
 
@@ -14,6 +14,9 @@ Simulated crash (exit mid-run without flushing) then recovery::
 The recovered run restores flushed slates from the KV store, replays the
 WAL suffix from the frontier, then continues to ``--ticks`` and prints
 stats + a few slates, matching what the uninterrupted run would print.
+``--serve`` starts the live HTTP slate server for the duration of the
+run (reads go through the engine's :class:`StateHandle`, republished
+every chunk).
 """
 from __future__ import annotations
 
@@ -23,64 +26,33 @@ import json
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.durability import DurabilityConfig
-from repro.core.engine import Engine, EngineConfig
-from repro.core.event import EventBatch
-from repro.core.operators import AssociativeUpdater, Mapper
-from repro.core.workflow import Workflow
-from repro.slates.flush import FlushConfig, FlushPolicy
-
-VSPEC = {"x": ((), jnp.float32)}
+from repro import App, EventBatch, RuntimeConfig
 
 
-class SourceMapper(Mapper):
-    name = "M1"
-    subscribes = ("S1",)
-    in_value_spec = VSPEC
-    out_streams = {"S2": VSPEC}
+def make_app(args) -> App:
+    app = App("stream")
+    s1 = app.source("S1", {"x": ((), jnp.float32)})
 
-    def map_batch(self, batch):
-        return {"S2": EventBatch(sid=batch.sid, ts=batch.ts + 1,
-                                 key=batch.key, value=batch.value,
-                                 valid=batch.valid)}
+    @app.mapper(s1, out="S2", name="M1")
+    def forward(batch):
+        return EventBatch(sid=batch.sid, ts=batch.ts + 1, key=batch.key,
+                          value=batch.value, valid=batch.valid)
 
-
-class CounterUpdater(AssociativeUpdater):
-    name = "U1"
-    subscribes = ("S2",)
-    in_value_spec = VSPEC
-    out_streams = {}
-    table_capacity = 1 << 14
-    sum_mergeable = True
-
-    def slate_spec(self):
-        return {"count": ((), jnp.int32), "sum": ((), jnp.float32)}
-
-    def lift(self, batch):
+    @app.updater("S2", name="U1", merge="sum",
+                 slate={"count": ((), jnp.int32), "sum": ((), jnp.float32)},
+                 table_capacity=1 << 14)
+    def lift(batch):
         return {"count": jnp.ones_like(batch.key),
                 "sum": batch.value["x"]}
 
-    def combine(self, a, b):
-        return {"count": a["count"] + b["count"],
-                "sum": a["sum"] + b["sum"]}
-
-    def merge(self, s, d):
-        return {"count": s["count"] + d["count"],
-                "sum": s["sum"] + d["sum"]}
-
-
-def make_engine(args) -> Engine:
-    wf = Workflow([SourceMapper(), CounterUpdater()],
-                  external_streams=("S1",))
-    dur = DurabilityConfig(
-        dir=args.dir,
-        flush=FlushConfig(policy=FlushPolicy.EVERY_K,
-                          every_k=args.flush_every),
-        truncate_wal=args.truncate_wal)
-    return Engine(wf, EngineConfig(batch_size=args.batch,
-                                   queue_capacity=args.batch * 4,
-                                   chunk_size=args.chunk,
-                                   durability=dur))
+    app.start(RuntimeConfig(batch_size=args.batch,
+                            queue_capacity=args.batch * 4,
+                            chunk_size=args.chunk,
+                            durable_dir=args.dir,
+                            flush_every=args.flush_every,
+                            truncate_wal=args.truncate_wal),
+              recover=args.recover)
+    return app
 
 
 def source_fn(t, max_events, batch):
@@ -107,12 +79,14 @@ def main(argv=None):
                          "(simulated machine crash; no final flush)")
     ap.add_argument("--recover", action="store_true",
                     help="restore slates + replay WAL before running")
+    ap.add_argument("--serve", action="store_true",
+                    help="HTTP slate server live during the run")
     args = ap.parse_args(argv)
 
-    eng = make_engine(args)
+    app = make_app(args)
+    eng = app.engine
     done = 0
     if args.recover:
-        state = eng.recover()
         # resume the source stream where it left off: the frontier's
         # driver cursor survives even full WAL truncation, and events
         # carry their source tick as ts, so post-frontier WAL records
@@ -124,28 +98,28 @@ def main(argv=None):
             if "S1" in srcs:
                 done = max(done, int(np.asarray(srcs["S1"].ts)[0]) + 1)
         print(f"recovered: frontier tick {eng.dur.frontier.tick}, "
-              f"engine tick {eng.stats(state)['tick']}, "
+              f"engine tick {app.stats()['tick']}, "
               f"resuming at source tick {done}")
-    else:
-        state = eng.init_state()
+
+    if args.serve:
+        server = app.serve()
+        print(f"slates live at http://127.0.0.1:{server.port}/slate/U1/<k>")
 
     remaining = max(0, args.ticks - done)
     if args.crash_at is not None:
         remaining = min(remaining, args.crash_at - done)
-    state, _ = eng.run(
-        state, lambda t, mx: source_fn(t, mx, args.batch),
-        remaining, source_offset=done)
+    app.run(lambda t, mx: source_fn(t, mx, args.batch), remaining,
+            source_offset=done)
 
     if args.crash_at is not None and not args.recover:
         print(f"CRASH at source tick {args.crash_at} (state dropped; "
               f"rerun with --recover)")
         return   # no close(): unflushed slates die with the process
 
-    stats = eng.stats(state)
-    print(json.dumps(stats, indent=2))
+    print(json.dumps(app.stats(), indent=2))
     for key in (0, 1, 2):
-        print(f"slate[{key}] =", eng.read_slate(state, "U1", key))
-    eng.close()
+        print(f"slate[{key}] =", app.read_slate("U1", key))
+    app.close()
 
 
 if __name__ == "__main__":

@@ -1,0 +1,479 @@
+"""Declarative application API (DESIGN.md section 11): builder/subclass
+parity, cyclic graphs, planner fusion, the run() front door."""
+import importlib.util
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import (App, AssociativeUpdater, EventBatch, Engine,
+                   EngineConfig, Mapper, PlanError, RuntimeConfig,
+                   StateHandle, Workflow, ops)
+
+VSPEC = {"retailer": ((), jnp.int32)}
+
+
+def load_quickstart():
+    path = (pathlib.Path(__file__).resolve().parent.parent
+            / "examples" / "quickstart.py")
+    spec = importlib.util.spec_from_file_location("quickstart_example",
+                                                  path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+# ---- the subclass-API quickstart (the seed's original spelling) ----
+
+class RetailerMapper(Mapper):
+    name = "M1"
+    subscribes = ("checkins",)
+    in_value_spec = VSPEC
+    out_streams = {"S2": VSPEC}
+
+    def map_batch(self, batch):
+        rid = batch.value["retailer"]
+        return {"S2": EventBatch(sid=batch.sid, ts=batch.ts + 1, key=rid,
+                                 value={"retailer": rid},
+                                 valid=batch.valid & (rid >= 0))}
+
+
+class SubclassCounter(AssociativeUpdater):
+    name = "U1"
+    subscribes = ("S2",)
+    in_value_spec = VSPEC
+    out_streams = {}
+    table_capacity = 256
+
+    def slate_spec(self):
+        return {"count": ((), jnp.int32)}
+
+    def lift(self, batch):
+        return {"count": jnp.ones_like(batch.key)}
+
+    def combine(self, a, b):
+        return {"count": a["count"] + b["count"]}
+
+    def merge(self, slate, delta):
+        return {"count": slate["count"] + delta["count"]}
+
+
+def checkin_batches(n_ticks=10, B=64, seed=0):
+    rng = np.random.default_rng(seed)
+    out = []
+    for t in range(n_ticks):
+        rid = np.where(rng.random(B) < 0.3, rng.integers(0, 4, B),
+                       -1).astype(np.int32)
+        out.append(EventBatch.of(
+            key=rng.integers(0, 1 << 30, B).astype(np.int32),
+            value={"retailer": rid}, ts=np.full(B, t, np.int32)))
+    return out
+
+
+def drive(wf, batches, B=64):
+    eng = Engine(wf, EngineConfig(batch_size=B, queue_capacity=4 * B))
+    state = eng.init_state()
+    for b in batches:
+        state, _ = eng.step(state, {"checkins": b})
+    state, _ = eng.drain(state)
+    return eng, state
+
+
+def assert_tree_bitwise(a, b):
+    la, ta = jax.tree.flatten(a)
+    lb, tb = jax.tree.flatten(b)
+    assert ta == tb, f"{ta} != {tb}"
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_quickstart_builder_matches_subclass_bitwise():
+    """The example's builder app compiles to the same workflow the
+    subclass API hand-writes: identical operator/stream names, and
+    bitwise-identical engine state (queues, tables, counters) after an
+    identical feed."""
+    mod = load_quickstart()
+    wf_b = mod.app.build()
+    wf_s = Workflow([RetailerMapper(), SubclassCounter()],
+                    external_streams=("checkins",))
+    assert [op.name for op in wf_b.operators] == \
+        [op.name for op in wf_s.operators]
+    assert wf_b.subscribers == wf_s.subscribers
+
+    batches = checkin_batches()
+    _, st_b = drive(wf_b, batches)
+    _, st_s = drive(wf_s, batches)
+    assert_tree_bitwise(st_b, st_s)
+
+
+def test_quickstart_app_section_is_short():
+    """Acceptance: the paper's Example 1 in <= 20 lines of app code."""
+    path = (pathlib.Path(__file__).resolve().parent.parent
+            / "examples" / "quickstart.py")
+    text = path.read_text().splitlines()
+    lo = next(i for i, l in enumerate(text) if "--- app" in l)
+    hi = next(i for i, l in enumerate(text) if "--- end app" in l)
+    body = [l for l in text[lo + 1:hi]
+            if l.strip() and not l.strip().startswith("#")]
+    assert len(body) <= 20, f"{len(body)} lines of app code:\n" + \
+        "\n".join(body)
+
+
+def test_run_front_door_and_read_slate():
+    # the quickstart graph on a fresh App, via the fluent sugar
+    app = App("front_door")
+    checkins = app.source("checkins", VSPEC)
+
+    @checkins.map(out="S2", name="M1")
+    def at_retailer(batch):
+        rid = batch.value["retailer"]
+        return EventBatch(sid=batch.sid, ts=batch.ts + 1, key=rid,
+                          value={"retailer": rid},
+                          valid=batch.valid & (rid >= 0))
+
+    at_retailer.update(ops.counter("U1", table_capacity=256))
+
+    batches = checkin_batches()
+    truth = {}
+    for b in batches:
+        rid = np.asarray(b.value["retailer"])
+        for r in rid[rid >= 0]:
+            truth[int(r)] = truth.get(int(r), 0) + 1
+
+    it = iter(batches)
+    app.run(lambda t, mx: {"checkins": next(it)}, len(batches),
+            runtime=RuntimeConfig(batch_size=64), drain=True)
+    for r, c in truth.items():
+        assert int(app.read_slate("U1", r)["count"]) == c
+    stats = app.stats()
+    assert stats["processed"]["U1"] == sum(truth.values())
+    app.close()
+
+
+def test_cyclic_graph_via_forward_refs():
+    """U1 emits into 'bounce'; M2 maps bounce back into U1's input
+    stream — a cycle, expressed by subscribing to streams by name
+    before their producers exist."""
+    app = App("cyclic")
+    src = app.source("src", {"x": ((), jnp.int32)})
+
+    @app.mapper(src, out="loop", name="M1")
+    def inject(b):
+        return EventBatch(b.sid, b.ts + 1, b.key, {"x": b.value["x"]},
+                          b.valid)
+
+    # M2 subscribes to 'bounce' before U1 (its producer) is declared
+    @app.mapper("bounce", out="loop", name="M2")
+    def reinject(b):
+        return EventBatch(b.sid, b.ts + 1, b.key, {"x": b.value["x"]},
+                          b.valid & (b.key < 4))
+
+    def cascade(keys, old, new, ts):
+        crossed = (old["count"] < 3) & (new["count"] >= 3)
+        return {"bounce": EventBatch(
+            sid=jnp.zeros_like(keys), ts=ts + 1, key=keys + 1,
+            value={"x": jnp.zeros_like(keys)}, valid=crossed)}
+
+    @app.updater("loop", name="U1", merge="sum", emit=cascade,
+                 slate={"count": ((), jnp.int32)})
+    def lift(b):
+        return {"count": jnp.ones_like(b.key)}
+
+    wf = app.build()
+    assert set(wf.subscribers["loop"]) == {"U1"}
+    assert set(wf.subscribers["bounce"]) == {"M2"}
+
+    # 9 events on key 0 -> count crosses 3 once -> one bounce to key 1
+    def src_fn(t, mx):
+        return {"src": EventBatch.of(key=np.zeros(3, np.int32),
+                                     value={"x": np.zeros(3, np.int32)},
+                                     ts=np.full(3, t, np.int32))}
+
+    app.run(src_fn, 3, runtime=RuntimeConfig(batch_size=16), drain=True)
+    assert int(app.read_slate("U1", 0)["count"]) == 9
+    assert int(app.read_slate("U1", 1)["count"]) == 1
+    app.close()
+
+
+def _chain_app(fuse):
+    app = App("chain")
+    s1 = app.source("S1", {"x": ((), jnp.float32)})
+
+    @app.mapper(s1, out="Sa")
+    def m1(b):
+        return EventBatch(b.sid, b.ts + 1, b.key,
+                          {"x": b.value["x"] + 1.0}, b.valid)
+
+    @app.mapper("Sa", out="Sb")
+    def m2(b):
+        return EventBatch(b.sid, b.ts + 1, b.key,
+                          {"x": b.value["x"] * 2.0}, b.valid)
+
+    @app.mapper("Sb", out="Sc")
+    def m3(b):
+        return EventBatch(b.sid, b.ts + 1, b.key * 2,
+                          {"x": b.value["x"]}, b.valid)
+
+    @app.updater("Sc", name="U1", merge="sum",
+                 slate={"count": ((), jnp.int32), "sum": ((), jnp.float32)})
+    def lift(b):
+        return {"count": jnp.ones_like(b.key), "sum": b.value["x"]}
+
+    wf = app.build(fuse=fuse)
+    return app, wf
+
+
+def test_planner_fuses_linear_mapper_chain():
+    app_f, wf_f = _chain_app(True)
+    app_u, wf_u = _chain_app(False)
+    assert len(wf_u.operators) == 4
+    assert len(wf_f.operators) == 2            # m1+m2+m3 fused, U1
+    assert app_f.plan.fused_chains == [("m1", "m2", "m3")]
+    fused = wf_f.operators[0]
+    assert fused.subscribes == ("S1",)
+    assert set(fused.out_streams) == {"Sc"}
+
+
+@pytest.mark.parametrize("impl", ["jnp", "interpret"])
+def test_fused_chain_matches_unfused(impl):
+    """Fusion changes queue hops and tick alignment, not event->event
+    semantics: final slate contents agree with the unfused build on
+    both the portable and the kernel (interpret) slate-update
+    backends."""
+    rng = np.random.default_rng(3)
+    keys = rng.integers(0, 40, 128).astype(np.int32)
+    xs = rng.normal(size=128).astype(np.float32)
+    batches = [EventBatch.of(key=keys, value={"x": xs},
+                             ts=np.full(128, t, np.int32))
+               for t in range(5)]
+
+    slates = {}
+    for fuse in (True, False):
+        _, wf = _chain_app(fuse)
+        eng = Engine(wf, EngineConfig(batch_size=128,
+                                      queue_capacity=512, fused=impl))
+        state = eng.init_state()
+        for b in batches:
+            state, _ = eng.step(state, {"S1": b})
+        state, _ = eng.drain(state)
+        slates[fuse] = {int(k): eng.read_slate(state, "U1", int(k) * 2)
+                        for k in np.unique(keys)}
+    for k in slates[True]:
+        sf, su = slates[True][k], slates[False][k]
+        assert sf is not None and su is not None
+        assert int(sf["count"]) == int(su["count"])
+        np.testing.assert_allclose(np.asarray(sf["sum"]),
+                                   np.asarray(su["sum"]), rtol=1e-6)
+
+
+def test_no_fusion_when_stream_has_two_subscribers():
+    app = App("fanout")
+    s1 = app.source("S1", {"x": ((), jnp.float32)})
+
+    @app.mapper(s1, out="Sa")
+    def m1(b):
+        return EventBatch(b.sid, b.ts + 1, b.key, b.value, b.valid)
+
+    @app.mapper("Sa", out="Sb")
+    def m2(b):
+        return EventBatch(b.sid, b.ts + 1, b.key, b.value, b.valid)
+
+    app.stream("Sa").update(ops.counter("Ua"))   # second subscriber
+    app.stream("Sb").update(ops.counter("Ub"))
+    wf = app.build(fuse=True)
+    assert len(wf.operators) == 4                # nothing fused
+    assert app.plan.fused_chains == []
+
+
+def test_ops_combinators():
+    app = App("combinators")
+    src = app.source("S1", {"x": ((), jnp.float32)})
+
+    @app.mapper(src, out="S2")
+    def fwd(b):
+        return EventBatch(b.sid, b.ts + 1, b.key, b.value, b.valid)
+
+    app.stream("S2").update(ops.topk(3, "x", "T1"))
+    app.stream("S2").update(ops.ema(0.5, "x", "E1", max_run=64))
+
+    rng = np.random.default_rng(7)
+    xs = rng.normal(size=32).astype(np.float32)
+
+    def src_fn(t, mx):
+        return {"S1": EventBatch.of(key=np.zeros(32, np.int32),
+                                    value={"x": xs},
+                                    ts=np.arange(32, dtype=np.int32))}
+
+    app.run(src_fn, 1, runtime=RuntimeConfig(batch_size=64), drain=True)
+    top = np.asarray(app.read_slate("T1", 0)["top"])
+    np.testing.assert_allclose(top, np.sort(xs)[::-1][:3], rtol=1e-6)
+
+    ema = float(app.read_slate("E1", 0)["ema"])
+    ref = xs[0]
+    for x in xs[1:]:
+        ref = 0.5 * ref + 0.5 * x
+    assert abs(ema - ref) < 1e-4
+    app.close()
+
+
+# ---- planner validation errors (actionable, named) ----
+
+def test_planner_unresolvable_cycle_names_streams():
+    app = App("stuck")
+
+    @app.mapper("c2", out="c1", name="Ma")
+    def ma(b):
+        return EventBatch(b.sid, b.ts, b.key, b.value, b.valid)
+
+    @app.mapper("c1", out="c2", name="Mb")
+    def mb(b):
+        return EventBatch(b.sid, b.ts, b.key, b.value, b.valid)
+
+    with pytest.raises(PlanError, match="app.stream"):
+        app.build()
+    # an explicit spec breaks the inference cycle
+    app2 = App("unstuck")
+    app2.stream("c2", {"x": ((), jnp.int32)})
+
+    @app2.mapper("c2", out="c1", name="Ma")
+    def ma2(b):
+        return EventBatch(b.sid, b.ts, b.key, b.value, b.valid)
+
+    @app2.mapper("c1", out="c2", name="Mb")
+    def mb2(b):
+        return EventBatch(b.sid, b.ts, b.key, b.value, b.valid)
+
+    wf = app2.build()
+    assert {op.name for op in wf.operators} == {"Ma", "Mb"}
+
+
+def test_planner_rejects_unconsumed_source_and_ghost_stream():
+    app = App("bad")
+    app.source("S1", {"x": ((), jnp.int32)})
+    with pytest.raises(PlanError, match="no subscribers"):
+        app.build()
+
+    app2 = App("ghost")
+    s1 = app2.source("S1", {"x": ((), jnp.int32)})
+    app2.stream("nowhere", {"x": ((), jnp.int32)})
+    s1.update(ops.counter("U1"))
+    with pytest.raises(PlanError, match="nowhere"):
+        app2.build()
+
+
+def test_planner_rejects_duplicate_names():
+    app = App("dups")
+    s1 = app.source("S1", {"x": ((), jnp.int32)})
+    s1.update(ops.counter("U1"))
+    with pytest.raises(PlanError, match="U1"):
+        s1.update(ops.counter("U1"))
+
+
+def test_graph_frozen_after_start():
+    app = App("frozen")
+    s1 = app.source("S1", {"x": ((), jnp.int32)})
+    s1.update(ops.counter("U1"))
+    app.start(RuntimeConfig(batch_size=8))
+    with pytest.raises(RuntimeError, match="already running"):
+        app.source("S2", {"x": ((), jnp.int32)})
+    app.close()
+
+
+# ---- state handle (the box-hack replacement) ----
+
+def test_state_handle_live_during_run():
+    app = App("handle")
+    s1 = app.source("S1", {"x": ((), jnp.int32)})
+    s1.update(ops.counter("U1"))
+    h = app.start(RuntimeConfig(batch_size=16, chunk_size=2))
+    seen = []
+
+    def src(t, mx):
+        # read through the handle mid-run: state must always be live
+        if t > 0:
+            seen.append(h.stats()["tick"])
+        return {"S1": EventBatch.of(key=np.full(4, 7, np.int32),
+                                    value={"x": np.ones(4, np.int32)},
+                                    ts=np.full(4, t, np.int32))}
+
+    app.run(src, 8, drain=True)
+    assert seen and seen[-1] > seen[0]          # handle advanced mid-run
+    assert int(app.read_slate("U1", 7)["count"]) == 32
+    assert app.handle is h and isinstance(h, StateHandle)
+    app.close()
+
+
+# ---- front door: durability + distribution ----
+
+def test_front_door_durable_recover(tmp_path):
+    def build():
+        app = App("durable")
+        s1 = app.source("S1", {"x": ((), jnp.float32)})
+
+        @app.mapper(s1, out="S2", name="M1")
+        def fwd(b):
+            return EventBatch(b.sid, b.ts + 1, b.key, b.value, b.valid)
+
+        @app.updater("S2", name="U1", merge="sum",
+                     slate={"count": ((), jnp.int32)})
+        def lift(b):
+            return {"count": jnp.ones_like(b.key)}
+        return app
+
+    rt = lambda: RuntimeConfig(batch_size=32, chunk_size=4,
+                               durable_dir=str(tmp_path), flush_every=8)
+
+    def src(t, mx):
+        r = np.random.default_rng(t)
+        return {"S1": EventBatch.of(
+            key=r.integers(0, 10, 16).astype(np.int32),
+            value={"x": r.normal(size=16).astype(np.float32)},
+            ts=np.full(16, t, np.int32))}
+
+    app = build()
+    app.run(src, 16, runtime=rt(), drain=True)
+    want = {k: app.read_slate("U1", k) for k in range(10)}
+    del app   # crash: no close(), unflushed state dropped
+
+    app2 = build()
+    app2.start(rt(), recover=True)
+    app2.run(src, 0, drain=True)
+    for k, w in want.items():
+        got = app2.read_slate("U1", k)
+        if w is None:
+            assert got is None
+        else:
+            assert int(got["count"]) == int(w["count"])
+    app2.close()
+
+
+def test_front_door_selects_distributed_engine():
+    from jax.sharding import Mesh
+    from repro.core.distributed import DistributedEngine
+    app = App("dist")
+    s1 = app.source("S1", {"x": ((), jnp.float32)})
+    s1.update(ops.counter("U1", sum_mergeable=False))
+    mesh = Mesh(np.asarray(jax.devices()[:1]), ("data",))
+    app.start(RuntimeConfig(batch_size=16, mesh=mesh))
+    assert isinstance(app.engine, DistributedEngine)
+
+    def src(t, mx):   # [n_shards, B]-leading batches
+        return {"S1": EventBatch.of(
+            key=np.full(4, 3, np.int32),
+            value={"x": np.ones(4, np.float32)},
+            ts=np.full(4, t, np.int32))}
+
+    stacked = lambda t, mx: {
+        s: jax.tree.map(lambda x: x[None], b)
+        for s, b in src(t, mx).items()}
+    app.run(stacked, 4, drain=True)
+    assert int(app.read_slate("U1", 3)["count"]) == 16
+    app.close()
+
+
+def test_public_surface():
+    import repro
+    assert set(repro.__all__) <= set(dir(repro))
+    assert repro.App is App and repro.ops.counter is ops.counter

@@ -1,0 +1,68 @@
+"""Build-time stream-spec validation in Workflow._validate: a
+producer's out_streams value_spec must structurally match each
+subscriber's in_value_spec — mismatches raise at construction with
+operator/stream names instead of opaque shape errors inside jit."""
+import jax.numpy as jnp
+import pytest
+
+from repro.core.event import spec_matches
+from repro.core.workflow import Workflow
+from tests.conftest import CountingUpdater, PassThroughMapper, VSPEC
+
+
+def test_spec_matches_normalizes_dtypes():
+    import numpy as np
+    assert spec_matches({"x": ((), jnp.int32)}, {"x": ((), np.int32)})
+    assert not spec_matches({"x": ((), jnp.int32)},
+                            {"x": ((), jnp.float32)})
+    assert not spec_matches({"x": ((2,), jnp.int32)},
+                            {"x": ((3,), jnp.int32)})
+    assert not spec_matches({"x": ((), jnp.int32)},
+                            {"y": ((), jnp.int32)})
+
+
+def test_matching_specs_build():
+    Workflow([PassThroughMapper(), CountingUpdater()],
+             external_streams=("S1",))
+
+
+def test_dtype_mismatch_raises_with_names():
+    class FloatMapper(PassThroughMapper):
+        out_streams = {"S2": {"x": ((), jnp.float32)}}
+
+    with pytest.raises(ValueError) as ei:
+        Workflow([FloatMapper(), CountingUpdater()],
+                 external_streams=("S1",))
+    msg = str(ei.value)
+    assert "S2" in msg and "M1" in msg and "U1" in msg
+
+
+def test_shape_mismatch_raises():
+    class WideMapper(PassThroughMapper):
+        out_streams = {"S2": {"x": ((4,), jnp.int32)}}
+
+    with pytest.raises(ValueError, match="S2"):
+        Workflow([WideMapper(), CountingUpdater()],
+                 external_streams=("S1",))
+
+
+def test_structure_mismatch_raises():
+    class RenamedMapper(PassThroughMapper):
+        out_streams = {"S2": {"y": ((), jnp.int32)}}
+
+    with pytest.raises(ValueError, match="S2"):
+        Workflow([RenamedMapper(), CountingUpdater()],
+                 external_streams=("S1",))
+
+
+def test_multi_producer_each_checked():
+    class GoodMapper(PassThroughMapper):
+        name = "M2"
+
+    class BadMapper(PassThroughMapper):
+        name = "M3"
+        out_streams = {"S2": {"x": ((), jnp.float32)}}
+
+    with pytest.raises(ValueError, match="M3"):
+        Workflow([PassThroughMapper(), GoodMapper(), BadMapper(),
+                  CountingUpdater()], external_streams=("S1",))
