@@ -335,6 +335,104 @@ def bench_failover():
 
 
 # ----------------------------------------------------------------------
+# live elasticity (DESIGN.md section 12): runs in a subprocess with 16
+# forced host devices so the main bench process keeps the real device
+# ----------------------------------------------------------------------
+
+_ELASTIC_CODE = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
+import time
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import Mesh
+from repro.core.event import EventBatch
+from repro.core.operators import AssociativeUpdater
+from repro.core.workflow import Workflow
+from repro.core.distributed import DistributedEngine, DistConfig, _salt
+
+VSPEC = {'x': ((), jnp.float32)}
+
+class Counter(AssociativeUpdater):
+    name = 'U1'; subscribes = ('S1',); in_value_spec = VSPEC
+    out_streams = {}; table_capacity = 1 << 13
+    def slate_spec(self): return {'count': ((), jnp.int32)}
+    def lift(self, b): return {'count': jnp.ones_like(b.key)}
+    def combine(self, a, b): return {'count': a['count'] + b['count']}
+    def merge(self, s, d): return {'count': s['count'] + d['count']}
+
+def gb(keys, t, n_sh):
+    k = keys.reshape(n_sh, -1)
+    return EventBatch(sid=jnp.zeros(k.shape, jnp.int32),
+                      ts=jnp.full(k.shape, t, jnp.int32),
+                      key=jnp.asarray(k),
+                      value={'x': jnp.ones(k.shape, jnp.float32)},
+                      valid=jnp.ones(k.shape, bool))
+
+def build(n, **kw):
+    mesh = Mesh(np.array(jax.devices()[:n]), ('data',))
+    wf = Workflow([Counter()], external_streams=('S1',))
+    eng = DistributedEngine(wf, mesh, DistConfig(
+        batch_size=256, queue_capacity=2048, **kw))
+    return eng, eng.init_state()
+
+# elastic_scale_8to16: live scale mid-run (drain + migrate + first
+# post-scale step, which includes the recompile the grow forces)
+eng, state = build(8)
+rng = np.random.default_rng(0)
+for t in range(8):
+    state, _ = eng.step(state, {'S1': gb(
+        rng.integers(0, 1 << 14, 2048).astype(np.int32), t, 8)})
+rows = int(jax.device_get((state['tables']['U1'].keys != -1).sum()))
+t0 = time.perf_counter()
+state, rep = eng.scale(state, 16)
+state, _ = eng.step(state, {'S1': gb(
+    rng.integers(0, 1 << 14, 2048).astype(np.int32), 8, 16)})
+jax.block_until_ready(state['tick'])
+us = (time.perf_counter() - t0) * 1e6
+print(f"ELASTIC,{us:.2f},{rows},{sum(rep.moved_rows.values())}")
+
+# rebalance_hot_ring: load-aware reweight + migration, content-only
+# ring swap (no recompile) + next step
+eng2, state2 = build(8, exchange_slack=8.0)
+hot = np.full(2048, 7, np.int32)
+for t in range(8):
+    state2, _ = eng2.step(state2, {'S1': gb(hot, t, 8)})
+t0 = time.perf_counter()
+state2, rep2 = eng2.rebalance(state2)
+state2, _ = eng2.step(state2, {'S1': gb(hot, 8, 8)})
+jax.block_until_ready(state2['tick'])
+us2 = (time.perf_counter() - t0) * 1e6
+hot_owner = int(eng2.ring.owners(np.array([7], np.int32),
+                                 _salt('U1'))[0])
+counts = eng2.ring.vnode_counts()
+print(f"REBALANCE,{us2:.2f},{counts[hot_owner]},{counts.sum()}")
+"""
+
+
+def bench_elasticity():
+    import subprocess
+    root = os.path.join(os.path.dirname(__file__), "..")
+    r = subprocess.run(
+        [sys.executable, "-c", _ELASTIC_CODE], capture_output=True,
+        text=True, timeout=560,
+        env={**os.environ, "PYTHONPATH": os.path.join(root, "src")})
+    if r.returncode != 0:      # pragma: no cover - surfacing CI breakage
+        raise RuntimeError(f"elasticity bench failed:\n{r.stderr}")
+    for line in r.stdout.splitlines():
+        if line.startswith("ELASTIC,"):
+            _, us, rows, moved = line.split(",")
+            row("elastic_scale_8to16", float(us),
+                f"live scale 8->16 mid-run: drain + migrate {moved} of "
+                f"{rows} rows + recompile+step; loss-free (vs "
+                f"fail_shard)")
+        elif line.startswith("REBALANCE,"):
+            _, us, vn, budget = line.split(",")
+            row("rebalance_hot_ring", float(us),
+                f"load-aware reweight: hot shard down to {vn}/{budget} "
+                f"vnodes, ring swap without recompilation")
+
+
+# ----------------------------------------------------------------------
 # WAL replay (beyond-paper recovery)
 # ----------------------------------------------------------------------
 
@@ -491,6 +589,7 @@ def main() -> None:
     bench_hotspot_key_splitting()
     bench_slate_store()
     bench_failover()
+    bench_elasticity()
     bench_wal()
     bench_durability()
     bench_serving()

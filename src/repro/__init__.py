@@ -7,6 +7,8 @@ declarative builder compiles to the engine layer below, which stays
 importable (``repro.core.*``, ``repro.slates.*``) for engine work.
 """
 from repro.api import App, PlanError, RuntimeConfig, Stream, ops
+from repro.core.distributed import (AutoscalePolicy, DistConfig,
+                                    DistributedEngine, MigrationReport)
 from repro.core.engine import Engine, EngineConfig, StateHandle
 from repro.core.event import EventBatch
 from repro.core.operators import (AssociativeUpdater, Mapper, Operator,
@@ -24,4 +26,7 @@ __all__ = [
     # engine layer (explicit control when the builder is not enough)
     "Workflow", "Engine", "EngineConfig", "StateHandle", "OverflowPolicy",
     "SlateServer",
+    # live elasticity (DESIGN.md section 12)
+    "AutoscalePolicy", "DistributedEngine", "DistConfig",
+    "MigrationReport",
 ]

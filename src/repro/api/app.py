@@ -301,7 +301,14 @@ class App:
         runs source-less ticks afterwards until the queues are empty
         (``True`` = up to 64, or an int bound).  Returns the list of
         per-tick output batches; the final state lives on
-        ``app.handle`` for ``read_slate``/``stats``/``serve``."""
+        ``app.handle`` for ``read_slate``/``stats``/``serve``.
+
+        With ``runtime.autoscale`` set (an
+        :class:`~repro.core.distributed.AutoscalePolicy`, distributed
+        runtimes only), the drive loop grows/shrinks the active shard
+        set and rebalances the weighted ring mid-run — ``source_fn``
+        must then size its batches by the live
+        ``app.engine.n_shards`` (DESIGN.md section 12)."""
         h = self.start(runtime, recover=recover)
         outputs: list = []
         if n_ticks:

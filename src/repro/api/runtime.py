@@ -37,6 +37,10 @@ class RuntimeConfig:
     flush_every: int = 16
     barrier: bool = True
     truncate_wal: bool = False
+    # live elasticity (DESIGN.md section 12): an AutoscalePolicy lets
+    # App.run() grow/shrink the active shard set and rebalance the
+    # weighted ring mid-run (distributed runtimes only)
+    autoscale: Optional[object] = None   # core.distributed.AutoscalePolicy
 
     @property
     def distributed(self) -> bool:
@@ -58,6 +62,10 @@ class RuntimeConfig:
             truncate_wal=self.truncate_wal)
 
     def engine_config(self) -> EngineConfig:
+        if self.autoscale is not None:
+            raise ValueError(
+                "autoscale needs a distributed runtime: set shards > 1 "
+                "(or pass mesh=)")
         return EngineConfig(
             batch_size=self.batch_size,
             queue_capacity=self._queue_capacity(),
@@ -69,7 +77,12 @@ class RuntimeConfig:
             durability=self._durability())
 
     def dist_config(self):
-        from repro.core.distributed import DistConfig
+        from repro.core.distributed import AutoscalePolicy, DistConfig
+        if self.autoscale is not None and \
+                not isinstance(self.autoscale, AutoscalePolicy):
+            raise TypeError(
+                f"autoscale must be an AutoscalePolicy, got "
+                f"{type(self.autoscale).__name__}")
         return DistConfig(
             batch_size=self.batch_size,
             queue_capacity=self._queue_capacity(),
@@ -80,7 +93,8 @@ class RuntimeConfig:
             chunk_size=self.chunk_size,
             durability=self._durability(),
             exchange_slack=self.exchange_slack,
-            two_choice_threshold=self.two_choice_threshold)
+            two_choice_threshold=self.two_choice_threshold,
+            autoscale=self.autoscale)
 
     def make_mesh(self):
         if self.mesh is not None:

@@ -36,6 +36,20 @@ def _bshape(mask, like):
     return mask.reshape(mask.shape + (1,) * (like.ndim - 1))
 
 
+def _last_valid_of_run(key, valid):
+    """Per-key write point: the last *valid* row of each sorted run.
+
+    Invalid rows are rewritten to the sink key 2**31-1 by
+    ``sort_by_key_ts`` and ordered behind valid rows; a genuine event
+    with that key shares the sink run, so the run's write point must be
+    its last valid row — marking the run's final row would either drop
+    the key (final row invalid) or leak invalid rows' lift deltas into
+    its slate."""
+    next_key = jnp.concatenate([key[1:], jnp.full((1,), -3, jnp.int32)])
+    next_valid = jnp.concatenate([valid[1:], jnp.zeros((1,), bool)])
+    return (key != next_key) | (valid & ~next_valid)
+
+
 def _segmented_combine(updater, deltas, boundary):
     """Inclusive segmented scan: each row ends up holding the combine of
     its run's prefix; run-last rows hold run totals."""
@@ -87,8 +101,7 @@ def apply_associative(updater: AssociativeUpdater, table: tbl.SlateTable,
     key = batch.key
     prev_key = jnp.concatenate([jnp.full((1,), -2, jnp.int32), key[:-1]])
     boundary = key != prev_key                       # run starts
-    next_key = jnp.concatenate([key[1:], jnp.full((1,), -3, jnp.int32)])
-    run_last = key != next_key                       # run totals live here
+    run_last = _last_valid_of_run(key, batch.valid)  # run totals live here
 
     deltas = updater.lift(batch)
     scanned = _segmented_combine(updater, deltas, boundary)
@@ -119,12 +132,16 @@ def _apply_associative_fused(updater: AssociativeUpdater,
     uses)."""
     batch = batch.sort_by_key_ts()
     key = batch.key                       # invalid rows sorted to sink
-    next_key = jnp.concatenate([key[1:], jnp.full((1,), -3, jnp.int32)])
-    run_last = key != next_key
+    run_last = _last_valid_of_run(key, batch.valid)
     unique = run_last & batch.valid
 
     spec = packing.pack_spec(updater.slate_spec())
     deltas = updater.lift(batch)
+    # segment totals sum whole runs; invalid rows sharing the sink run
+    # with a genuine key 2**31-1 must contribute the additive neutral
+    deltas = jax.tree.map(
+        lambda d: jnp.where(_bshape(batch.valid, d), d,
+                            jnp.zeros_like(d)), deltas)
     if (jax.tree.structure(deltas)
             != jax.tree.structure(updater.slate_spec(),
                                   is_leaf=_is_spec_leaf)):

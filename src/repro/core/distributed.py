@@ -4,8 +4,12 @@ Muppet's data path — workers hash events to peers and write directly into
 their queues — becomes one ``all_to_all`` per workflow hop: each shard
 buckets its outgoing events by destination shard (ring lookup), the
 collective delivers every bucket, and the receiving shard enqueues.  No
-master is on the data path; the ring is a runtime *array* input, so
-failure re-routes and elastic joins swap rings without recompiling.
+master is on the data path; the ring is a runtime *array* input with a
+fixed shape, so failure re-routes and elastic joins/leaves/reweights
+swap ring contents without recompiling — ``scale`` / ``add_shards`` /
+``remove_shards`` / ``rebalance`` migrate slates and in-flight events
+loss-free at a drain barrier (DESIGN.md section 12); only growing the
+physical slot count recompiles.
 
 Two-choice dispatch (Muppet 2.0 dual queues): for associative updaters,
 per-key load beyond ``two_choice_threshold`` in a tick spills to the
@@ -102,10 +106,38 @@ def exchange(batch: EventBatch, dest, axis_names, cap_per_dest: int
 
 
 @dataclass
+class AutoscalePolicy:
+    """Declarative elasticity for ``DistributedEngine.run`` (DESIGN.md
+    section 12): scale the active shard set at given source ticks and/or
+    rebalance the weighted ring from the per-shard load signal every k
+    source ticks.  Exposed through the front door as
+    ``RuntimeConfig(autoscale=AutoscalePolicy(...))``."""
+
+    scale_at: Dict[int, int] = field(default_factory=dict)
+    # source tick -> target active shard count (fires before that tick)
+    rebalance_every: int = 0     # source ticks between reweights; 0 = off
+    drain_max: int = 64          # drain-barrier bound per reconfigure
+    on_change: Optional[Any] = None  # callback(MigrationReport), e.g. log
+
+
+@dataclass
+class MigrationReport:
+    """What a live reconfigure moved (scale / rebalance / leave)."""
+
+    n_shards: int                # physical shard slots after
+    active: List[int]            # active shard ids after
+    drain_ticks: int             # barrier ticks run before migration
+    moved_rows: Dict[str, int]   # slate rows re-homed, per updater
+    moved_events: Dict[str, int]  # queued events re-homed, per operator
+    recompiled: bool             # physical grow (shape change) happened
+
+
+@dataclass
 class DistConfig(EngineConfig):
     exchange_slack: float = 2.0   # per-dest bucket capacity multiplier
     two_choice_threshold: int = 0  # 0 = off; else per-key spill point
     axis_names: Tuple[str, ...] = ("data",)
+    autoscale: Optional[AutoscalePolicy] = None
 
 
 class DistributedEngine:
@@ -127,6 +159,7 @@ class DistributedEngine:
         self._step = None
         self._chunk = None
         self._empty_step = None
+        self._load_mark = np.zeros(self.n_shards)  # rebalance window base
         self.tick_cursor = 0      # post-run() tick (drains included)
         self.dur: Optional[EngineDurability] = None
         if self.cfg.durability is not None:
@@ -436,7 +469,72 @@ class DistributedEngine:
         :class:`~repro.core.engine.StateHandle`) is republished every
         tick.  Returns ``(state, outputs)`` with one output dict per
         source tick; the post-run tick cursor (drain ticks included) is
-        left on ``self.tick_cursor`` for durable drivers that resume."""
+        left on ``self.tick_cursor`` for durable drivers that resume.
+
+        With ``cfg.autoscale`` set, the drive loop fires live
+        reconfigures at the policy's source-tick boundaries:
+        ``scale_at[t]`` rescales the active shard set before tick ``t``
+        runs, and every ``rebalance_every`` ticks the weighted ring is
+        rebuilt from the per-shard load signal.  ``source_fn`` must size
+        its batches by the *current* ``self.n_shards`` (it changes at
+        scale boundaries).
+
+        Durable caveat (the PR-2 contract: this engine keys WAL records
+        by the *engine* tick, which also counts drain ticks): flush and
+        reconfigure barriers consume tick indices, so with durability
+        attached ``source_fn`` sees gaps and — under autoscale — may be
+        invoked fewer than ``n_ticks`` times in total.  Keep
+        ``source_fn`` a pure function of ``t``; drivers resume from
+        ``self.tick_cursor`` / the frontier meta, never from a count of
+        feeds (decoupling source index from engine tick here is a
+        ROADMAP open item)."""
+        pol = self.cfg.autoscale
+        if pol is None:
+            return self._run_span(state, source_fn, n_ticks,
+                                  start_tick=start_tick, handle=handle)
+        end = start_tick + n_ticks
+        marks = {t for t in pol.scale_at if start_tick <= t < end}
+        if pol.rebalance_every:
+            marks |= {t for t in range(start_tick, end)
+                      if t > start_tick
+                      and (t - start_tick) % pol.rebalance_every == 0}
+        outputs: List[Dict[str, Any]] = []
+        t = start_tick
+        self.tick_cursor = t
+        for boundary in sorted(marks) + [end]:
+            if boundary > t:
+                state, outs = self._run_span(state, source_fn,
+                                             boundary - t, start_tick=t,
+                                             handle=handle)
+                outputs.extend(outs)
+                # durable spans consume extra tick indices as flush
+                # drain ticks; resuming at the nominal boundary would
+                # re-feed an already-logged tick and write duplicate
+                # (tick, shard) WAL records that replay drops
+                t = max(boundary, self.tick_cursor)
+            if boundary < end:          # fire before tick `boundary` runs
+                if boundary in pol.scale_at:
+                    state, rep = self.scale(state, pol.scale_at[boundary],
+                                            drain_max=pol.drain_max)
+                else:
+                    state, rep = self.rebalance(state,
+                                                drain_max=pol.drain_max)
+                if rep is not None and pol.on_change is not None:
+                    pol.on_change(rep)
+                if self.dur is not None:
+                    # the reconfigure's own drain/flush ticks advanced
+                    # the engine tick; WAL records are keyed by it, so
+                    # the source counter must not fall behind the new
+                    # frontier (replay would skip those records)
+                    t = max(t, int(np.asarray(
+                        jax.device_get(state["tick"])).max()))
+                if handle is not None:
+                    handle.state = state
+        self.tick_cursor = max(t, self.tick_cursor)
+        return state, outputs
+
+    def _run_span(self, state, source_fn, n_ticks: int, *,
+                  start_tick: int = 0, handle=None):
         outputs = []
         t = start_tick
         for _ in range(n_ticks):
@@ -485,6 +583,18 @@ class DistributedEngine:
         offs = list(frontier.wal_offset) \
             if isinstance(frontier.wal_offset, (list, tuple)) \
             else [frontier.wal_offset] * self.n_shards
+        if len(offs) < self.n_shards:   # frontier predates a scale-up:
+            offs += [0] * (self.n_shards - len(offs))  # replay new WALs
+                                                       # from the start
+        # frontier from a *larger* pre-crash shard set (scaled up, then
+        # restarted smaller): the extra shards' WAL suffixes must replay
+        # too — their events re-route by the current ring anyway
+        extra_wals = []
+        if len(offs) > len(dur.wals):
+            from repro.slates.wal import WriteAheadLog
+            extra_wals = [WriteAheadLog(dur.cfg.wal_path(s),
+                                        sync=dur.cfg.sync_wal)
+                          for s in range(len(dur.wals), len(offs))]
 
         state = jax.device_get(self.init_state())
         state["tick"] = np.full((self.n_shards,), f_tick, np.int32)
@@ -518,16 +628,38 @@ class DistributedEngine:
         state = jax.device_put(state, self._shard_tree(state))
 
         cur = f_tick
-        for tk, by_shard in merge_replay_ticks(dur.wals, offs):
-            if tk < f_tick:
-                continue
-            while cur < tk:
-                state = self._step_empty(state)
+        try:
+            for tk, by_shard in merge_replay_ticks(
+                    list(dur.wals) + extra_wals, offs):
+                if tk < f_tick:
+                    continue
+                if len(offs) > self.n_shards:
+                    by_shard = self._fold_shard_sources(by_shard)
+                while cur < tk:
+                    state = self._step_empty(state)
+                    cur += 1
+                state, _ = self.step(state, self._stack_shard_sources(
+                    by_shard))
                 cur += 1
-            state, _ = self.step(state, self._stack_shard_sources(
-                by_shard))
-            cur += 1
+        finally:
+            for w in extra_wals:
+                w.close()
         return state
+
+    def _fold_shard_sources(self, by_shard: Dict[int, Dict[str, Any]]
+                            ) -> Dict[int, Dict[str, Any]]:
+        """Fold replay records from shard slots beyond the current
+        physical size onto live slots (source slot is irrelevant — the
+        tick re-routes every event by key through the current ring)."""
+        folded: Dict[int, Dict[str, Any]] = {}
+        for sh, src in sorted(by_shard.items()):
+            tgt = sh % self.n_shards
+            cur = folded.setdefault(tgt, {})
+            for s, b in src.items():
+                cur[s] = b if s not in cur else concat(
+                    [jax.tree.map(jnp.asarray, cur[s]),
+                     jax.tree.map(jnp.asarray, b)])
+        return folded
 
     def _stack_shard_sources(self, by_shard: Dict[int, Dict[str, Any]]
                              ) -> Dict[str, EventBatch]:
@@ -565,11 +697,11 @@ class DistributedEngine:
     # ---- failure / elasticity (host side; master of section 4.3) ----
     def fail_shard(self, state, shard: int):
         """Machine crash: re-route ring; the dead shard's unflushed slates
-        and queued events are lost (paper semantics)."""
+        and queued events are lost (paper semantics).  The ring table is
+        shape-stable (padded), so the swap needs no recompilation —
+        contrast :meth:`scale` / :meth:`remove_shards`, whose planned
+        membership changes migrate state loss-free first."""
         self.ring.fail(shard)
-        self._step = None  # ring arrays change shape only on rebuild size
-        self._chunk = None
-        self._empty_step = None
 
         def zap(leaf):
             if hasattr(leaf, "ndim") and leaf.ndim >= 1 and \
@@ -591,6 +723,362 @@ class DistributedEngine:
                 dropped=t.dropped)
         state["tables"] = new_tables
         return state
+
+    # ---- live elasticity (DESIGN.md section 12) ---------------------
+    @property
+    def active_shards(self) -> List[int]:
+        return [int(s) for s in np.nonzero(self.ring.alive)[0]]
+
+    def scale(self, state, new_n_shards: int, *, drain_max: int = 64):
+        """Live resize to ``new_n_shards`` *active* shards, loss-free.
+
+        Scale-up reactivates dead slots first (content-only ring swap,
+        no recompilation), then grows the physical slot count / mesh if
+        needed (the one move that recompiles).  Scale-down deactivates
+        the highest-numbered active shards and migrates everything off
+        them.  Returns ``(state, MigrationReport)``.
+        """
+        if new_n_shards < 1:
+            raise ValueError("need at least one active shard")
+        active = self.active_shards
+        if new_n_shards == len(active):
+            return state, self._report(0, {}, {}, recompiled=False)
+        if new_n_shards < len(active):
+            return self.remove_shards(state, active[new_n_shards:],
+                                      drain_max=drain_max)
+        dead = [s for s in range(self.n_shards) if not self.ring.alive[s]]
+        activate = dead[:new_n_shards - len(active)]
+        grow_to = new_n_shards if len(active) + len(activate) \
+            < new_n_shards else None
+        return self._reconfigure(state, grow_to=grow_to,
+                                 activate=activate, drain_max=drain_max)
+
+    def add_shards(self, state, k: int, *, drain_max: int = 64):
+        """Grow the active shard set by ``k`` (elastic join)."""
+        return self.scale(state, len(self.active_shards) + k,
+                          drain_max=drain_max)
+
+    def remove_shards(self, state, shards, *, drain_max: int = 64):
+        """Planned leave: migrate the given shards' slates and queued
+        events to the survivors, then deactivate them — loss-free,
+        unlike :meth:`fail_shard`.  Content-only ring swap (the slots
+        stay allocated; rejoin them later via :meth:`scale`)."""
+        shards = [int(s) for s in np.atleast_1d(shards)]
+        for s in shards:
+            if s >= self.n_shards or not self.ring.alive[s]:
+                raise ValueError(f"shard {s} is not active")
+        if len(self.active_shards) - len(shards) < 1:
+            raise ValueError("cannot remove every active shard")
+        return self._reconfigure(state, deactivate=shards,
+                                 drain_max=drain_max)
+
+    def shard_load(self, state) -> np.ndarray:
+        """Per-shard pressure signal from the queue stats: high-water
+        marks + backlog, with drops weighted heavier (a dropping shard
+        is past saturation)."""
+        load = np.zeros(self.n_shards)
+        for q in state["queues"].values():
+            g = lambda x: np.asarray(jax.device_get(x), np.float64)
+            load += g(q.peak) + g(q.size) + 4.0 * g(q.dropped)
+        return load
+
+    def rebalance(self, state, *, gain: float = 0.5, floor: float = 0.25,
+                  cap: float = 4.0, drain_max: int = 64):
+        """Load-aware ring reweighting: shards whose queues ran hot
+        since the last rebalance shed vnode arcs (key ranges) to cold
+        shards.  Content-only ring swap + row migration — no
+        recompilation.  Returns ``(state, report_or_None)``."""
+        load = self.shard_load(state)
+        if load.shape != self._load_mark.shape:
+            self._load_mark = np.zeros_like(load)
+        delta = np.clip(load - self._load_mark, 0.0, None)
+        alive = self.ring.alive
+        mean = float(delta[alive].mean()) if alive.any() else 0.0
+        if mean <= 0.0:
+            self._load_mark = load
+            return state, None
+        # cold shards (delta < mean) gain weight, hot shards lose it;
+        # gain damps the step, floor/cap bound the skew.  Dead slots
+        # keep their stored weight — their zero load is absence, not
+        # coldness, and must not compound toward cap across windows
+        ratio = (mean + 1.0) / (delta + 1.0)
+        target = self.ring.weights * np.power(ratio, gain)
+        target = np.clip(target / target[alive].mean(), floor, cap)
+        target = np.where(alive, target, self.ring.weights)
+        if np.array_equal(self.ring.vnode_counts(),
+                          self.ring.counts_for(target)):
+            # balanced load: the reweight would not move a single vnode
+            # — skip the drain barrier + host remap entirely
+            self._load_mark = load
+            return state, None
+        return self._reconfigure(state, weights=target,
+                                 drain_max=drain_max)
+
+    def _report(self, drain_ticks, moved_rows, moved_events, *,
+                recompiled: bool) -> MigrationReport:
+        return MigrationReport(
+            n_shards=self.n_shards, active=self.active_shards,
+            drain_ticks=drain_ticks, moved_rows=moved_rows,
+            moved_events=moved_events, recompiled=recompiled)
+
+    def _reconfigure(self, state, *, grow_to: Optional[int] = None,
+                     activate=(), deactivate=(), weights=None,
+                     drain_max: int = 64):
+        """The migration kernel behind scale/remove/rebalance:
+
+        1. drain-barrier the queues (and flush, with durability);
+        2. swap in the new ring (membership / weights / physical size);
+        3. re-home slate rows, leftover queued events, and the per-shard
+           WAL/frontier set to the new owners (host-side remap +
+           ``device_put`` with the target sharding — the elastic-restore
+           move of ``distributed/checkpoint.py``);
+        4. resume on the swapped ring — recompilation only if the
+           physical slot count grew.
+        """
+        state, drained = self._drain_queues(state, drain_max)
+        if self.dur is not None:
+            tick = int(np.asarray(jax.device_get(state["tick"])).max())
+            state, _ = self._flush_boundary(state, tick)
+        host = jax.device_get(state)
+        old_n = self.n_shards
+
+        grew = grow_to is not None and grow_to > old_n
+        if grew:
+            self._grow_physical(grow_to)
+        for s in activate:
+            self.ring.join(int(s))
+        for s in deactivate:
+            self.ring.fail(int(s))
+        if weights is not None:
+            self.ring.set_weights(weights)
+
+        if grew:
+            host = self._host_grow(host, old_n)
+        moved_rows = self._migrate_tables_host(host["tables"])
+        moved_events = self._migrate_queues_host(host["queues"])
+
+        state = jax.tree.map(
+            jnp.asarray, host,
+            is_leaf=lambda x: isinstance(x, np.ndarray))
+        state = jax.device_put(state, self._shard_tree(state))
+        if self.dur is not None:
+            self.dur.resize(self.n_shards)
+        # queue peak counters restarted at migration: rebase the
+        # rebalance window on the post-migration load, or the next
+        # window's delta would subtract peaks that no longer exist
+        self._load_mark = self.shard_load(state)
+        return state, self._report(drained, moved_rows, moved_events,
+                                   recompiled=grew)
+
+    def _grow_physical(self, new_n: int):
+        """More shard slots: bigger mesh over more devices, bigger
+        state arrays — shapes change, jit caches reset."""
+        if len(self.axes) != 1:
+            raise NotImplementedError(
+                "live physical growth needs a single-axis mesh; "
+                "multi-axis meshes can only scale within their dead "
+                "slots (or re-shard offline via distributed/checkpoint)")
+        devs = jax.devices()
+        if len(devs) < new_n:
+            raise ValueError(
+                f"scale to {new_n} shards needs {new_n} devices; only "
+                f"{len(devs)} visible")
+        self.mesh = Mesh(np.asarray(devs[:new_n]), self.axes)
+        self.n_shards = new_n
+        self.ring.grow(new_n)
+        self._sharding = NamedSharding(self.mesh, P(self.axes))
+        self._replicated = NamedSharding(self.mesh, P())
+        cap = int(self.cfg.batch_size * self.cfg.exchange_slack / new_n)
+        self.cap_per_dest = max(8, cap)
+        self._step = self._chunk = self._empty_step = None
+
+    def _host_grow(self, host, old_n: int):
+        """Pad every [old_n, ...] leaf to the new physical size: fresh
+        queues/tables/counters for the new slots, tick carried over."""
+        pad_n = self.n_shards - old_n
+
+        def pad(leaf, fill=0):
+            if not (hasattr(leaf, "ndim") and leaf.ndim >= 1
+                    and leaf.shape[0] == old_n):
+                return leaf
+            ext = np.full((pad_n,) + leaf.shape[1:], fill, leaf.dtype)
+            return np.concatenate([np.asarray(leaf), ext])
+
+        out = jax.tree.map(pad, host)
+        tick = int(np.asarray(host["tick"]).max())
+        out["tick"] = pad(host["tick"], fill=tick)
+        new_tables = {}
+        for name, t in out["tables"].items():
+            keys = np.asarray(t.keys)
+            keys[old_n:] = -1                   # new slots start empty
+            new_tables[name] = tbl.SlateTable(
+                keys=keys, ts=t.ts, dirty=t.dirty, vals=t.vals,
+                dropped=t.dropped)
+        out["tables"] = new_tables
+        return out
+
+    def _migrate_tables_host(self, tables) -> Dict[str, int]:
+        """Re-home slate rows whose ring owner changed (host-side).
+
+        Every shard's table is rebuilt from scratch rather than patched
+        in place: deleting moved-out rows from an open-addressing table
+        would punch holes in probe chains, making rows behind a freed
+        slot invisible to later lookups.  Row *values* move bit-exactly;
+        ``ts``/``dirty`` are preserved; same-key rows converging on one
+        shard (two-choice partials) merge via the updater's combine
+        (else last-ts-wins).  Rows a destination table cannot place are
+        dropped and counted — the paper's bounded-resource semantics."""
+        moved: Dict[str, int] = {}
+        n = self.n_shards
+        for up in self.wf.updaters():
+            t = tables[up.name]
+            keys = np.array(t.keys)
+            sh, slot = np.nonzero(keys != -1)
+            moved[up.name] = 0
+            if len(sh) == 0:
+                continue
+            ts = np.asarray(t.ts)[sh, slot]
+            dirty = np.asarray(t.dirty)[sh, slot]
+            vals = jax.tree.map(lambda v: np.asarray(v)[sh, slot],
+                                t.vals)
+            rkeys = keys[sh, slot]
+            owner = self.ring.owners(rkeys, _salt(up.name))
+            moved[up.name] = int((owner != sh).sum())
+            drop = np.array(t.dropped)
+            out = [None] * n
+            for d in range(n):
+                pick = np.nonzero(owner == d)[0]
+                loc = self._build_local_table(
+                    up, int(drop[d]), rkeys[pick], ts[pick],
+                    dirty[pick],
+                    jax.tree.map(lambda v: v[pick], vals))
+                out[d] = jax.device_get(loc)
+            tables[up.name] = jax.tree.map(
+                lambda *xs: np.stack(xs), *out)
+        return moved
+
+    def _build_local_table(self, up, dropped0: int, in_keys, in_ts,
+                           in_dirty, in_vals) -> tbl.SlateTable:
+        """One shard's fresh table from migrated rows (dup keys folded
+        with the updater's combine, clean rows stay clean)."""
+        combine = getattr(up, "combine", None)
+        # fold duplicate keys (two-choice partials converging here)
+        first: Dict[int, int] = {}
+        in_ts = np.array(in_ts)
+        in_dirty = np.array(in_dirty)
+        in_vals = jax.tree.map(np.array, in_vals)
+        for i, k in enumerate(in_keys.tolist()):
+            if k in first:
+                j = first[k]
+                a = jax.tree.map(lambda v: v[j], in_vals)
+                b = jax.tree.map(lambda v: v[i], in_vals)
+                row = combine(a, b) if combine is not None else \
+                    (b if in_ts[i] >= in_ts[j] else a)
+                for lf, rw in zip(jax.tree.leaves(in_vals),
+                                  jax.tree.leaves(row)):
+                    lf[j] = np.asarray(rw)
+                in_ts[j] = max(in_ts[j], in_ts[i])
+                in_dirty[j] = True
+            else:
+                first[k] = i
+        uniq = np.asarray(sorted(first.values()), np.int64)
+        in_keys = np.asarray(in_keys)[uniq]
+        in_ts, in_dirty = in_ts[uniq], in_dirty[uniq]
+        in_vals = jax.tree.map(lambda v: v[uniq], in_vals)
+
+        local = tbl.make_table(up.table_capacity, up.slate_spec())
+        drops = 0
+        for i in range(0, len(in_keys), 256):
+            k = jnp.asarray(in_keys[i:i + 256], jnp.int32)
+            valid = jnp.ones(k.shape, bool)
+            local, slot, _, placed = tbl.insert_or_find(local, k, valid)
+            local = tbl.write_slates(
+                local, slot, placed,
+                jax.tree.map(lambda v: jnp.asarray(v[i:i + 256]),
+                             in_vals),
+                jnp.asarray(in_ts[i:i + 256], jnp.int32))
+            # write_slates marks landed rows dirty; rows flushed before
+            # the move stay clean (they still match the store)
+            keep_clean = jnp.asarray(~in_dirty[i:i + 256]) & placed
+            safe = jnp.where(keep_clean, slot, local.capacity)
+            local = tbl.SlateTable(
+                keys=local.keys, ts=local.ts,
+                dirty=local.dirty.at[safe].set(False, mode="drop"),
+                vals=local.vals, dropped=local.dropped)
+            drops += int(jax.device_get((~placed).sum()))
+        return tbl.SlateTable(
+            keys=local.keys, ts=local.ts, dirty=local.dirty,
+            vals=local.vals,
+            dropped=jnp.asarray(dropped0 + drops, jnp.int32))
+
+    def _migrate_queues_host(self, queues) -> Dict[str, int]:
+        """Re-home in-flight queued events (anything the drain barrier
+        could not retire) through the new ring, rebuilding each queue
+        compacted at head 0.  ``dropped`` counters carry; ``peak``
+        restarts at the post-migration backlog (it is the rebalance
+        window's load signal)."""
+        moved: Dict[str, int] = {}
+        n = self.n_shards
+        for op in self.wf.operators:
+            q = queues[op.name]
+            sizes = np.asarray(q.size)
+            heads = np.asarray(q.head)
+            cap = q.buf.key.shape[1]
+            moved[op.name] = 0
+            total = int(sizes.sum())
+            new_sizes = np.zeros(n, np.int32)
+            new_drop = np.asarray(q.dropped).copy()
+            if total == 0:
+                queues[op.name] = q_mod.QueueState(
+                    buf=q.buf, head=np.zeros(n, np.int32),
+                    size=new_sizes, dropped=new_drop,
+                    peak=np.zeros(n, np.int32))
+                continue
+            ev = {"sid": [], "ts": [], "key": [], "valid": [], "src": []}
+            leaves, treedef = jax.tree.flatten(
+                jax.tree.map(np.asarray, q.buf.value))
+            ev_leaves: List[list] = [[] for _ in leaves]
+            for s in range(min(len(sizes), n)):
+                idx = (heads[s] + np.arange(sizes[s])) % cap
+                ev["sid"].append(np.asarray(q.buf.sid)[s][idx])
+                ev["ts"].append(np.asarray(q.buf.ts)[s][idx])
+                ev["key"].append(np.asarray(q.buf.key)[s][idx])
+                ev["valid"].append(np.asarray(q.buf.valid)[s][idx])
+                ev["src"].append(np.full(len(idx), s, np.int32))
+                for li, lf in enumerate(leaves):
+                    ev_leaves[li].append(lf[s][idx])
+            cat = {k: np.concatenate(v) for k, v in ev.items()}
+            cat_leaves = [np.concatenate(v) for v in ev_leaves]
+            dest = self.ring.owners(cat["key"], _salt(op.name))
+            moved[op.name] = int((dest != cat["src"]).sum())
+            # rebuild each destination queue: stayers + movers, FIFO
+            buf_sid = np.zeros((n, cap), np.int32)
+            buf_ts = np.zeros((n, cap), np.int32)
+            buf_key = np.zeros((n, cap), np.int32)
+            buf_valid = np.zeros((n, cap), bool)
+            buf_leaves = [np.zeros((n, cap) + lf.shape[2:], lf.dtype)
+                          for lf in leaves]
+            for d in range(n):
+                pick = np.nonzero(dest == d)[0]
+                k = len(pick)
+                if k > cap:
+                    new_drop[d] += k - cap
+                    pick = pick[:cap]
+                    k = cap
+                buf_sid[d, :k] = cat["sid"][pick]
+                buf_ts[d, :k] = cat["ts"][pick]
+                buf_key[d, :k] = cat["key"][pick]
+                buf_valid[d, :k] = cat["valid"][pick]
+                for bl, cl in zip(buf_leaves, cat_leaves):
+                    bl[d, :k] = cl[pick]
+                new_sizes[d] = k
+            value = jax.tree.unflatten(treedef, buf_leaves)
+            queues[op.name] = q_mod.QueueState(
+                buf=EventBatch(sid=buf_sid, ts=buf_ts, key=buf_key,
+                               value=value, valid=buf_valid),
+                head=np.zeros(n, np.int32), size=new_sizes,
+                dropped=new_drop, peak=new_sizes.copy())
+        return moved
 
     def stats(self, state):
         g = lambda x: np.asarray(jax.device_get(x))

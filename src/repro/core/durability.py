@@ -185,6 +185,30 @@ class EngineDurability:
         off = self.frontier.wal_offset
         return list(off) if isinstance(off, (list, tuple)) else [off]
 
+    def resize(self, n_shards: int):
+        """Live elasticity (DESIGN.md section 12): grow the per-shard
+        WAL set to the new physical shard count and re-record the
+        frontier with the extended offset list.  Called at a scale
+        boundary right after a flush barrier, so old shards' frontier
+        offsets are current and new shards start at their (empty) WAL
+        head.  Deactivated shards keep their WAL — it simply receives
+        nothing until the slot rejoins."""
+        assert self.n_shards is not None, \
+            "resize() is for per-shard durability (DistributedEngine)"
+        if n_shards < len(self.wals):
+            raise ValueError("durability cannot shrink below the "
+                             "physical shard count")
+        offs = self.frontier_offsets()
+        for s in range(len(self.wals), n_shards):
+            self.wals.append(WriteAheadLog(self.cfg.wal_path(s),
+                                           sync=self.cfg.sync_wal))
+            offs.append(self.wals[s].offset)
+        self.n_shards = n_shards
+        self.frontier = FlushFrontier(tick=self.frontier.tick,
+                                      wal_offset=offs,
+                                      meta=self.frontier.meta)
+        self.frontier.save(self.cfg.frontier_path())
+
     def close(self):
         try:
             self.flusher.close()

@@ -84,12 +84,17 @@ class EventBatch:
     def sort_by_key_ts(self) -> "EventBatch":
         """Deterministic (key, ts) order; invalid rows sink to the end.
         This realizes the paper's 'events fed in increasing timestamp
-        order with deterministic tie-breaking' per updater.  Two stable
-        passes give a lexicographic (key, ts) sort without 64-bit keys."""
+        order with deterministic tie-breaking' per updater.  Stable
+        passes give a lexicographic (key, ts) sort without 64-bit keys.
+        The middle pass pushes invalid rows behind valid ones *within*
+        the sink key group too, so a genuine event with key 2**31 - 1
+        (the sink value) keeps its valid run contiguous — the updater
+        paths write a run's total at its last valid row."""
         by_ts = self.take(jnp.argsort(self.ts, stable=True))
-        invalid_key = jnp.where(by_ts.valid, by_ts.key,
+        by_val = by_ts.take(jnp.argsort(~by_ts.valid, stable=True))
+        invalid_key = jnp.where(by_val.valid, by_val.key,
                                 jnp.int32(2**31 - 1))
-        out = by_ts.take(jnp.argsort(invalid_key, stable=True))
+        out = by_val.take(jnp.argsort(invalid_key, stable=True))
         # rewrite invalid rows' keys to the sink value so the key array is
         # truly sorted (downstream run detection relies on it)
         skey = jnp.where(out.valid, out.key, jnp.int32(2**31 - 1))

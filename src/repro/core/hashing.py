@@ -5,6 +5,22 @@ their shard ids).  Routing is therefore data, not code: failure re-routes
 and elastic scale-ups swap in a new ring without recompiling the engine
 step — the TPU analogue of Muppet's "master broadcasts the failure, all
 workers update their hash ring" (paper section 4.3).
+
+Two properties make live elasticity cheap (DESIGN.md section 12):
+
+- **Fixed-shape tables.**  ``table()`` always returns arrays of length
+  ``n_shards * vnodes``, padded at the top with ``0xFFFFFFFF`` entries
+  that alias the wrap target (the first real virtual node's shard).
+  Membership changes (``fail``/``join``) and weight changes therefore
+  swap ring *contents*, never ring *shapes* — no jit recompilation on
+  the hot path.  Only growing the physical shard count changes shapes.
+- **Weighted virtual nodes.**  Each alive shard owns a contiguous block
+  of vnode indices ``0..c_i-1`` with ``c_i`` proportional to its weight
+  (sum fixed at ``alive_count * vnodes``).  Raising a weight *adds*
+  high-index vnodes (stealing arcs); lowering it *removes* them
+  (releasing arcs) — consistent-hashing minimal movement for load-aware
+  rebalancing, and bit-identical to the classic equal-vnode ring when
+  all weights are 1.
 """
 from __future__ import annotations
 
@@ -15,6 +31,7 @@ import jax.numpy as jnp
 import numpy as np
 
 U32 = jnp.uint32
+_PAD_HASH = np.uint32(0xFFFFFFFF)
 
 
 def mix32(x):
@@ -40,49 +57,140 @@ def _mix32_np(x: np.ndarray) -> np.ndarray:
 
 
 class HashRing:
-    """Consistent-hash ring with virtual nodes (host-built, device-queried).
+    """Consistent-hash ring with weighted virtual nodes (host-built,
+    device-queried).
 
-    ``table()`` returns (ring_hashes [R] ascending uint32, ring_shards [R])
-    to be fed to the jitted step; ``route`` runs on device.
+    ``table()`` returns (ring_hashes [R] ascending uint32, ring_shards
+    [R]) with R = ``n_shards * vnodes`` fixed, to be fed to the jitted
+    step; ``route`` runs on device.
     """
 
     def __init__(self, n_shards: int, *, vnodes: int = 64,
-                 alive: Optional[np.ndarray] = None, seed: int = 0x5EED):
+                 alive: Optional[np.ndarray] = None,
+                 weights: Optional[np.ndarray] = None, seed: int = 0x5EED):
         self.n_shards = n_shards
         self.vnodes = vnodes
         self.seed = seed
         self.alive = (np.ones(n_shards, bool) if alive is None
                       else np.asarray(alive, bool).copy())
+        self.weights = (np.ones(n_shards, np.float64) if weights is None
+                        else np.clip(np.asarray(weights, np.float64), 0.0,
+                                     None).copy())
         self._build()
 
+    def vnode_counts(self) -> np.ndarray:
+        """Per-shard vnode allocation: proportional to weight over the
+        alive set, every alive positive-weight shard gets >= 1, total
+        fixed at ``alive_count * vnodes``."""
+        return self.counts_for(self.weights)
+
+    def counts_for(self, weights: np.ndarray) -> np.ndarray:
+        """The vnode allocation a candidate weight vector would yield
+        (pure — lets callers detect no-op reweights without a ring
+        rebuild)."""
+        w = np.where(self.alive, np.clip(weights, 0.0, None), 0.0)
+        total = float(w.sum())
+        alive_n = int(self.alive.sum())
+        if alive_n == 0 or total <= 0.0:
+            raise RuntimeError("hash ring has no alive shards with "
+                               "positive weight")
+        budget = alive_n * self.vnodes
+        raw = budget * w / total
+        counts = np.floor(raw).astype(np.int64)
+        counts = np.where((w > 0) & (counts == 0), 1, counts)
+        # largest-remainder: settle to the exact budget
+        frac = raw - np.floor(raw)
+        order = [int(i) for i in np.argsort(-frac, kind="stable")
+                 if w[i] > 0]
+        i = 0
+        while counts.sum() < budget:
+            counts[order[i % len(order)]] += 1
+            i += 1
+        donors = [int(i) for i in np.argsort(frac, kind="stable")
+                  if w[i] > 0]
+        i = 0
+        while counts.sum() > budget:
+            d = donors[i % len(donors)]
+            if counts[d] > 1:
+                counts[d] -= 1
+            i += 1
+        return counts.astype(np.int64)
+
     def _build(self):
-        shards = np.nonzero(self.alive)[0]
-        if len(shards) == 0:
-            raise RuntimeError("hash ring has no alive shards")
-        ids = np.repeat(shards, self.vnodes).astype(np.uint32)
-        vix = np.tile(np.arange(self.vnodes, dtype=np.uint32), len(shards))
+        counts = self.vnode_counts()
+        ids = np.repeat(np.arange(self.n_shards, dtype=np.uint32),
+                        counts)
+        vix = np.concatenate([np.arange(c, dtype=np.uint32)
+                              for c in counts]) if len(ids) else \
+            np.zeros(0, np.uint32)
         h = _mix32_np(ids * np.uint32(0x9E3779B9) ^ _mix32_np(
             vix + np.uint32(self.seed)))
         order = np.argsort(h, kind="stable")
-        self.ring_hashes = h[order]
-        self.ring_shards = ids[order].astype(np.int32)
+        real_h = h[order]
+        real_s = ids[order].astype(np.int32)
+        # pad to the fixed physical shape.  All pad hashes tie at the
+        # max value, so searchsorted(side="left") only ever *lands* on
+        # the first pad entry — it aliases the wrap target (the first
+        # real vnode's shard), keeping route() exact.  The remaining
+        # pad entries cycle through the real ring so route_secondary's
+        # bounded clockwise walk still meets distinct shards when it
+        # crosses the pad region (a single-shard pad would collapse the
+        # two-choice secondary to the primary near the ring top).
+        R = self.n_shards * self.vnodes
+        pad = R - len(real_h)
+        self.real_size = len(real_h)
+        self.ring_hashes = np.concatenate(
+            [real_h, np.full(pad, _PAD_HASH, np.uint32)])
+        self.ring_shards = np.concatenate(
+            [real_s, real_s[np.arange(pad) % len(real_s)]])
 
-    # ---- host-side membership changes (master broadcast) ----
+    # ---- host-side membership / weight changes (master broadcast) ----
     def fail(self, shard: int):
         self.alive[shard] = False
         self._build()
 
     def join(self, shard: int):
+        """(Re)activate a slot.  Its weight resets to neutral — a
+        joining shard has fresh, empty state; any pre-leave load skew
+        no longer describes it."""
         if shard >= self.n_shards:
-            grown = np.ones(shard + 1, bool)
-            grown[:self.n_shards] = self.alive
-            self.alive = grown
-            self.n_shards = shard + 1
+            self.grow(shard + 1)
         self.alive[shard] = True
+        self.weights[shard] = 1.0
+        self._build()
+
+    def grow(self, new_n_shards: int):
+        """Extend the physical shard count (ring shape changes — the one
+        elastic move that recompiles; see DistributedEngine.scale)."""
+        if new_n_shards < self.n_shards:
+            raise ValueError("grow() cannot shrink; use fail()/leave "
+                             "to deactivate shards")
+        grown = np.ones(new_n_shards, bool)
+        grown[:self.n_shards] = self.alive
+        w = np.ones(new_n_shards, np.float64)
+        w[:self.n_shards] = self.weights
+        self.alive, self.weights = grown, w
+        self.n_shards = new_n_shards
+        self._build()
+
+    def set_weights(self, weights: np.ndarray):
+        """Load-aware reweighting: a hot shard (low weight) sheds arcs.
+        Same-shape swap — no recompilation."""
+        w = np.clip(np.asarray(weights, np.float64), 0.0, None)
+        if w.shape != (self.n_shards,):
+            raise ValueError(f"weights must have shape "
+                             f"({self.n_shards},), got {w.shape}")
+        self.weights = w.copy()
         self._build()
 
     def table(self) -> Tuple[jnp.ndarray, jnp.ndarray]:
         return (jnp.asarray(self.ring_hashes), jnp.asarray(self.ring_shards))
+
+    def owners(self, keys: np.ndarray, dest_salt: int) -> np.ndarray:
+        """Host-side routing (migration planning): shard id per key."""
+        rh, rs = self.table()
+        return np.asarray(jax.device_get(
+            route(jnp.asarray(keys, jnp.int32), dest_salt, rh, rs)))
 
 
 def route(keys, dest_salt: int, ring_hashes, ring_shards):

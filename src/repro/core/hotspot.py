@@ -6,12 +6,30 @@ each of which counts just a subset of Best Buy events" — for associative
 ``k*W + r`` by a splitting mapper; per-sub-key partial aggregates are
 re-combined on read (or by a periodic re-aggregation updater).
 
+Sub-key arithmetic is *windowed* so it never overflows int32: only keys
+inside ``|k| < split_window(W) = 2**30 // W`` are split (their sub-keys
+tile ``(-2**30, 2**30)`` exactly, wrap-free); keys outside the window
+pass through unsplit, so the int32 extremes round-trip bit-exactly and
+the old silent wrap collisions between *in-window-sized* keys are gone
+(e.g. ``2**28`` and ``-2**28`` collided at ``W=8``).  The irreducible
+cost — sub-keys carry log2(W) extra bits that a 32-bit key cannot
+absorb — lands on the *mid band* ``split_window(W) <= |k| < 2**30``:
+those pass-through keys land inside the split image, so a mid-band key
+can share a slate row with an in-window key's sub-key (storage-level
+collision), and the pure inverse ``merge_keys`` misattributes them to
+``k // W``.  Keys at ``|k| >= 2**30`` are fully exact and
+collision-free.  Hot-key workloads live in small or hashed-down key
+spaces; pre-mask keys into the window if the mid band matters.
+
 ``KeySplitMapper`` wraps any stream; ``read_split_slate`` merges the W
-partials with the updater's own combine.
+partials with the updater's own combine — on the single-shard
+``Engine`` *and* on ``DistributedEngine``, where each sub-key read
+routes through the hash ring (and merges two-choice partials) via the
+engine's own ``read_slate``.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -22,21 +40,51 @@ from repro.core.hashing import hash_key
 from repro.core.operators import AssociativeUpdater, Mapper
 
 
+class SplitSlateReadError(RuntimeError):
+    """``read_split_slate`` was handed an engine it cannot read from
+    (no ``read_slate``/workflow surface) or an unknown updater."""
+
+
+def split_window(ways: int) -> int:
+    """Largest ``L`` such that every ``|k| < L`` splits W ways with
+    sub-keys confined to ``(-2**30, 2**30)`` — wrap-free int32."""
+    if ways < 1:
+        raise ValueError(f"ways must be >= 1, got {ways}")
+    return (1 << 30) // ways
+
+
 def split_keys(keys, ts, ways: int, nonce=None):
     """key -> key*W + r with r pseudo-random per event (salted by ts and
     a per-row nonce so a hot key's events spread across all W sub-keys
-    even within one microbatch)."""
+    even within one microbatch).  Keys outside ``split_window(ways)``
+    pass through unsplit (overflow-safe; see module docstring)."""
     if nonce is None:
         nonce = jnp.arange(keys.shape[0], dtype=jnp.int32)
     mixin = keys ^ (ts * jnp.int32(-1640531535)) ^ \
         (nonce * jnp.int32(40503))  # 2654435761 as signed int32
     r = (hash_key(mixin, salt=0x51717) % jnp.uint32(ways)).astype(
         jnp.int32)
-    return keys * ways + r
+    w = jnp.int32(split_window(ways))
+    # |k| < w without jnp.abs (abs(-2**31) wraps in int32)
+    in_window = (keys > -w) & (keys < w)
+    return jnp.where(in_window, keys * jnp.int32(ways) + r, keys)
 
 
 def merge_keys(split, ways: int):
-    return split // ways
+    """Exact inverse of :func:`split_keys` for every key inside the
+    split window and every ``|k| >= 2**30`` (the int32 extremes); see
+    the module docstring for the mid band."""
+    bound = jnp.int32(split_window(ways) * ways)   # <= 2**30, no wrap
+    in_image = (split > -bound) & (split < bound)
+    return jnp.where(in_image, split // jnp.int32(ways), split)
+
+
+def subkeys_of(key: int, ways: int) -> List[int]:
+    """The sub-keys a key's events may have been rewritten to (host
+    side, for reads).  Mirrors :func:`split_keys` exactly."""
+    if abs(int(key)) < split_window(ways):
+        return [int(key) * ways + r for r in range(ways)]
+    return [int(key)]
 
 
 class KeySplitMapper(Mapper):
@@ -60,12 +108,33 @@ class KeySplitMapper(Mapper):
 
 def read_split_slate(engine, state, updater: str, key: int, ways: int,
                      combine=None):
-    """Merge the W partial slates of a split key (single-shard engine)."""
-    op = engine.wf.by_name[updater]
-    combine = combine or op.combine
+    """Merge the W partial slates of a split key.
+
+    Works on both engines: each sub-key read goes through
+    ``engine.read_slate``, which on :class:`DistributedEngine` routes
+    the sub-key through the hash ring to its owner shard (and merges
+    two-choice partials).  Raises :class:`SplitSlateReadError` for
+    engines without that surface or unknown updaters.
+    """
+    wf = getattr(engine, "wf", None)
+    read = getattr(engine, "read_slate", None)
+    if wf is None or read is None:
+        raise SplitSlateReadError(
+            f"read_split_slate needs an engine exposing .wf and "
+            f".read_slate; got {type(engine).__name__}")
+    op = wf.by_name.get(updater)
+    if op is None:
+        raise SplitSlateReadError(
+            f"unknown updater {updater!r}; workflow has "
+            f"{sorted(wf.by_name)}")
+    combine = combine or getattr(op, "combine", None)
+    if combine is None:
+        raise SplitSlateReadError(
+            f"{updater!r} is a {type(op).__name__} with no combine — "
+            f"split-slate reads need an associative updater")
     partials = []
-    for r in range(ways):
-        s = engine.read_slate(state, updater, key * ways + r)
+    for sub in subkeys_of(key, ways):
+        s = read(state, updater, sub)
         if s is not None:
             partials.append(s)
     if not partials:

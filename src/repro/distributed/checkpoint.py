@@ -10,7 +10,10 @@ Layout:  <dir>/step_<N>/
 - ``restore`` rebuilds the pytree and ``jax.device_put``s each leaf with
   the *target* sharding: restoring to a different mesh shape (elastic
   scale-up/down, failed-chip exclusion) is just a different sharding
-  argument.
+  argument.  The same host-rows -> target-sharding remap is the live
+  migration kernel of ``DistributedEngine._reconfigure`` (DESIGN.md
+  section 12), which applies it to slate tables and queues *mid-run*
+  instead of at restart.
 - ``latest_step`` only trusts committed checkpoints, so a crash mid-write
   rolls back to the previous step (restart-safety).
 """

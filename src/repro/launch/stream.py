@@ -17,6 +17,17 @@ stats + a few slates, matching what the uninterrupted run would print.
 ``--serve`` starts the live HTTP slate server for the duration of the
 run (reads go through the engine's :class:`StateHandle`, republished
 every chunk).
+
+Live elasticity demo (DESIGN.md section 12) — needs visible devices,
+e.g. ``XLA_FLAGS=--xla_force_host_platform_device_count=16`` on CPU::
+
+    python -m repro.launch.stream --dir /tmp/m --ticks 64 \
+        --shards 8 --scale-at 24:16 --scale-at 48:8
+
+Each ``--scale-at TICK:N`` rescales the active shard set live before
+source tick TICK, migrating slates and in-flight events loss-free;
+``--rebalance-every K`` reweights the ring from the per-shard load
+signal every K ticks.
 """
 from __future__ import annotations
 
@@ -26,7 +37,7 @@ import json
 import jax.numpy as jnp
 import numpy as np
 
-from repro import App, EventBatch, RuntimeConfig
+from repro import App, AutoscalePolicy, EventBatch, RuntimeConfig
 
 
 def make_app(args) -> App:
@@ -45,9 +56,21 @@ def make_app(args) -> App:
         return {"count": jnp.ones_like(batch.key),
                 "sum": batch.value["x"]}
 
+    autoscale = None
+    if args.scale_at or args.rebalance_every:
+        autoscale = AutoscalePolicy(
+            scale_at=dict(args.scale_at or ()),
+            rebalance_every=args.rebalance_every,
+            on_change=lambda rep: print(
+                f"reconfigured: active={len(rep.active)} shards, moved "
+                f"{sum(rep.moved_rows.values())} rows + "
+                f"{sum(rep.moved_events.values())} queued events "
+                f"({'recompiled' if rep.recompiled else 'ring swap only'})"))
     app.start(RuntimeConfig(batch_size=args.batch,
                             queue_capacity=args.batch * 4,
                             chunk_size=args.chunk,
+                            shards=args.shards,
+                            autoscale=autoscale,
                             durable_dir=args.dir,
                             flush_every=args.flush_every,
                             truncate_wal=args.truncate_wal),
@@ -64,6 +87,32 @@ def source_fn(t, max_events, batch):
         ts=np.full(n, t, np.int32))}
 
 
+def source_fn_sharded(t, app, batch):
+    """Distributed feed: the same *global* event multiset per tick
+    regardless of the current shard count, reshaped to the engine's
+    live ``[n_shards, B]`` layout so scale boundaries keep parity.
+    Padded with invalid rows up to the next multiple of ``n_shards``
+    (truncating would change the multiset when the live shard count
+    does not divide ``--batch``)."""
+    n = app.engine.n_shards
+    b = source_fn(t, None, batch)["S1"].pad_to(-(-batch // n) * n)
+    shaped = EventBatch(
+        sid=b.sid.reshape(n, -1), ts=b.ts.reshape(n, -1),
+        key=b.key.reshape(n, -1),
+        value={"x": b.value["x"].reshape(n, -1)},
+        valid=b.valid.reshape(n, -1))
+    return {"S1": shaped}
+
+
+def parse_scale_at(spec: str):
+    try:
+        tick, n = spec.split(":")
+        return int(tick), int(n)
+    except ValueError:
+        raise argparse.ArgumentTypeError(
+            f"--scale-at wants TICK:N (e.g. 24:16), got {spec!r}")
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--dir", required=True,
@@ -74,6 +123,16 @@ def main(argv=None):
     ap.add_argument("--flush-every", type=int, default=16)
     ap.add_argument("--truncate-wal", action="store_true",
                     help="compact the WAL at each flush frontier")
+    ap.add_argument("--shards", type=int, default=1,
+                    help="initial shard count (>1 = DistributedEngine; "
+                         "needs that many visible jax devices)")
+    ap.add_argument("--scale-at", type=parse_scale_at, action="append",
+                    default=None, metavar="TICK:N",
+                    help="live-rescale to N active shards before source "
+                         "tick TICK (repeatable)")
+    ap.add_argument("--rebalance-every", type=int, default=0,
+                    help="reweight the ring from the per-shard load "
+                         "signal every K source ticks")
     ap.add_argument("--crash-at", type=int, default=None,
                     help="hard-exit after this many source ticks "
                          "(simulated machine crash; no final flush)")
@@ -94,9 +153,11 @@ def main(argv=None):
         # also counts flush drain ticks.)
         if eng.dur.frontier.meta:
             done = int(eng.dur.frontier.meta.get("source_tick", 0))
-        for _, srcs in eng.dur.wal.replay():
-            if "S1" in srcs:
-                done = max(done, int(np.asarray(srcs["S1"].ts)[0]) + 1)
+        for wal in eng.dur.wals:
+            for _, srcs in wal.replay():
+                if "S1" in srcs:
+                    done = max(done,
+                               int(np.asarray(srcs["S1"].ts).max()) + 1)
         print(f"recovered: frontier tick {eng.dur.frontier.tick}, "
               f"engine tick {app.stats()['tick']}, "
               f"resuming at source tick {done}")
@@ -108,8 +169,12 @@ def main(argv=None):
     remaining = max(0, args.ticks - done)
     if args.crash_at is not None:
         remaining = min(remaining, args.crash_at - done)
-    app.run(lambda t, mx: source_fn(t, mx, args.batch), remaining,
-            source_offset=done)
+    if args.shards > 1:
+        app.run(lambda t, mx: source_fn_sharded(t, app, args.batch),
+                remaining, source_offset=done)
+    else:
+        app.run(lambda t, mx: source_fn(t, mx, args.batch), remaining,
+                source_offset=done)
 
     if args.crash_at is not None and not args.recover:
         print(f"CRASH at source tick {args.crash_at} (state dropped; "

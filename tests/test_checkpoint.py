@@ -62,6 +62,7 @@ def test_elastic_restore_new_sharding(tmp_path):
     ck.close()
 
 
+@pytest.mark.slow
 def test_trainer_restart_resumes(tmp_path):
     """Kill training mid-run; a fresh Trainer resumes from the last
     committed step with identical state."""

@@ -164,3 +164,76 @@ def test_workflow_validation():
     with pytest.raises(ValueError):
         Workflow([BadMapper(), CountingUpdater()],
                  external_streams=("S1",))
+
+
+def test_overflow_stream_cycle_guard_raises():
+    """A cyclic overflow_stream config (U_a spills to a stream feeding
+    U_b, whose overflow spills back into U_a's stream) can never settle:
+    deliver_all's bounded work loop must abort with the named
+    RuntimeError at trace time instead of hanging."""
+    class UA(CountingUpdater):
+        name = "U_a"
+        subscribes = ("S2",)
+
+    class UB(CountingUpdater):
+        name = "U_b"
+        subscribes = ("S_ovf_a",)
+
+    wf = Workflow([PassThroughMapper(), UA(), UB()],
+                  external_streams=("S1", "S_ovf_a"))
+    eng = Engine(wf, EngineConfig(
+        batch_size=4, queue_capacity=8,
+        overflow={"U_a": OverflowPolicy.OVERFLOW_STREAM,
+                  "U_b": OverflowPolicy.OVERFLOW_STREAM},
+        overflow_stream={"U_a": "S_ovf_a", "U_b": "S2"}))
+    state = eng.init_state()
+    with pytest.raises(RuntimeError,
+                       match="overflow-stream routing did not converge"):
+        eng.step(state, {"S1": make_batch(list(range(8)))})
+
+
+def test_overflow_stream_full_degraded_queue_counts_drops():
+    """OVERFLOW_STREAM re-enqueue when the degraded queue itself is
+    full: the second-level overflow applies the degraded operator's own
+    policy (DROP) — every event is either counted in a slate, still
+    queued, or in a drop counter; none vanish and the step never
+    cycles."""
+    class SecondMapper(PassThroughMapper):
+        name = "M2"
+
+    class ThirdMapper(PassThroughMapper):
+        name = "M3"
+
+    class DegradedCounter(CountingUpdater):
+        name = "U_degraded"
+        subscribes = ("S_overflow",)
+
+    # three mappers fan S1 into S2: U1 receives 3x its drain rate, so
+    # its overflow stream outruns the degraded updater's drain too
+    wf = Workflow([PassThroughMapper(), SecondMapper(), ThirdMapper(),
+                   CountingUpdater(), DegradedCounter()],
+                  external_streams=("S1", "S_overflow"))
+    eng = Engine(wf, EngineConfig(
+        batch_size=2, queue_capacity=4,
+        overflow={"U1": OverflowPolicy.OVERFLOW_STREAM},
+        overflow_stream={"U1": "S_overflow"}))
+    state = eng.init_state()
+    n_in = 0
+    for t in range(10):
+        state, _ = eng.step(state, {"S1": make_batch([1] * 8,
+                                                     ts=[t] * 8)})
+        n_in += 8
+    state = drain(eng, state, ticks=16, cap=2)
+    s = eng.stats(state)
+    main = eng.read_slate(state, "U1", 1) or {"count": 0}
+    deg = eng.read_slate(state, "U_degraded", 1) or {"count": 0}
+    # every S2 event (one per processed mapper event) is counted in a
+    # slate, still queued, or in the degraded DROP counter
+    produced_s2 = (s["processed"]["M1"] + s["processed"]["M2"]
+                   + s["processed"]["M3"])
+    accounted = int(main["count"]) + int(deg["count"]) + \
+        s["queue_size"]["U1"] + s["queue_size"]["U_degraded"] + \
+        s["queue_dropped"]["U_degraded"]
+    assert accounted == produced_s2, (accounted, produced_s2, s)
+    assert int(deg["count"]) > 0            # degraded path engaged
+    assert s["queue_dropped"]["U_degraded"] > 0   # and itself overflowed

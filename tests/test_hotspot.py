@@ -1,0 +1,133 @@
+"""Hotspot key-splitting: overflow-safe sub-key arithmetic (regression
+for the int32 wrap collision) + ring-routed split-slate reads on both
+engines."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.engine import Engine, EngineConfig
+from repro.core.event import EventBatch
+from repro.core.hotspot import (KeySplitMapper, SplitSlateReadError,
+                                merge_keys, read_split_slate, split_keys,
+                                split_window, subkeys_of)
+from repro.core.workflow import Workflow
+from tests.conftest import CountingUpdater, VSPEC
+
+I32_MIN, I32_MAX = -(2 ** 31), 2 ** 31 - 1
+
+
+def _roundtrip(keys, ways):
+    karr = jnp.asarray(keys, jnp.int32)
+    ts = jnp.arange(len(keys), dtype=jnp.int32)
+    split = split_keys(karr, ts, ways)
+    return np.asarray(merge_keys(split, ways)), np.asarray(split)
+
+
+@pytest.mark.parametrize("ways", [2, 8, 64])
+def test_split_merge_roundtrips_full_int32_range(ways):
+    """Regression: the old ``key * ways + r`` wrapped in int32 for
+    ``|key| >= 2**31 / ways`` — merge returned garbage at the extremes
+    and distinct keys collided.  The windowed encoding round-trips every
+    key in its exact domain (the split window plus everything at
+    ``|k| >= 2**30``, which includes both int32 extremes)."""
+    w = split_window(ways)
+    keys = [0, 1, -1, 17, w - 1, -(w - 1),            # split, exact
+            2 ** 30, -(2 ** 30), 2 ** 30 + 12345,     # passthrough, exact
+            I32_MAX, I32_MIN, I32_MIN + 1]
+    back, split = _roundtrip(keys, ways)
+    assert np.array_equal(back, np.asarray(keys, np.int32)), \
+        (keys, split.tolist(), back.tolist())
+
+
+@pytest.mark.parametrize("ways", [8])
+def test_old_wrap_collision_pair_no_longer_collides(ways):
+    """With W=8 the old encoding mapped 2**28 and -(2**28) to the same
+    wrapped sub-key (they differ by 2**32/W).  Now their sub-key sets
+    are disjoint."""
+    a = set(subkeys_of(2 ** 28, ways))
+    b = set(subkeys_of(-(2 ** 28), ways))
+    assert not (a & b)
+    # and extremes never alias small split keys
+    hot = set(subkeys_of(5, ways))
+    for k in (I32_MAX, I32_MIN, 2 ** 30):
+        assert not (hot & set(subkeys_of(k, ways)))
+
+
+def test_split_spreads_hot_key_and_stays_in_window():
+    ways = 8
+    hot = jnp.full((64,), 7, jnp.int32)
+    ts = jnp.zeros((64,), jnp.int32)
+    split = np.asarray(split_keys(hot, ts, ways))
+    assert len(np.unique(split)) >= 4           # spread across sub-keys
+    assert set(split.tolist()) <= set(subkeys_of(7, ways))
+    # extreme keys pass through unsplit (no wrap, no corruption)
+    ext = jnp.asarray([I32_MAX, I32_MIN], jnp.int32)
+    assert np.array_equal(
+        np.asarray(split_keys(ext, ts[:2], ways)), np.asarray(ext))
+
+
+def _split_workflow(ways):
+    class SplitCounter(CountingUpdater):
+        subscribes = ("S2",)
+    split = KeySplitMapper("S1", "S2", VSPEC, ways=ways, name="M1")
+    return Workflow([split, SplitCounter()], external_streams=("S1",))
+
+
+def _feed(eng, state, keys, n_shards=None):
+    ts = np.zeros(len(keys), np.int32)
+    b = EventBatch.of(key=np.asarray(keys, np.int32),
+                      value={"x": np.ones(len(keys), np.int32)}, ts=ts)
+    if n_shards is not None:
+        b = jax.tree.map(lambda x: x[None], b)
+    state, _ = eng.step(state, {"S1": b})
+    return state
+
+
+def test_read_split_slate_single_engine():
+    ways = 8
+    eng = Engine(_split_workflow(ways),
+                 EngineConfig(batch_size=64, queue_capacity=256))
+    state = eng.init_state()
+    keys = [7] * 40 + [I32_MAX] * 8 + [I32_MIN] * 8
+    state = _feed(eng, state, keys)
+    for _ in range(3):
+        state, _ = eng.step(state, {})
+    assert int(read_split_slate(eng, state, "U1", 7, ways)["count"]) == 40
+    assert int(read_split_slate(
+        eng, state, "U1", I32_MAX, ways)["count"]) == 8
+    assert int(read_split_slate(
+        eng, state, "U1", I32_MIN, ways)["count"]) == 8
+
+
+def test_read_split_slate_distributed_routes_ring():
+    """The distributed path: every sub-key read routes through the hash
+    ring via DistributedEngine.read_slate (1-device mesh keeps this in
+    tier-1; multi-shard coverage lives in test_elasticity)."""
+    from jax.sharding import Mesh
+    from repro.core.distributed import DistConfig, DistributedEngine
+    ways = 8
+    mesh = Mesh(np.asarray(jax.devices()[:1]), ("data",))
+    eng = DistributedEngine(_split_workflow(ways), mesh,
+                            DistConfig(batch_size=64, queue_capacity=256))
+    state = eng.init_state()
+    state = _feed(eng, state, [7] * 24 + [I32_MIN] * 4, n_shards=1)
+    for _ in range(3):
+        state = eng._step_empty(state)
+    assert int(read_split_slate(eng, state, "U1", 7, ways)["count"]) == 24
+    assert int(read_split_slate(
+        eng, state, "U1", I32_MIN, ways)["count"]) == 4
+    assert read_split_slate(eng, state, "U1", 12345, ways) is None
+
+
+def test_read_split_slate_named_errors():
+    ways = 4
+    eng = Engine(_split_workflow(ways),
+                 EngineConfig(batch_size=8, queue_capacity=32))
+    state = eng.init_state()
+    with pytest.raises(SplitSlateReadError, match="unknown updater"):
+        read_split_slate(eng, state, "nope", 1, ways)
+    with pytest.raises(SplitSlateReadError, match="read_slate"):
+        read_split_slate(object(), state, "U1", 1, ways)
+    with pytest.raises(SplitSlateReadError, match="no combine"):
+        read_split_slate(eng, state, "M1", 1, ways)   # a mapper

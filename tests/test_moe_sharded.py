@@ -2,6 +2,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import reduced_config
 from repro.distributed import sharding as shd
@@ -11,6 +12,7 @@ from repro.models.context import Ctx
 from repro.models.layers import moe
 
 
+@pytest.mark.slow
 def test_sharded_matches_global_1x1():
     cfg = reduced_config("deepseek-moe-16b")
     params, _ = moe.init(jax.random.PRNGKey(0), cfg)
@@ -28,6 +30,7 @@ def test_sharded_matches_global_1x1():
     assert abs(float(aux0) - float(aux1)) < 1e-7
 
 
+@pytest.mark.slow
 def test_sharded_moe_grads():
     cfg = reduced_config("deepseek-moe-16b")
     mesh = make_host_mesh(n_data=1, n_model=1)
