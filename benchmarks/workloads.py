@@ -68,12 +68,12 @@ class SequentialCounter(SequentialUpdater):
 
 
 def counting_engine(batch_size=2048, queue_capacity=8192,
-                    sequential=False, fused="auto"):
+                    sequential=False, fused="auto", telemetry=None):
     upd = SequentialCounter() if sequential else CounterUpdater()
     wf = Workflow([SourceMapper(), upd], external_streams=("S1",))
     eng = Engine(wf, EngineConfig(batch_size=batch_size,
                                   queue_capacity=queue_capacity,
-                                  fused=fused))
+                                  fused=fused, telemetry=telemetry))
     return eng, eng.init_state()
 
 

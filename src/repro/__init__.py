@@ -16,6 +16,8 @@ from repro.core.operators import (AssociativeUpdater, Mapper, Operator,
 from repro.core.queues import OverflowPolicy
 from repro.core.workflow import Workflow
 from repro.slates.http import SlateServer
+from repro.telemetry import (LoadAutoscaler, TelemetryConfig,
+                             TelemetryReport)
 
 __all__ = [
     # declarative app layer (the front door)
@@ -29,4 +31,6 @@ __all__ = [
     # live elasticity (DESIGN.md section 12)
     "AutoscalePolicy", "DistributedEngine", "DistConfig",
     "MigrationReport",
+    # telemetry + the closed control loop (DESIGN.md section 13)
+    "LoadAutoscaler", "TelemetryConfig", "TelemetryReport",
 ]

@@ -343,6 +343,22 @@ class App:
     def stats(self) -> Dict[str, Any]:
         return self._live().stats()
 
+    def telemetry(self):
+        """The latest windowed :class:`~repro.telemetry.TelemetryReport`
+        (chunk-boundary readings: events/tick EMA, queue pressure,
+        heavy-hitter keys from the on-device count-min sketch).  Needs
+        ``RuntimeConfig(telemetry=TelemetryConfig(...))`` — or a
+        ``LoadAutoscaler``, which implies it.  If no window has been
+        observed yet, one reading is taken now."""
+        h = self._live()
+        reg = getattr(h.engine, "telemetry", None)
+        if reg is None:
+            raise RuntimeError(
+                f"app {self.name!r} runs without telemetry — pass "
+                f"RuntimeConfig(telemetry=TelemetryConfig()) or an "
+                f"autoscale=LoadAutoscaler(...)")
+        return reg.last or reg.observe(h.engine, h.state)
+
     def serve(self, port: int = 0):
         """Start the HTTP slate server (paper section 4.4) bound to the
         app's live state.  Starts the engine with default runtime if

@@ -37,10 +37,15 @@ class RuntimeConfig:
     flush_every: int = 16
     barrier: bool = True
     truncate_wal: bool = False
-    # live elasticity (DESIGN.md section 12): an AutoscalePolicy lets
-    # App.run() grow/shrink the active shard set and rebalance the
-    # weighted ring mid-run (distributed runtimes only)
-    autoscale: Optional[object] = None   # core.distributed.AutoscalePolicy
+    # live elasticity (DESIGN.md section 12): an AutoscalePolicy fires
+    # reconfigures at declared ticks; a telemetry.LoadAutoscaler closes
+    # the loop from windowed load instead (distributed runtimes only)
+    autoscale: Optional[object] = None
+    # device-side telemetry (DESIGN.md section 13): a TelemetryConfig
+    # adds the count-min key-heat sketch to the jitted tick and the
+    # windowed metrics registry behind App.telemetry().  Implied by a
+    # LoadAutoscaler.
+    telemetry: Optional[object] = None   # telemetry.TelemetryConfig
 
     @property
     def distributed(self) -> bool:
@@ -61,6 +66,16 @@ class RuntimeConfig:
             barrier=self.barrier,
             truncate_wal=self.truncate_wal)
 
+    def _telemetry(self):
+        if self.telemetry is None:
+            return None
+        from repro.telemetry.metrics import TelemetryConfig
+        if not isinstance(self.telemetry, TelemetryConfig):
+            raise TypeError(
+                f"telemetry must be a TelemetryConfig, got "
+                f"{type(self.telemetry).__name__}")
+        return self.telemetry
+
     def engine_config(self) -> EngineConfig:
         if self.autoscale is not None:
             raise ValueError(
@@ -74,15 +89,18 @@ class RuntimeConfig:
             default_policy=self.default_policy,
             fused=self.fused,
             chunk_size=self.chunk_size,
-            durability=self._durability())
+            durability=self._durability(),
+            telemetry=self._telemetry())
 
     def dist_config(self):
         from repro.core.distributed import AutoscalePolicy, DistConfig
+        from repro.telemetry.controller import LoadAutoscaler
         if self.autoscale is not None and \
-                not isinstance(self.autoscale, AutoscalePolicy):
+                not isinstance(self.autoscale,
+                               (AutoscalePolicy, LoadAutoscaler)):
             raise TypeError(
-                f"autoscale must be an AutoscalePolicy, got "
-                f"{type(self.autoscale).__name__}")
+                f"autoscale must be an AutoscalePolicy or "
+                f"LoadAutoscaler, got {type(self.autoscale).__name__}")
         return DistConfig(
             batch_size=self.batch_size,
             queue_capacity=self._queue_capacity(),
@@ -94,7 +112,8 @@ class RuntimeConfig:
             durability=self._durability(),
             exchange_slack=self.exchange_slack,
             two_choice_threshold=self.two_choice_threshold,
-            autoscale=self.autoscale)
+            autoscale=self.autoscale,
+            telemetry=self._telemetry())
 
     def make_mesh(self):
         if self.mesh is not None:

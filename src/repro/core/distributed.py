@@ -19,6 +19,7 @@ bound the paper proves acceptable in production.
 """
 from __future__ import annotations
 
+import time
 from collections import deque
 from dataclasses import dataclass, field, replace
 from functools import partial
@@ -42,6 +43,9 @@ from repro.core.queues import OverflowPolicy
 from repro.core.workflow import Workflow
 from repro.slates import flush as flush_mod
 from repro.slates import table as tbl
+from repro.telemetry import sketch as sk_mod
+from repro.telemetry.controller import LoadAutoscaler
+from repro.telemetry.metrics import MetricsRegistry, TelemetryConfig
 
 
 def _axis_size(axis_names) -> int:
@@ -137,7 +141,14 @@ class DistConfig(EngineConfig):
     exchange_slack: float = 2.0   # per-dest bucket capacity multiplier
     two_choice_threshold: int = 0  # 0 = off; else per-key spill point
     axis_names: Tuple[str, ...] = ("data",)
-    autoscale: Optional[AutoscalePolicy] = None
+    # tick-scheduled AutoscalePolicy, or a closed-loop LoadAutoscaler
+    # driven by the telemetry subsystem (DESIGN.md 13.3)
+    autoscale: Optional[Any] = None
+    # hot-key split set capacity (fixed shape).  0 = the split routing
+    # path is not compiled into the tick at all (no per-event secondary
+    # route); >0 opts in, and a LoadAutoscaler with skew > 0 implies 8.
+    # Needs cfg.telemetry and no durability.  See split_keys.
+    hot_key_capacity: int = 0
 
 
 class DistributedEngine:
@@ -160,10 +171,37 @@ class DistributedEngine:
         self._chunk = None
         self._empty_step = None
         self._load_mark = np.zeros(self.n_shards)  # rebalance window base
-        self.tick_cursor = 0      # post-run() tick (drains included)
+        self.tick_cursor = 0      # post-run() *source* cursor
         self.dur: Optional[EngineDurability] = None
         if self.cfg.durability is not None:
             self.attach_durability(self.cfg.durability)
+        # telemetry (DESIGN.md 13): a per-shard count-min sketch in the
+        # jitted tick + the windowed registry; a closed-loop controller
+        # implies it even when cfg.telemetry is unset
+        tele = self.cfg.telemetry
+        if tele is None and isinstance(self.cfg.autoscale,
+                                       LoadAutoscaler):
+            tele = self.cfg.autoscale.telemetry or TelemetryConfig()
+        self.tele_cfg = tele
+        self.telemetry: Optional[MetricsRegistry] = None
+        if tele is not None:
+            self.telemetry = MetricsRegistry(
+                tele, batch_size=self.cfg.batch_size)
+            self._salts = self.telemetry.salts
+        # hot-key split set: fixed-shape runtime input of the tick, so
+        # split/unsplit swap contents without recompiling (ring-style).
+        # Opt-in (explicit capacity, or a skew-enabled controller):
+        # compiling it in costs every associative delivery a secondary
+        # ring route, so plain-telemetry runs skip it entirely.
+        hot_cap = self.cfg.hot_key_capacity
+        if (hot_cap == 0 and isinstance(self.cfg.autoscale,
+                                        LoadAutoscaler)
+                and self.cfg.autoscale.skew > 0.0):
+            hot_cap = 8
+        self._hot_capacity = (hot_cap if tele is not None
+                              and self.cfg.durability is None else 0)
+        self._hot_keys = np.zeros(max(1, self._hot_capacity), np.int32)
+        self._hot_valid = np.zeros(max(1, self._hot_capacity), bool)
 
     # ---- state ----
     def init_state(self):
@@ -187,6 +225,10 @@ class DistributedEngine:
             "throttle_hits": z(),
             "processed": {op.name: z() for op in self.wf.operators},
         }
+        if self.tele_cfg is not None:
+            tc = self.tele_cfg
+            state["sketch"] = per_shard(partial(
+                sk_mod.make_sketch, tc.depth, tc.width, tc.sample))
         state = jax.tree.map(lambda x: jnp.array(x, copy=True), state)
         return jax.device_put(state, self._shard_tree(state))
 
@@ -198,7 +240,8 @@ class DistributedEngine:
         return jax.tree_util.tree_map_with_path(spec, state)
 
     # ---- the per-shard tick ----
-    def _local_tick(self, state, sources, ring_hashes, ring_shards):
+    def _local_tick(self, state, sources, ring_hashes, ring_shards,
+                    hot_keys, hot_valid):
         cfg, wf = self.cfg, self.wf
         queues = {k: jax.tree.map(lambda x: x[0], v)
                   for k, v in state["queues"].items()}
@@ -208,6 +251,9 @@ class DistributedEngine:
         exchange_dropped = state["exchange_dropped"][0]
         throttle_hits = state["throttle_hits"][0]
         tick = state["tick"][0]
+        sketch = None
+        if "sketch" in state:
+            sketch = {k: v[0] for k, v in state["sketch"].items()}
         sources = {k: jax.tree.map(lambda x: x[0], v)
                    for k, v in sources.items()}
         outputs: Dict[str, List[EventBatch]] = {}
@@ -231,6 +277,11 @@ class DistributedEngine:
                             and isinstance(op, AssociativeUpdater)):
                         dshard = self._two_choice(batch, dshard, dest_op,
                                                   ring_hashes, ring_shards)
+                    elif (self._hot_capacity
+                            and isinstance(op, AssociativeUpdater)):
+                        dshard = self._hot_split(
+                            batch, dshard, dest_op, ring_hashes,
+                            ring_shards, hot_keys, hot_valid, tick)
                     recv, dropped = exchange(batch, dshard, self.axes,
                                              self.cap_per_dest)
                     exchange_dropped = exchange_dropped + dropped
@@ -252,6 +303,13 @@ class DistributedEngine:
         for op in wf.operators:
             queues[op.name], batch = q_mod.dequeue(queues[op.name],
                                                    cfg.batch_size)
+            if sketch is not None and isinstance(op, Updater):
+                # per-shard key heat from the *routed* keys this shard's
+                # updaters dequeue — the per-arc signal rebalance wants.
+                # Pure extra state; the tick never reads it (parity).
+                sketch = sk_mod.sketch_update(
+                    sketch, batch.key, batch.valid, self._salts,
+                    impl=self.tele_cfg.impl)
             if isinstance(op, Mapper):
                 outs = op.map_batch(batch)
                 for s, b in outs.items():
@@ -289,6 +347,8 @@ class DistributedEngine:
             "throttle_hits": throttle_hits[None],
             "processed": {k: v[None] for k, v in processed.items()},
         }
+        if sketch is not None:
+            new_state["sketch"] = {k: v[None] for k, v in sketch.items()}
         return new_state, {k: lift(v) for k, v in out_batches.items()}
 
     def _two_choice(self, batch, primary, dest_op, ring_hashes,
@@ -304,6 +364,28 @@ class DistributedEngine:
         rank = jnp.zeros_like(rank_sorted).at[order].set(rank_sorted)
         spill = rank >= self.cfg.two_choice_threshold
         return jnp.where(spill, secondary, primary)
+
+    def _hot_split(self, batch, primary, dest_op, ring_hashes,
+                   ring_shards, hot_keys, hot_valid, tick):
+        """Runtime hot-key relief (DESIGN.md 13.4): events whose key is
+        in the (fixed-shape) hot set alternate between the key's
+        primary and secondary ring shard — two-choice dispatch, but
+        targeted at controller-identified heavy hitters instead of a
+        per-tick rank threshold.  The row-index/tick parity flip sends
+        ~half of each tick's hot events to each shard and flips halves
+        every tick.  An empty set leaves routing bit-identical."""
+        secondary = route_secondary(batch.key, _salt(dest_op),
+                                    ring_hashes, ring_shards)
+        is_hot = jnp.any((batch.key[:, None] == hot_keys[None, :])
+                         & hot_valid[None, :], axis=1)
+        flip = ((jnp.arange(batch.capacity, dtype=jnp.int32) ^ tick)
+                & 1) == 1
+        return jnp.where(is_hot & flip & batch.valid, secondary, primary)
+
+    def _hot_table(self) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """The hot-key split set as runtime tick inputs (ring-style:
+        contents swap, shape never does)."""
+        return jnp.asarray(self._hot_keys), jnp.asarray(self._hot_valid)
 
     # ---- jit plumbing ----
     def _spec_like(self, tree):
@@ -323,16 +405,18 @@ class DistributedEngine:
             state_specs = self._spec_like(state)
             src_specs = jax.tree.map(lambda _: sharded, sources)
 
-            def run(st, src, rh, rs):
+            def run(st, src, rh, rs, hk, hv):
                 fn = shard_map(self._local_tick, mesh=self.mesh,
-                               in_specs=(state_specs, src_specs, rep, rep),
+                               in_specs=(state_specs, src_specs, rep, rep,
+                                         rep, rep),
                                out_specs=sharded,
                                check_rep=False)
-                return fn(st, src, rh, rs)
+                return fn(st, src, rh, rs, hk, hv)
 
             self._step = jax.jit(run, donate_argnums=(0,))
         rh, rs = self.ring.table()
-        return self._step(state, sources, rh, rs)
+        hk, hv = self._hot_table()
+        return self._step(state, sources, rh, rs, hk, hv)
 
     def run_chunk(self, state, stacked_sources: Dict[str, EventBatch]):
         """T device-resident ticks in one dispatch (DESIGN.md 2.2).
@@ -351,23 +435,26 @@ class DistributedEngine:
             state_specs = self._spec_like(state)
             src_specs = jax.tree.map(lambda _: stacked, stacked_sources)
 
-            def local_chunk(st, src, rh, rs):
+            def local_chunk(st, src, rh, rs, hk, hv):
                 def body(s, x):
-                    s2, outs = self._local_tick(s, x, rh, rs)
+                    s2, outs = self._local_tick(s, x, rh, rs, hk, hv)
                     return s2, (outs, s2["throttle_hits"])
                 final, (outs, hits) = jax.lax.scan(body, st, src)
                 return final, outs, hits
 
-            def run(st, src, rh, rs):
+            def run(st, src, rh, rs, hk, hv):
                 fn = shard_map(local_chunk, mesh=self.mesh,
-                               in_specs=(state_specs, src_specs, rep, rep),
+                               in_specs=(state_specs, src_specs, rep, rep,
+                                         rep, rep),
                                out_specs=(state_specs, stacked, stacked),
                                check_rep=False)
-                return fn(st, src, rh, rs)
+                return fn(st, src, rh, rs, hk, hv)
 
             self._chunk = jax.jit(run, donate_argnums=(0,))
         rh, rs = self.ring.table()
-        state, outs, hits = self._chunk(state, stacked_sources, rh, rs)
+        hk, hv = self._hot_table()
+        state, outs, hits = self._chunk(state, stacked_sources, rh, rs,
+                                        hk, hv)
         return state, outs, {"throttle_hits": hits}
 
     # ---- durability (DESIGN.md section 10): per-shard WAL + frontier --
@@ -405,17 +492,19 @@ class DistributedEngine:
             sharded, rep = P(self.axes), P()
             state_specs = self._spec_like(state)
 
-            def run(st, rh, rs):
+            def run(st, rh, rs, hk, hv):
                 fn = shard_map(
-                    lambda s, h, r: self._local_tick(s, {}, h, r),
+                    lambda s, h, r, k, v: self._local_tick(s, {}, h, r,
+                                                           k, v),
                     mesh=self.mesh,
-                    in_specs=(state_specs, rep, rep),
+                    in_specs=(state_specs, rep, rep, rep, rep),
                     out_specs=sharded, check_rep=False)
-                return fn(st, rh, rs)
+                return fn(st, rh, rs, hk, hv)
 
             self._empty_step = jax.jit(run, donate_argnums=(0,))
         rh, rs = self.ring.table()
-        state, _ = self._empty_step(state, rh, rs)
+        hk, hv = self._hot_table()
+        state, _ = self._empty_step(state, rh, rs, hk, hv)
         return state
 
     def _drain_queues(self, state, max_ticks: int):
@@ -429,9 +518,11 @@ class DistributedEngine:
             d += 1
         return state, d
 
-    def _flush_boundary(self, state, tick: int):
+    def _flush_boundary(self, state, tick: int, meta=None):
         """Barrier-drain, flush every shard's dirty slates (one
-        device_get per table), record the frontier."""
+        device_get per table), record the frontier.  ``meta`` is the
+        driver cursor stored with the frontier (``_run_span`` records
+        the source index, mirroring ``Engine.run``)."""
         dur = self.dur
         if dur.cfg.barrier:
             state, d = self._drain_queues(state, dur.cfg.drain_ticks_max)
@@ -454,7 +545,7 @@ class DistributedEngine:
                 vals=t.vals, dropped=t.dropped)
         state = dict(state)
         state["tables"] = new_tables
-        dur.record_frontier(tick)
+        dur.record_frontier(tick, meta=meta)
         return state, tick
 
     def run(self, state, source_fn, n_ticks: int, *, start_tick: int = 0,
@@ -471,27 +562,30 @@ class DistributedEngine:
         source tick; the post-run tick cursor (drain ticks included) is
         left on ``self.tick_cursor`` for durable drivers that resume.
 
-        With ``cfg.autoscale`` set, the drive loop fires live
-        reconfigures at the policy's source-tick boundaries:
-        ``scale_at[t]`` rescales the active shard set before tick ``t``
-        runs, and every ``rebalance_every`` ticks the weighted ring is
-        rebuilt from the per-shard load signal.  ``source_fn`` must size
-        its batches by the *current* ``self.n_shards`` (it changes at
-        scale boundaries).
+        With ``cfg.autoscale`` set to an :class:`AutoscalePolicy`, the
+        drive loop fires live reconfigures at the policy's source-tick
+        boundaries: ``scale_at[t]`` rescales the active shard set
+        before tick ``t`` runs, and every ``rebalance_every`` ticks the
+        weighted ring is rebuilt from the per-shard load signal.  With
+        a :class:`~repro.telemetry.LoadAutoscaler` the loop closes
+        instead: every decision window the telemetry registry reads the
+        boundary signals and the controller picks scale / rebalance /
+        split (DESIGN.md 13.3).  Either way ``source_fn`` must size its
+        batches by the *current* ``self.n_shards``.
 
-        Durable caveat (the PR-2 contract: this engine keys WAL records
-        by the *engine* tick, which also counts drain ticks): flush and
-        reconfigure barriers consume tick indices, so with durability
-        attached ``source_fn`` sees gaps and — under autoscale — may be
-        invoked fewer than ``n_ticks`` times in total.  Keep
-        ``source_fn`` a pure function of ``t``; drivers resume from
-        ``self.tick_cursor`` / the frontier meta, never from a count of
-        feeds (decoupling source index from engine tick here is a
-        ROADMAP open item)."""
+        Source index and engine tick are decoupled (the ``Engine.run``
+        split ported here): ``source_fn`` sees consecutive indices
+        ``start_tick .. start_tick + n_ticks`` regardless of flush or
+        reconfigure drain ticks — WAL records are keyed by the engine
+        tick, the frontier meta records the source cursor."""
         pol = self.cfg.autoscale
         if pol is None:
             return self._run_span(state, source_fn, n_ticks,
                                   start_tick=start_tick, handle=handle)
+        if isinstance(pol, LoadAutoscaler):
+            return self._run_closed_loop(state, source_fn, n_ticks, pol,
+                                         start_tick=start_tick,
+                                         handle=handle)
         end = start_tick + n_ticks
         marks = {t for t in pol.scale_at if start_tick <= t < end}
         if pol.rebalance_every:
@@ -507,11 +601,7 @@ class DistributedEngine:
                                              boundary - t, start_tick=t,
                                              handle=handle)
                 outputs.extend(outs)
-                # durable spans consume extra tick indices as flush
-                # drain ticks; resuming at the nominal boundary would
-                # re-feed an already-logged tick and write duplicate
-                # (tick, shard) WAL records that replay drops
-                t = max(boundary, self.tick_cursor)
+                t = boundary
             if boundary < end:          # fire before tick `boundary` runs
                 if boundary in pol.scale_at:
                     state, rep = self.scale(state, pol.scale_at[boundary],
@@ -521,34 +611,102 @@ class DistributedEngine:
                                                 drain_max=pol.drain_max)
                 if rep is not None and pol.on_change is not None:
                     pol.on_change(rep)
-                if self.dur is not None:
-                    # the reconfigure's own drain/flush ticks advanced
-                    # the engine tick; WAL records are keyed by it, so
-                    # the source counter must not fall behind the new
-                    # frontier (replay would skip those records)
-                    t = max(t, int(np.asarray(
-                        jax.device_get(state["tick"])).max()))
                 if handle is not None:
                     handle.state = state
         self.tick_cursor = max(t, self.tick_cursor)
         return state, outputs
 
+    def _run_closed_loop(self, state, source_fn, n_ticks: int, pol, *,
+                         start_tick: int = 0, handle=None):
+        """Observe -> decide -> act (DESIGN.md 13.3): run one decision
+        window of source ticks, take the boundary telemetry reading,
+        and let the :class:`LoadAutoscaler` choose an actuator.  The
+        sketch ages at every window so heat stays recent."""
+        assert self.telemetry is not None
+        outputs: List[Dict[str, Any]] = []
+        t = start_tick
+        end = start_tick + n_ticks
+        limit = pol.max_shards or len(jax.devices())
+        if len(self.axes) != 1:
+            # multi-axis meshes cannot grow physically (DESIGN.md 12)
+            limit = min(limit, self.n_shards)
+        while t < end:
+            n = min(pol.window - (t - start_tick) % pol.window, end - t)
+            state, outs = self._run_span(state, source_fn, n,
+                                         start_tick=t, handle=handle)
+            outputs.extend(outs)
+            t += n
+            report = self.telemetry.observe(self, state)
+            if "sketch" in state:
+                state = dict(state)
+                state["sketch"] = sk_mod.decay(state["sketch"],
+                                               self.tele_cfg.decay)
+            action = pol.decide(
+                report, n_active=len(self.active_shards), limit=limit,
+                can_split=(self.dur is None and self._hot_capacity > 0),
+                already_split=tuple(self.split_key_set()))
+            if action is not None and t < end:
+                t0 = time.perf_counter()
+                rep = None
+                if action.kind == "scale":
+                    state, rep = self.scale(state, action.target,
+                                            drain_max=pol.drain_max)
+                elif action.kind == "rebalance":
+                    w = pol.heat_weights(report, owners=self.heat_owners)
+                    state, rep = self.rebalance(state, weights=w,
+                                                drain_max=pol.drain_max)
+                elif action.kind == "split":
+                    state, rep = self.split_keys(state, action.keys)
+                self.telemetry.note_pause(time.perf_counter() - t0)
+                self.telemetry.rebase(self, state)
+                if rep is not None and pol.on_change is not None:
+                    pol.on_change(rep)
+                if handle is not None:
+                    handle.state = state
+        self.tick_cursor = t
+        return state, outputs
+
     def _run_span(self, state, source_fn, n_ticks: int, *,
                   start_tick: int = 0, handle=None):
+        """The inner drive loop.  Source index (``source_fn``'s ``t``)
+        and engine tick (the WAL key, which also counts drain ticks)
+        are tracked separately — the single-shard ``eng_tick`` +
+        frontier ``meta.source_tick`` split ported from ``Engine.run``
+        — so durable flush drains never consume source indices and
+        ``source_fn`` is invoked exactly ``n_ticks`` times with
+        consecutive indices, even across mid-run reconfigures."""
         outputs = []
-        t = start_tick
+        src_t = start_tick
+        eng_tick = int(np.asarray(jax.device_get(state["tick"])).max()) \
+            if self.dur is not None else 0
+        # without a closed-loop controller (which observes at its own
+        # decision windows), this span keeps App.telemetry() fresh by
+        # reading at every cfg window boundary
+        observe = (self.telemetry is not None
+                   and not isinstance(self.cfg.autoscale,
+                                      LoadAutoscaler))
+        obs_mark = start_tick
         for _ in range(n_ticks):
-            srcs = source_fn(t, None)
+            srcs = source_fn(src_t, None)
             if self.dur is not None:
-                self.append_sources(t, srcs)
+                self.append_sources(eng_tick, srcs)
             state, outs = self.step(state, srcs)
             outputs.append(outs)
-            t += 1
-            if self.dur is not None and self.dur.due(t, state["tables"]):
-                state, t = self._flush_boundary(state, t)
+            src_t += 1
+            eng_tick += 1
+            if self.dur is not None and self.dur.due(eng_tick,
+                                                     state["tables"]):
+                state, eng_tick = self._flush_boundary(
+                    state, eng_tick, meta={"source_tick": src_t})
+            if observe and src_t - obs_mark >= self.tele_cfg.window:
+                self.telemetry.observe(self, state)
+                state = dict(state)
+                state["sketch"] = sk_mod.decay(state["sketch"],
+                                               self.tele_cfg.decay)
+                obs_mark = src_t
             if handle is not None:
                 handle.state = state
-        self.tick_cursor = t
+        self.tick_cursor = src_t
         return state, outputs
 
     def drain(self, state, max_ticks: int = 64):
@@ -561,8 +719,9 @@ class DistributedEngine:
         """Host driver: per-tick step with write-ahead logging and
         policy-driven flush boundaries.  ``source_fn(tick)`` returns
         [n_shards, B]-leading source batches.  Returns
-        ``(state, next_tick)`` (drain ticks included).  Thin wrapper
-        over :meth:`run` — one durable drive loop to maintain."""
+        ``(state, next_source_tick)`` — the source cursor, which flush
+        drain ticks no longer consume.  Thin wrapper over :meth:`run`
+        — one durable drive loop to maintain."""
         assert self.dur is not None, "attach_durability first"
         state, _ = self.run(state, lambda t, _mx: source_fn(t), n_ticks,
                             start_tick=start_tick)
@@ -782,37 +941,123 @@ class DistributedEngine:
             load += g(q.peak) + g(q.size) + 4.0 * g(q.dropped)
         return load
 
+    def _rebase_load_window(self, state, load: Optional[np.ndarray] = None):
+        """Restart the rebalance load window at the current pressure.
+
+        Shared by ``rebalance()``'s no-op exits and ``_reconfigure``:
+        the next window's delta must measure only load accrued *after*
+        this point.  Queue peaks restart at migrations, and a
+        controller invoking ``rebalance()`` back-to-back (outside the
+        cadence path) must see an empty window — not recycled history
+        that would reweight twice for the same pressure."""
+        self._load_mark = self.shard_load(state) if load is None else load
+
     def rebalance(self, state, *, gain: float = 0.5, floor: float = 0.25,
-                  cap: float = 4.0, drain_max: int = 64):
+                  cap: float = 4.0, drain_max: int = 64, weights=None):
         """Load-aware ring reweighting: shards whose queues ran hot
         since the last rebalance shed vnode arcs (key ranges) to cold
         shards.  Content-only ring swap + row migration — no
-        recompilation.  Returns ``(state, report_or_None)``."""
-        load = self.shard_load(state)
-        if load.shape != self._load_mark.shape:
-            self._load_mark = np.zeros_like(load)
-        delta = np.clip(load - self._load_mark, 0.0, None)
+        recompilation.  Returns ``(state, report_or_None)``.
+
+        ``weights``: explicit per-shard target weights (e.g. the
+        sketch-informed heat weights of
+        :meth:`~repro.telemetry.LoadAutoscaler.heat_weights`) instead
+        of the queue-delta heuristic; they are clipped to
+        ``[floor, cap]`` and no-op reweights are still skipped."""
         alive = self.ring.alive
-        mean = float(delta[alive].mean()) if alive.any() else 0.0
-        if mean <= 0.0:
-            self._load_mark = load
-            return state, None
-        # cold shards (delta < mean) gain weight, hot shards lose it;
-        # gain damps the step, floor/cap bound the skew.  Dead slots
-        # keep their stored weight — their zero load is absence, not
-        # coldness, and must not compound toward cap across windows
-        ratio = (mean + 1.0) / (delta + 1.0)
-        target = self.ring.weights * np.power(ratio, gain)
-        target = np.clip(target / target[alive].mean(), floor, cap)
-        target = np.where(alive, target, self.ring.weights)
+        if weights is not None:
+            w = np.clip(np.asarray(weights, np.float64), floor, cap)
+            target = np.where(alive, w, self.ring.weights)
+        else:
+            load = self.shard_load(state)
+            if load.shape != self._load_mark.shape:
+                self._load_mark = np.zeros_like(load)
+            delta = np.clip(load - self._load_mark, 0.0, None)
+            mean = float(delta[alive].mean()) if alive.any() else 0.0
+            if mean <= 0.0:
+                self._rebase_load_window(state, load)
+                return state, None
+            # cold shards (delta < mean) gain weight, hot shards lose
+            # it; gain damps the step, floor/cap bound the skew.  Dead
+            # slots keep their stored weight — their zero load is
+            # absence, not coldness, and must not compound toward cap
+            # across windows
+            ratio = (mean + 1.0) / (delta + 1.0)
+            target = self.ring.weights * np.power(ratio, gain)
+            target = np.clip(target / target[alive].mean(), floor, cap)
+            target = np.where(alive, target, self.ring.weights)
         if np.array_equal(self.ring.vnode_counts(),
                           self.ring.counts_for(target)):
             # balanced load: the reweight would not move a single vnode
             # — skip the drain barrier + host remap entirely
-            self._load_mark = load
+            self._rebase_load_window(state)
             return state, None
         return self._reconfigure(state, weights=target,
                                  drain_max=drain_max)
+
+    # ---- runtime hot-key splitting (DESIGN.md 13.4) -----------------
+    def split_keys(self, state, keys):
+        """Live hotspot relief for heavy-hitter keys (paper Example 6
+        made runtime): register ``keys`` in the hot set so their events
+        spread across the key's primary *and* secondary ring shard;
+        ``read_slate`` merges the (<= 2) partials with the updater's
+        combine — the same contender bound the paper accepts for
+        two-choice dispatch.  Content-only swap of a fixed-shape array:
+        no recompilation, no migration, takes effect next tick.
+        Returns ``(state, None)``; undo with :meth:`clear_split`."""
+        if self._hot_capacity == 0:
+            raise ValueError(
+                "split_keys needs the hot-key split path compiled in: "
+                "set DistConfig.hot_key_capacity > 0 (or use a "
+                "LoadAutoscaler with skew > 0) together with "
+                "cfg.telemetry, durability off")
+        if self.dur is not None:
+            raise ValueError(
+                "split_keys requires durability off: per-key partials "
+                "are not store-mergeable (the two_choice_threshold "
+                "constraint)")
+        if len(self.active_shards) < 2:
+            return state, None
+        cur = [int(k) for k, v in zip(self._hot_keys, self._hot_valid)
+               if v]
+        for k in keys:
+            if int(k) not in cur:
+                cur.append(int(k))
+        # active splits keep priority: evicting one would strand its
+        # partials (read_slate stops merging the secondary) — new keys
+        # beyond capacity wait for clear_split
+        cur = cur[:self._hot_capacity]
+        hk = np.zeros_like(self._hot_keys)
+        hv = np.zeros_like(self._hot_valid)
+        hk[:len(cur)] = cur
+        hv[:len(cur)] = True
+        self._hot_keys, self._hot_valid = hk, hv
+        return state, None
+
+    def clear_split(self, state, *, drain_max: int = 64):
+        """Deactivate every hot-key split and converge the partials:
+        one same-ring reconfigure whose table rebuild folds duplicate
+        keys via the updater's combine, so each formerly-split key ends
+        up whole on its owner shard again."""
+        if not self._hot_valid.any():
+            return state, None
+        self._hot_valid = np.zeros_like(self._hot_valid)
+        return self._reconfigure(state, drain_max=drain_max)
+
+    def split_key_set(self) -> List[int]:
+        """Currently split (hot) keys."""
+        return [int(k) for k, v in zip(self._hot_keys, self._hot_valid)
+                if v]
+
+    def heat_owners(self, keys) -> np.ndarray:
+        """Ring owner per key for the engine's first updater — the
+        heavy-hitter -> arc attribution used by
+        :meth:`~repro.telemetry.LoadAutoscaler.heat_weights` (a
+        heuristic: multi-updater workflows route per destination, but
+        heavy hitters overwhelmingly mean counter-style updaters)."""
+        ups = list(self.wf.updaters())
+        salt = _salt(ups[0].name) if ups else 0
+        return self.ring.owners(np.asarray(keys, np.int32), salt)
 
     def _report(self, drain_ticks, moved_rows, moved_events, *,
                 recompiled: bool) -> MigrationReport:
@@ -838,7 +1083,16 @@ class DistributedEngine:
         state, drained = self._drain_queues(state, drain_max)
         if self.dur is not None:
             tick = int(np.asarray(jax.device_get(state["tick"])).max())
-            state, _ = self._flush_boundary(state, tick)
+            # the barrier retired every source fed so far, so the
+            # frontier's driver cursor advances to the current source
+            # cursor (monotone: a reconfigure on a freshly-recovered
+            # engine must not regress a prior run's recorded cursor) —
+            # with truncate_wal, a stale cursor would re-feed
+            # already-flushed source ticks after a crash
+            prev = (self.dur.frontier.meta or {}).get("source_tick", 0)
+            meta = {"source_tick": max(int(prev),
+                                       int(self.tick_cursor))}
+            state, _ = self._flush_boundary(state, tick, meta=meta)
         host = jax.device_get(state)
         old_n = self.n_shards
 
@@ -866,7 +1120,7 @@ class DistributedEngine:
         # queue peak counters restarted at migration: rebase the
         # rebalance window on the post-migration load, or the next
         # window's delta would subtract peaks that no longer exist
-        self._load_mark = self.shard_load(state)
+        self._rebase_load_window(state)
         return state, self._report(drained, moved_rows, moved_events,
                                    recompiled=grew)
 
@@ -1095,12 +1349,15 @@ class DistributedEngine:
         }
 
     def read_slate(self, state, updater: str, key: int, *, merge=None):
-        """Read a slate by key; with two-choice enabled, merges the (<=2)
-        partial aggregates (primary + secondary shard)."""
+        """Read a slate by key; with two-choice enabled — or the key in
+        the live hot-key split set — merges the (<=2) partial
+        aggregates (primary + secondary shard)."""
         rh, rs = self.ring.table()
         karr = jnp.asarray([key], jnp.int32)
         shards = [int(route(karr, _salt(updater), rh, rs)[0])]
-        if self.cfg.two_choice_threshold:
+        is_hot = bool(np.any(self._hot_valid
+                             & (self._hot_keys == np.int32(key))))
+        if self.cfg.two_choice_threshold or is_hot:
             shards.append(int(route_secondary(karr, _salt(updater),
                                               rh, rs)[0]))
         vals = []

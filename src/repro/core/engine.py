@@ -39,6 +39,8 @@ from repro.core.queues import OverflowPolicy
 from repro.core.workflow import Workflow
 from repro.slates import flush as flush_mod
 from repro.slates import table as tbl
+from repro.telemetry import sketch as sk_mod
+from repro.telemetry.metrics import MetricsRegistry, TelemetryConfig
 
 
 @dataclass
@@ -58,6 +60,10 @@ class EngineConfig:
     # durable runtime (WAL + slate flush + crash recovery, DESIGN.md 10);
     # None = fast-but-amnesiac (the seed behavior)
     durability: Optional[DurabilityConfig] = None
+    # device-side telemetry (DESIGN.md 13): a count-min key-heat sketch
+    # updated inside the jitted tick + a windowed metrics registry read
+    # at chunk boundaries.  None = no sketch state, no readings.
+    telemetry: Optional[TelemetryConfig] = None
 
     def policy_for(self, op_name: str) -> OverflowPolicy:
         return self.overflow.get(op_name, self.default_policy)
@@ -147,6 +153,11 @@ class Engine:
             self.dur = EngineDurability(self.cfg.durability, workflow,
                                         self.cfg.queue_capacity,
                                         self.cfg.batch_size)
+        self.telemetry: Optional[MetricsRegistry] = None
+        if self.cfg.telemetry is not None:
+            self.telemetry = MetricsRegistry(
+                self.cfg.telemetry, batch_size=self.cfg.batch_size)
+            self._salts = self.telemetry.salts
 
     # ---- state ----
     def init_state(self) -> Dict[str, Any]:
@@ -166,6 +177,10 @@ class Engine:
             "throttle_hits": z,
             "processed": {op.name: z for op in self.wf.operators},
         }
+        if self.cfg.telemetry is not None:
+            tc = self.cfg.telemetry
+            state["sketch"] = sk_mod.make_sketch(tc.depth, tc.width,
+                                                 tc.sample)
         # constants are interned by XLA; donation needs distinct buffers
         return jax.tree.map(lambda x: jnp.array(x, copy=True), state)
 
@@ -177,6 +192,7 @@ class Engine:
         processed = dict(state["processed"])
         throttle_hits = state["throttle_hits"]
         tick = state["tick"]
+        sketch = state.get("sketch")
         outputs: Dict[str, List[EventBatch]] = {}
 
         def deliver_all(items: List[Tuple[str, EventBatch]]):
@@ -215,6 +231,13 @@ class Engine:
         for op in wf.operators:
             queues[op.name], batch = q_mod.dequeue(queues[op.name],
                                                    cfg.batch_size)
+            if sketch is not None and isinstance(op, Updater):
+                # key-heat telemetry: observe the keys each updater
+                # actually processes (post-routing) — pure extra state,
+                # never read by the tick itself (parity contract)
+                sketch = sk_mod.sketch_update(
+                    sketch, batch.key, batch.valid, self._salts,
+                    impl=cfg.telemetry.impl)
             if isinstance(op, Mapper):
                 outs = op.map_batch(batch)
                 for s, b in outs.items():
@@ -255,6 +278,8 @@ class Engine:
             "throttle_hits": throttle_hits,
             "processed": processed,
         }
+        if sketch is not None:
+            new_state["sketch"] = sketch
         return new_state, out_batches
 
     # ---- multi-tick chunk (jit: one dispatch, one sync per chunk) ----
@@ -364,6 +389,7 @@ class Engine:
         chunk = chunk_size or self.cfg.chunk_size
         outputs = []
         ingest = None
+        obs_mark = source_offset    # telemetry window cursor
         # throttle_hits is cumulative: resuming from prior state (second
         # run() call, or a recovered state) must not read old hits as a
         # fresh backpressure signal
@@ -397,6 +423,15 @@ class Engine:
             if self.dur and self.dur.due(eng_tick, state["tables"]):
                 state, eng_tick = self._flush_boundary(
                     state, eng_tick, meta={"source_tick": t})
+            if (self.telemetry is not None
+                    and t - obs_mark >= self.cfg.telemetry.window):
+                # windowed reading + sketch aging: piggybacks on the
+                # chunk boundary we are already synced at
+                self.telemetry.observe(self, state)
+                state = dict(state)
+                state["sketch"] = sk_mod.decay(state["sketch"],
+                                               self.cfg.telemetry.decay)
+                obs_mark = t
             if handle is not None:
                 handle.state = state
         return state, outputs

@@ -1,0 +1,3 @@
+from repro.kernels.countmin.ops import countmin_update
+
+__all__ = ["countmin_update"]

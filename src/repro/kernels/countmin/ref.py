@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the count-min sketch update.
+
+All backends are exact integer scatter-adds, so they agree bitwise —
+the sketch is telemetry, but a nondeterministic one would break the
+"telemetry on vs off" parity contract (DESIGN.md section 13).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def countmin_update(counts, cols, add):
+    """counts: [depth, width] int32; cols: [depth, B] int32 hashed
+    column per row; add: [B] int32 increment per event (0 for invalid
+    rows).  Returns counts with every (row, col) bumped by its event's
+    increment — duplicate columns accumulate.
+
+    One flat 1D scatter over the ravelled sketch: measurably cheaper
+    than the 2D advanced-index form on CPU, and the scatter is the
+    whole cost of the jnp backend."""
+    depth, width = counts.shape
+    flat = (cols
+            + (jnp.arange(depth, dtype=jnp.int32) * width)[:, None])
+    amt = jnp.broadcast_to(add.astype(counts.dtype)[None, :], cols.shape)
+    return counts.ravel().at[flat.ravel()].add(
+        amt.ravel()).reshape(depth, width)

@@ -36,6 +36,7 @@ from repro.launch.mesh import make_host_mesh
 from repro.models import lm
 from repro.models.context import Ctx
 from repro.slates.wal import WriteAheadLog
+from repro.telemetry.metrics import MetricsRegistry, TelemetryConfig
 
 
 @dataclass
@@ -88,6 +89,12 @@ class ServingEngine:
         self.shed = 0                      # overflow drops (paper 4.3)
         self.tick = 0
         self.finished: List[Request] = []
+        # windowed serving telemetry (the stream engine's registry via
+        # its engine-agnostic observe_raw: events = tokens decoded,
+        # queue = admission backlog, drops = shed requests)
+        self.telemetry = MetricsRegistry(
+            TelemetryConfig(window=8), batch_size=self.scfg.n_slots)
+        self._tokens_cum = 0
 
         self._insert = jax.jit(self._insert_impl, donate_argnums=(0,))
 
@@ -186,6 +193,7 @@ class ServingEngine:
     def step(self):
         self._admit()
         if self.active.any():
+            self._tokens_cum += int(self.active.sum())
             tok, self.states, self.cur_index = self._decode(
                 lm_params(self), self.last_token, self.states,
                 self.cur_index)
@@ -206,10 +214,25 @@ class ServingEngine:
                     self.active[slot] = False   # slate TTL expiry
                     self.slot_req[slot] = None
         self.tick += 1
+        if self.tick % self.telemetry.cfg.window == 0:
+            self._observe()
 
     def run(self, n_ticks: int):
         for _ in range(n_ticks):
             self.step()
+
+    def _observe(self):
+        """One window reading: decode throughput vs slot capacity,
+        admission backlog, shed requests — the stream engine's
+        TelemetryReport shape, from serving counters."""
+        self.telemetry.observe_raw(
+            tick=self.tick,
+            events=np.asarray([self._tokens_cum]),
+            queue_depth=np.asarray([len(self.queue)]),
+            queue_peak=np.asarray([len(self.queue)]),
+            dropped=np.asarray([self.shed]),
+            occupancy=np.asarray([int(self.active.sum())]),
+            active=[0])
 
     def status_server(self, port: int = 0):
         """Live HTTP introspection while serving (the stream engine's
@@ -244,7 +267,7 @@ class ServingEngine:
     def stats(self) -> Dict[str, Any]:
         lat = [r.done_tick - r.arrived_tick for r in self.finished
                if r.done_tick is not None]
-        return {
+        out = {
             "tick": self.tick,
             "finished": len(self.finished),
             "active": int(self.active.sum()),
@@ -254,6 +277,10 @@ class ServingEngine:
             "tokens_generated": int(sum(len(r.tokens_out)
                                         for r in self.finished)),
         }
+        if self.telemetry.last is not None:
+            # windowed TelemetryReport on /status (DESIGN.md 13.2)
+            out["telemetry"] = self.telemetry.last.to_dict()
+        return out
 
 
 def lm_params(engine: ServingEngine):

@@ -28,6 +28,18 @@ Each ``--scale-at TICK:N`` rescales the active shard set live before
 source tick TICK, migrating slates and in-flight events loss-free;
 ``--rebalance-every K`` reweights the ring from the per-shard load
 signal every K ticks.
+
+Closed-loop autoscaling (DESIGN.md section 13) replaces the declared
+schedule with watermarks on the telemetry pressure signal::
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    python -m repro.launch.stream --dir /tmp/m --ticks 48 \
+        --shards 2 --autoscale load:0.75,0.2
+
+``--autoscale load:HI,LO`` attaches a ``LoadAutoscaler``: the active
+shard set grows when windowed per-shard pressure stays above HI and
+shrinks back once it stays below LO (hysteresis: dwell + cooldown);
+the final telemetry report is printed with the stats.
 """
 from __future__ import annotations
 
@@ -37,7 +49,8 @@ import json
 import jax.numpy as jnp
 import numpy as np
 
-from repro import App, AutoscalePolicy, EventBatch, RuntimeConfig
+from repro import (App, AutoscalePolicy, EventBatch, LoadAutoscaler,
+                   RuntimeConfig)
 
 
 def make_app(args) -> App:
@@ -56,16 +69,22 @@ def make_app(args) -> App:
         return {"count": jnp.ones_like(batch.key),
                 "sum": batch.value["x"]}
 
+    def on_change(rep):
+        print(f"reconfigured: active={len(rep.active)} shards, moved "
+              f"{sum(rep.moved_rows.values())} rows + "
+              f"{sum(rep.moved_events.values())} queued events "
+              f"({'recompiled' if rep.recompiled else 'ring swap only'})")
+
     autoscale = None
-    if args.scale_at or args.rebalance_every:
+    if args.autoscale is not None:
+        hi, lo = args.autoscale
+        autoscale = LoadAutoscaler(high=hi, low=lo, window=4, dwell=1,
+                                   cooldown=1, on_change=on_change)
+    elif args.scale_at or args.rebalance_every:
         autoscale = AutoscalePolicy(
             scale_at=dict(args.scale_at or ()),
             rebalance_every=args.rebalance_every,
-            on_change=lambda rep: print(
-                f"reconfigured: active={len(rep.active)} shards, moved "
-                f"{sum(rep.moved_rows.values())} rows + "
-                f"{sum(rep.moved_events.values())} queued events "
-                f"({'recompiled' if rep.recompiled else 'ring swap only'})"))
+            on_change=on_change)
     app.start(RuntimeConfig(batch_size=args.batch,
                             queue_capacity=args.batch * 4,
                             chunk_size=args.chunk,
@@ -113,6 +132,19 @@ def parse_scale_at(spec: str):
             f"--scale-at wants TICK:N (e.g. 24:16), got {spec!r}")
 
 
+def parse_autoscale(spec: str):
+    try:
+        mode, rest = spec.split(":")
+        if mode != "load":
+            raise ValueError
+        hi, lo = (float(x) for x in rest.split(","))
+        return hi, lo
+    except ValueError:
+        raise argparse.ArgumentTypeError(
+            f"--autoscale wants load:HI,LO (e.g. load:0.75,0.2), "
+            f"got {spec!r}")
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--dir", required=True,
@@ -133,6 +165,11 @@ def main(argv=None):
     ap.add_argument("--rebalance-every", type=int, default=0,
                     help="reweight the ring from the per-shard load "
                          "signal every K source ticks")
+    ap.add_argument("--autoscale", type=parse_autoscale, default=None,
+                    metavar="load:HI,LO",
+                    help="closed-loop autoscaling: grow the active "
+                         "shard set when windowed pressure > HI, "
+                         "shrink when < LO (DESIGN.md section 13)")
     ap.add_argument("--crash-at", type=int, default=None,
                     help="hard-exit after this many source ticks "
                          "(simulated machine crash; no final flush)")
@@ -141,6 +178,14 @@ def main(argv=None):
     ap.add_argument("--serve", action="store_true",
                     help="HTTP slate server live during the run")
     args = ap.parse_args(argv)
+    if args.autoscale is not None and args.shards < 2:
+        ap.error("--autoscale needs --shards >= 2 (a distributed "
+                 "runtime to scale)")
+    if args.autoscale is not None and (args.scale_at
+                                       or args.rebalance_every):
+        ap.error("--autoscale (closed loop) and --scale-at/"
+                 "--rebalance-every (declared schedule) are mutually "
+                 "exclusive")
 
     app = make_app(args)
     eng = app.engine
@@ -182,6 +227,11 @@ def main(argv=None):
         return   # no close(): unflushed slates die with the process
 
     print(json.dumps(app.stats(), indent=2))
+    if args.autoscale is not None:
+        rep = app.telemetry()
+        print(f"telemetry: active={len(rep.active)} shards, "
+              f"pressure={np.round(rep.pressure, 3).tolist()}, "
+              f"heavy={rep.heavy_hitters[:3]}")
     for key in (0, 1, 2):
         print(f"slate[{key}] =", app.read_slate("U1", key))
     app.close()

@@ -1,0 +1,20 @@
+"""Device-side telemetry + the closed control loop (DESIGN.md 13).
+
+Three layers, observe -> decide -> act:
+
+- ``telemetry.sketch``: a count-min sketch of routed event keys,
+  updated *inside* the jitted tick (``kernels/countmin``), with a
+  key-sample ring so heavy hitters can be enumerated host-side;
+- ``telemetry.metrics``: a windowed metrics registry that turns the
+  chunk-boundary device reads the drivers already pay for into EMA load
+  signals (``TelemetryReport``) — no new syncs on the hot path;
+- ``telemetry.controller``: ``LoadAutoscaler``, a hysteresis controller
+  choosing among the PR-4 actuators (``scale`` / ``rebalance`` /
+  ``split_keys``) from those signals.
+"""
+from repro.telemetry.controller import Action, LoadAutoscaler
+from repro.telemetry.metrics import (MetricsRegistry, TelemetryConfig,
+                                     TelemetryReport)
+
+__all__ = ["Action", "LoadAutoscaler", "MetricsRegistry",
+           "TelemetryConfig", "TelemetryReport"]

@@ -1,0 +1,245 @@
+"""Windowed load metrics from chunk-boundary device reads.
+
+The hot path stays sync-free: every signal here is derived from the
+single ``device_get`` per chunk/segment boundary the drivers already
+pay for (the throttle trace on ``Engine.run``, the stats reads on the
+distributed drive loop) — ``MetricsRegistry.observe`` batches one
+small aggregate tree into that same transfer slot and diffs it against
+the previous window.  Readings are therefore *window* quantities
+(deltas over the ticks since the last observe), smoothed into EMAs;
+cumulative engine counters never leave the device between boundaries.
+
+``observe_raw`` is the engine-agnostic core (the LM serving driver
+feeds it its own counters); ``observe`` adapts a stream engine
+(``Engine`` or ``DistributedEngine``) and, when the state carries a
+count-min sketch, attaches heavy-hitter estimates.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro.telemetry import sketch as sk_mod
+
+
+@dataclass
+class TelemetryConfig:
+    """Knobs for the device sketch + the metrics window."""
+
+    # depth 2 x width 2048 trades hash rows for row width: the scatter
+    # cost in the tick is depth*B updates, while heavy-hitter *ranking*
+    # (telemetry's job, unlike a tight frequency oracle) only needs the
+    # error bound e*N/width to stay far under the skew threshold.
+    # Raise depth for tighter per-key estimates.
+    depth: int = 2            # count-min hash rows
+    width: int = 2048         # counters per row (lane-aligned on TPU)
+    sample: int = 128         # key-sample ring size (heavy-hitter cands)
+    impl: str = "auto"        # countmin backend (kernels/countmin/ops)
+    window: int = 8           # source ticks per metrics/decision window
+    # sketch aging per window.  0 (default) hard-resets: counters hold
+    # exactly one window, so heavy-hitter shares are exact.  >0 keeps a
+    # decayed residue (steady state ~1/(1-decay) windows) for smoother
+    # estimates — shares are normalized by that factor.
+    decay: float = 0.0
+    alpha: float = 0.5        # EMA smoothing of windowed readings
+    top_k: int = 8            # heavy hitters reported per window
+    seed: int = 0x7E1E        # sketch salt seed
+
+
+@dataclass
+class TelemetryReport:
+    """One window's view of the running engine (all arrays [n_shards];
+    the single-shard engine reports shape [1])."""
+
+    tick: int                     # engine tick at the snapshot
+    ticks: int                    # ticks covered by this window
+    n_shards: int
+    active: List[int]             # active shard ids
+    events: np.ndarray            # events processed this window
+    events_per_tick: np.ndarray   # EMA of events/tick
+    queue_depth: np.ndarray       # backlog right now (sum over operators)
+    queue_peak_delta: np.ndarray  # high-water growth this window
+    dropped_delta: np.ndarray     # drops this window (queues + exchange)
+    occupancy: np.ndarray         # slate rows resident (sum over tables)
+    pressure: np.ndarray          # EMA normalized load (see `observe_raw`)
+    heavy_hitters: List[Tuple[int, int, float]]  # (key, est, share)
+    migration_pause_s: float      # EMA of reconfigure pause seconds
+
+    def to_dict(self) -> Dict[str, Any]:
+        """JSON-safe form (the HTTP status surface)."""
+        out = {}
+        for f in dataclasses.fields(self):
+            v = getattr(self, f.name)
+            out[f.name] = v.tolist() if isinstance(v, np.ndarray) else v
+        return out
+
+
+class MetricsRegistry:
+    """EMA windows over boundary readings for one engine.
+
+    Shape-agnostic: per-shard array sizes are taken from each reading,
+    and a shape change (physical grow) or an explicit :meth:`rebase`
+    restarts the window marks — deltas never span a migration, whose
+    counter resets would otherwise read as negative load.
+    """
+
+    def __init__(self, cfg: TelemetryConfig, *, batch_size: int):
+        self.cfg = cfg
+        self.batch_size = max(1, batch_size)
+        self.salts = sk_mod.make_salts(cfg.depth, cfg.seed)
+        self.last: Optional[TelemetryReport] = None
+        self._mark: Optional[Dict[str, Any]] = None
+        self._ema_ev: Optional[np.ndarray] = None
+        self._ema_pressure: Optional[np.ndarray] = None
+        self._pause_ema = 0.0
+
+    # ---- engine-agnostic core ---------------------------------------
+    def observe_raw(self, *, tick: int, events: np.ndarray,
+                    queue_depth: np.ndarray, queue_peak: np.ndarray,
+                    dropped: np.ndarray, occupancy: np.ndarray,
+                    active: Sequence[int],
+                    heavy: List[Tuple[int, int]] = ()) -> TelemetryReport:
+        """Fold one boundary reading (cumulative counters) into the
+        window state and return the report.  ``events`` / ``queue_peak``
+        / ``dropped`` are lifetime counters; this diffs them against
+        the previous reading."""
+        events = np.asarray(events, np.float64)
+        queue_depth = np.asarray(queue_depth, np.float64)
+        queue_peak = np.asarray(queue_peak, np.float64)
+        dropped = np.asarray(dropped, np.float64)
+        occupancy = np.asarray(occupancy, np.float64)
+        n = events.shape[0]
+        m = self._mark
+        if m is None or m["events"].shape != events.shape:
+            m = {"tick": tick, "events": events, "peak": queue_peak,
+                 "dropped": dropped}
+        if self._ema_ev is None or self._ema_ev.shape != events.shape:
+            # EMAs survive a same-shape rebase: only the *window marks*
+            # restart at migrations — zeroing smoothed pressure there
+            # would feed artificially low readings into the controller's
+            # streaks right when hysteresis matters most
+            self._ema_ev = np.zeros(n)
+            self._ema_pressure = np.zeros(n)
+        dt = max(1, tick - m["tick"])
+        ev_d = np.clip(events - m["events"], 0.0, None)
+        peak_d = np.clip(queue_peak - m["peak"], 0.0, None)
+        drop_d = np.clip(dropped - m["dropped"], 0.0, None)
+        # normalized load: throughput share of batch capacity, plus
+        # standing backlog and (heavily weighted) drops — a shard at
+        # pressure ~1 is saturated, >1 is shedding
+        pressure = (ev_d / dt + queue_depth + 4.0 * drop_d) \
+            / self.batch_size
+        a = self.cfg.alpha
+        self._ema_ev = a * (ev_d / dt) + (1 - a) * self._ema_ev
+        self._ema_pressure = a * pressure + (1 - a) * self._ema_pressure
+        total = float(ev_d.sum())
+        # a decaying sketch holds ~1/(1-decay) windows of counts at
+        # steady state while `total` covers one window — normalize so
+        # the skew threshold compares like with like
+        norm = total / max(1e-9, 1.0 - self.cfg.decay) \
+            if 0.0 < self.cfg.decay < 1.0 else total
+        hh = [(k, est, min(1.0, est / norm) if norm else 0.0)
+              for k, est in heavy]
+        self._mark = {"tick": tick, "events": events, "peak": queue_peak,
+                      "dropped": dropped}
+        self.last = TelemetryReport(
+            tick=tick, ticks=dt, n_shards=n, active=list(active),
+            events=ev_d, events_per_tick=self._ema_ev.copy(),
+            queue_depth=queue_depth, queue_peak_delta=peak_d,
+            dropped_delta=drop_d, occupancy=occupancy,
+            pressure=self._ema_pressure.copy(), heavy_hitters=hh,
+            migration_pause_s=self._pause_ema)
+        return self.last
+
+    # ---- stream-engine adapter --------------------------------------
+    def observe(self, engine, state) -> TelemetryReport:
+        """One boundary reading of a stream engine: a single
+        ``device_get`` of the aggregate tree (the piggyback transfer),
+        then ``observe_raw``.  Heavy hitters are estimated from the
+        state's sketch when present (summed over shards)."""
+        (tick, events, qsize, qpeak, dropped, occ, heavy,
+         active) = self._read(engine, state, with_heavy=True)
+        return self.observe_raw(
+            tick=tick, events=events, queue_depth=qsize,
+            queue_peak=qpeak, dropped=dropped, occupancy=occ,
+            active=active, heavy=heavy)
+
+    def _read(self, engine, state, *, with_heavy: bool):
+        upd = {u.name for u in engine.wf.updaters()}
+        tree = {
+            "tick": state["tick"],
+            "proc": {k: v for k, v in state["processed"].items()
+                     if k in upd},
+            "qsize": {k: q.size for k, q in state["queues"].items()},
+            "qpeak": {k: q.peak for k, q in state["queues"].items()},
+            "qdrop": {k: q.dropped for k, q in state["queues"].items()},
+            # per-shard row counts (table.occupancy() sums across the
+            # shard dim too; the report promises [n_shards] arrays)
+            "occ": {k: (t.keys != -1).sum(axis=-1)
+                    for k, t in state["tables"].items()},
+        }
+        if "exchange_dropped" in state:
+            tree["exdrop"] = state["exchange_dropped"]
+        if with_heavy and "sketch" in state:
+            tree["sk"] = state["sketch"]
+        host = jax.device_get(tree)            # the one boundary sync
+
+        def shards(x):
+            return np.atleast_1d(np.asarray(x, np.float64))
+
+        def summed(d):
+            out = None
+            for v in d.values():
+                v = shards(v)
+                out = v if out is None else out + v
+            return out if out is not None else np.zeros(1)
+
+        tick = int(np.max(np.asarray(host["tick"])))
+        events = summed(host["proc"])
+        dropped = summed(host["qdrop"])
+        if "exdrop" in host:
+            dropped = dropped + shards(host["exdrop"])
+        heavy = []
+        if "sk" in host:
+            sk = host["sk"]
+            counts = np.asarray(sk["counts"])
+            sample = np.asarray(sk["sample"])
+            if counts.ndim == 2:               # single-shard engine
+                counts, sample = counts[None], sample[None]
+            n_tot = np.atleast_1d(np.asarray(sk["sample_n"]))
+            agg = counts.sum(axis=0)           # global heat across shards
+            cand = np.unique(np.concatenate(
+                [sk_mod.candidates(sample[s], int(n_tot[s]))
+                 for s in range(sample.shape[0])]) if sample.shape[0]
+                else np.zeros(0, np.int32))
+            if len(cand):
+                est = sk_mod.estimate(agg, cand, self.salts)
+                order = np.argsort(-est, kind="stable")[:self.cfg.top_k]
+                heavy = [(int(cand[i]), int(est[i])) for i in order]
+        active = getattr(engine, "active_shards", None)
+        if active is None:
+            active = list(range(events.shape[0]))
+        return (tick, events, summed(host["qsize"]),
+                summed(host["qpeak"]), dropped, summed(host["occ"]),
+                heavy, active)
+
+    # ---- window management ------------------------------------------
+    def rebase(self, engine, state):
+        """Restart the window marks after a migration (queue peaks and
+        shard shapes may have changed): a fresh counter snapshot only —
+        no report, no heavy-hitter estimation, and the EMAs are left
+        untouched (folding an artificial post-drain zero reading into
+        them would bias the controller toward premature scale-down)."""
+        tick, events, _, qpeak, dropped, _, _, _ = self._read(
+            engine, state, with_heavy=False)
+        self._mark = {"tick": tick, "events": events, "peak": qpeak,
+                      "dropped": dropped}
+
+    def note_pause(self, seconds: float):
+        """Record a reconfigure pause (EMA; surfaced on the report)."""
+        a = self.cfg.alpha
+        self._pause_ema = a * float(seconds) + (1 - a) * self._pause_ema

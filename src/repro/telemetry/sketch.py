@@ -1,0 +1,136 @@
+"""Count-min key-heat sketch: device state + host readout.
+
+The sketch answers "how hot is key k?" without per-key state: ``depth``
+hash rows of ``width`` counters; an event increments one counter per
+row; ``estimate`` reads the min over rows — an upper bound on the true
+count that is exact when no collision survives all rows (error <=
+e*N/width with prob 1 - e^-depth, the classic Cormode-Muthukrishnan
+bound).  A count-min sketch cannot *enumerate* keys, so the device
+state carries a small key-sample ring updated alongside the counters;
+``heavy_hitters`` estimates the sampled candidates and ranks them.
+
+Device side (``sketch_update``) runs inside the jitted tick on the
+*routed* keys each updater dequeues — per-shard sketches therefore
+measure per-arc heat, the signal the rebalance weights want.  Host
+side (``estimate`` / ``heavy_hitters``) operates on a ``device_get``
+snapshot taken at chunk boundaries only (DESIGN.md 13.2).  ``decay``
+ages the counters at window boundaries so heat is recent, not
+lifetime; the ``total`` event counter stays monotone (the metrics
+window diffs it).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.hashing import _mix32_np, mix32
+from repro.kernels.countmin import countmin_update
+
+
+def make_salts(depth: int, seed: int = 0x7E1E) -> np.ndarray:
+    """Per-row hash salts (uint32), deterministic in (depth, seed)."""
+    rows = np.arange(depth, dtype=np.uint32)
+    return _mix32_np(rows * np.uint32(0x85EBCA6B) + np.uint32(seed))
+
+
+def make_sketch(depth: int, width: int, sample: int) -> Dict[str, Any]:
+    """Fresh sketch state (no leading shard dim; engines broadcast)."""
+    return {
+        "counts": jnp.zeros((depth, width), jnp.int32),
+        "total": jnp.zeros((), jnp.int32),
+        "sample": jnp.zeros((sample,), jnp.int32),
+        "sample_n": jnp.zeros((), jnp.int32),
+    }
+
+
+def columns(keys, salts: np.ndarray, width: int):
+    """[B] int32 keys -> [depth, B] int32 hashed columns (jit-safe;
+    one broadcast avalanche over all rows at once — bitwise the same
+    as per-row ``hash_key(keys, salt)``, which ``estimate`` uses)."""
+    h = mix32(keys.astype(jnp.uint32)[None, :]
+              ^ jnp.asarray(salts, jnp.uint32)[:, None])
+    return (h % jnp.uint32(width)).astype(jnp.int32)
+
+
+def sketch_update(sk, keys, valid, salts: np.ndarray, *,
+                  impl: str = "auto"):
+    """Fold one batch of (keys, valid) into the sketch — called inside
+    the jitted tick; everything here is shape-static and sync-free.
+
+    The sample ring update is an elementwise select, not a scatter:
+    batch row ``i`` overwrites ring slot ``i`` when valid.  That makes
+    the ring *positional best-effort* — a key only enters via the first
+    ``S`` batch rows — which is exactly enough for its job (candidate
+    discovery for heavy hitters: a hot key hits every row range across
+    ticks) at a fraction of a scatter's cost; the count-min counters
+    remain the exact part."""
+    width = sk["counts"].shape[1]
+    add = valid.astype(jnp.int32)
+    counts = countmin_update(sk["counts"], columns(keys, salts, width),
+                             add, impl=impl)
+    S = sk["sample"].shape[0]
+    B = keys.shape[0]
+    k, v = (keys[:S], valid[:S]) if B >= S else \
+        (jnp.pad(keys, (0, S - B)), jnp.pad(valid, (0, S - B)))
+    n = jnp.sum(add)
+    return {
+        "counts": counts,
+        "total": sk["total"] + n,
+        "sample": jnp.where(v, k, sk["sample"]),
+        "sample_n": sk["sample_n"] + n,
+    }
+
+
+def decay(sk, factor: float):
+    """Age the counters at a window boundary (host-driven, off the hot
+    path): ``factor`` in (0, 1) scales heat down, 0 hard-resets.  The
+    monotone ``total`` / sample ring are left alone — the metrics
+    window diffs ``total`` and the ring is already time-local."""
+    counts = sk["counts"]
+    if factor <= 0.0:
+        counts = jnp.zeros_like(counts)
+    else:
+        counts = jnp.floor(counts.astype(jnp.float32) * factor) \
+            .astype(counts.dtype)
+    return {**sk, "counts": counts}
+
+
+# ---- host-side readout (chunk-boundary snapshots) --------------------
+
+def estimate(counts: np.ndarray, keys, salts: np.ndarray) -> np.ndarray:
+    """Point estimates for ``keys`` from a host snapshot of one sketch:
+    min over rows — always >= the true (decayed) count.  Pure numpy
+    (``_mix32_np`` is bitwise ``hash_key``): the readout path must not
+    add device dispatches beyond the boundary snapshot itself."""
+    counts = np.asarray(counts)
+    keys = np.atleast_1d(np.asarray(keys, np.int32))
+    width = counts.shape[1]
+    ests = []
+    for d, s in enumerate(salts):
+        cols = _mix32_np(keys.astype(np.uint32) ^ np.uint32(s))
+        ests.append(counts[d, cols % np.uint32(width)])
+    return np.min(np.stack(ests), axis=0)
+
+
+def candidates(sample: np.ndarray, sample_n: int) -> np.ndarray:
+    """Distinct keys currently resident in the sample ring."""
+    sample = np.asarray(sample)
+    n = min(int(sample_n), sample.shape[0])
+    return np.unique(sample[:n]) if n else np.zeros(0, np.int32)
+
+
+def heavy_hitters(counts: np.ndarray, sample: np.ndarray, sample_n: int,
+                  salts: np.ndarray, k: int = 8
+                  ) -> List[Tuple[int, int]]:
+    """Top-k ``(key, estimated_count)`` among the sampled candidates,
+    hottest first.  Candidates come from the sample ring; a key that
+    never landed in the ring during the window cannot be reported — by
+    construction such a key received few recent events."""
+    cand = candidates(sample, sample_n)
+    if not len(cand):
+        return []
+    est = estimate(counts, cand, salts)
+    order = np.argsort(-est, kind="stable")[:k]
+    return [(int(cand[i]), int(est[i])) for i in order]
