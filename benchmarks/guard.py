@@ -1,0 +1,144 @@
+"""CI bench-regression guard (tier-1).
+
+Re-measures a small set of fast, stable benchmarks and compares them
+against the pinned ``BENCH_<n>.json`` baseline at the repo root,
+failing (exit 1) when any guarded metric regresses by more than
+``BENCH_GUARD_TOL`` (default 15%).
+
+Raw microseconds are meaningless across runners, so both sides are
+normalized by the ``guard_calibration`` anchor (a fixed jitted argsort
+recorded into every baseline by ``benchmarks/run.py``):
+
+    ratio = (cur[m] / cur[anchor]) / (base[m] / base[anchor])
+
+A ratio above ``1 + tol`` is a regression.  Measurement is best-of-N
+attempts (default 3): CI runners are noisy, and a guard that cries
+wolf gets deleted — only a regression that survives every attempt
+fails the build.  Baselines predating the anchor are skipped (exit 0)
+rather than compared against garbage.
+
+Guard-context pinning (``--pin``): dispatch-bound metrics shift by
+tens of percent between measurement *contexts* (full-suite process
+state, scheduler company on small machines) even when machine speed —
+which the argsort anchor tracks — is identical.  So the baseline the
+guard compares against must be measured by the guard's own code path:
+``guard.py --pin`` re-measures the guarded metrics + anchor exactly as
+a guard run would and merges them into the pinned ``BENCH_<n>.json``
+under ``guard:``-prefixed keys (the full-suite trajectory numbers are
+left untouched).  ``main()`` prefers those keys and falls back to the
+plain names for old baselines.  CI pins right after emitting a fresh
+baseline (bench-smoke job), so checks always compare guard-context to
+guard-context.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import re
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+GUARDED = ("latency_per_tick", "tick_dispatch_chunked32")
+ANCHOR = "guard_calibration"
+ROOT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..")
+
+
+def load_baseline():
+    """The pinned baseline: BENCH_ID if set, else the highest-numbered
+    BENCH_<n>.json in the repo root."""
+    bid = os.environ.get("BENCH_ID")
+    if bid:
+        path = os.path.join(ROOT, f"BENCH_{bid}.json")
+        return (json.load(open(path)), path) if os.path.exists(path) \
+            else (None, path)
+    best, best_n = None, -1
+    for path in glob.glob(os.path.join(ROOT, "BENCH_*.json")):
+        m = re.match(r"BENCH_(\d+)\.json$", os.path.basename(path))
+        if m and int(m.group(1)) > best_n:
+            best, best_n = path, int(m.group(1))
+    return (json.load(open(best)), best) if best else (None, None)
+
+
+def base_val(base: dict, name: str):
+    """Guard-context entry if the baseline was pinned, else the
+    full-suite number (old baselines)."""
+    return base.get(f"guard:{name}", base.get(name))
+
+
+def measure():
+    """One attempt: the guarded benches + the anchor, in-process."""
+    from benchmarks import run as bench
+    bench.ROWS.clear()
+    bench.bench_latency()
+    bench.bench_chunked_vs_pertick()
+    bench.bench_guard_calibration()
+    out = {n: u for n, u, _ in bench.ROWS}
+    bench.ROWS.clear()
+    return out
+
+
+def pin(attempts: int = 3) -> int:
+    """Merge guard-context measurements (best of ``attempts``) into the
+    pinned baseline under ``guard:``-prefixed keys."""
+    base, path = load_baseline()
+    if base is None:
+        print(f"bench guard: no baseline to pin ({path or 'BENCH_*.json'})")
+        return 1
+    best = {}
+    for _ in range(attempts):
+        cur = measure()
+        for name, us in cur.items():
+            best[name] = min(best.get(name, float("inf")), us)
+    for name in GUARDED + (ANCHOR,):
+        base[f"guard:{name}"] = round(best[name], 2)
+        print(f"  pinned guard:{name} = {best[name]:.2f}us")
+    with open(path, "w") as f:
+        json.dump(base, f, indent=2, sort_keys=True)
+    print(f"bench guard: pinned guard-context baseline into {path}")
+    return 0
+
+
+def main() -> int:
+    tol = float(os.environ.get("BENCH_GUARD_TOL", "0.15"))
+    attempts = int(os.environ.get("BENCH_GUARD_ATTEMPTS", "3"))
+    base, path = load_baseline()
+    if base is None:
+        print(f"bench guard: no baseline ({path or 'BENCH_*.json'}); "
+              f"skipping")
+        return 0
+    b_anchor = base_val(base, ANCHOR)
+    if not b_anchor or b_anchor <= 0:
+        print(f"bench guard: baseline {path} predates the "
+              f"{ANCHOR!r} anchor; skipping")
+        return 0
+    missing = [m for m in GUARDED if base_val(base, m) is None]
+    if missing:
+        print(f"bench guard: baseline {path} lacks {missing}; skipping")
+        return 0
+    worst = {}
+    for attempt in range(1, attempts + 1):
+        cur = measure()
+        bad = []
+        for m in GUARDED:
+            ratio = (cur[m] / cur[ANCHOR]) / (base_val(base, m) / b_anchor)
+            worst[m] = min(worst.get(m, float("inf")), ratio)
+            mark = "FAIL" if ratio > 1 + tol else "ok"
+            print(f"  [{attempt}/{attempts}] {m}: {cur[m]:.1f}us, "
+                  f"normalized ratio {ratio:.3f} vs {path} ({mark})")
+            if ratio > 1 + tol:
+                bad.append(m)
+        if not bad:
+            print(f"bench guard: pass (tol {tol:.0%})")
+            return 0
+    fails = [m for m, r in worst.items() if r > 1 + tol]
+    print(f"bench guard: FAIL — {fails} regressed > {tol:.0%} in every "
+          f"attempt (best normalized ratios "
+          f"{ {m: round(worst[m], 3) for m in fails} })")
+    return 1
+
+
+if __name__ == "__main__":
+    sys.exit(pin() if "--pin" in sys.argv[1:] else main())

@@ -375,8 +375,8 @@ def build(n, **kw):
         batch_size=256, queue_capacity=2048, **kw))
     return eng, eng.init_state()
 
-# elastic_scale_8to16: live scale mid-run (drain + migrate + first
-# post-scale step, which includes the recompile the grow forces)
+# elastic_scale_8to16_host: PHYSICAL grow (8-slot mesh -> 16 slots) —
+# the shape-change tier: device_get + host remap + recompile + step
 eng, state = build(8)
 rng = np.random.default_rng(0)
 for t in range(8):
@@ -389,7 +389,49 @@ state, _ = eng.step(state, {'S1': gb(
     rng.integers(0, 1 << 14, 2048).astype(np.int32), 8, 16)})
 jax.block_until_ready(state['tick'])
 us = (time.perf_counter() - t0) * 1e6
-print(f"ELASTIC,{us:.2f},{rows},{sum(rep.moved_rows.values())}")
+print(f"HOST,{us:.2f},{rows},{sum(rep.moved_rows.values())}")
+del eng, state
+
+# elastic_scale_8to16 (device tier, DESIGN.md 14.1): pre-provisioned
+# 16-slot mesh with 8 active — activation is a content-only ring swap,
+# rows move via on-device all_to_all, nothing recompiles.  One warm
+# grow/shrink cycle compiles the plan + migrate kernels (the cycle is
+# bitwise state-neutral, so the timed run sees identical mover counts
+# and hits the same jit bucket).
+eng, state = build(16)
+state, _ = eng.remove_shards(state, range(8, 16))
+rng = np.random.default_rng(0)
+for t in range(8):
+    state, _ = eng.step(state, {'S1': gb(
+        rng.integers(0, 1 << 14, 2048).astype(np.int32), t, 16)})
+rows = int(jax.device_get((state['tables']['U1'].keys != -1).sum()))
+state, _ = eng.scale(state, 16)                  # warm (compiles)
+state, _ = eng.remove_shards(state, range(8, 16))
+t0 = time.perf_counter()
+state, rep = eng.scale(state, 16)
+state, _ = eng.step(state, {'S1': gb(
+    rng.integers(0, 1 << 14, 2048).astype(np.int32), 8, 16)})
+jax.block_until_ready(state['tick'])
+us = (time.perf_counter() - t0) * 1e6
+assert rep.path == 'device', rep.path
+print(f"DEVICE,{us:.2f},{rows},{sum(rep.moved_rows.values())},"
+      f"{rep.pause_s:.6f},{rep.bytes_moved}")
+
+# elastic_shrink_16to8: planned mass leave on the device tier (50%
+# dead stays under the compaction threshold; slates leave the parked
+# slots but the mesh keeps its shape).  Warm the shrink at current
+# contents first so the timed run is compile-free.
+state, _ = eng.remove_shards(state, range(8, 16))   # warm shrink
+state, _ = eng.scale(state, 16)
+t0 = time.perf_counter()
+state, rep2 = eng.remove_shards(state, range(8, 16))
+state, _ = eng.step(state, {'S1': gb(
+    rng.integers(0, 1 << 14, 2048).astype(np.int32), 9, 16)})
+jax.block_until_ready(state['tick'])
+us2 = (time.perf_counter() - t0) * 1e6
+assert rep2.path == 'device', rep2.path
+print(f"SHRINK,{us2:.2f},{sum(rep2.moved_rows.values())},"
+      f"{rep2.pause_s:.6f}")
 
 # rebalance_hot_ring: load-aware reweight + migration, content-only
 # ring swap (no recompile) + next step
@@ -419,12 +461,28 @@ def bench_elasticity():
     if r.returncode != 0:      # pragma: no cover - surfacing CI breakage
         raise RuntimeError(f"elasticity bench failed:\n{r.stderr}")
     for line in r.stdout.splitlines():
-        if line.startswith("ELASTIC,"):
+        if line.startswith("HOST,"):
             _, us, rows, moved = line.split(",")
+            row("elastic_scale_8to16_host", float(us),
+                f"physical grow 8->16 slots: drain + host remap "
+                f"{moved} of {rows} rows + recompile+step (the "
+                f"shape-change tier)")
+        elif line.startswith("DEVICE,"):
+            _, us, rows, moved, pause, nbytes = line.split(",")
             row("elastic_scale_8to16", float(us),
-                f"live scale 8->16 mid-run: drain + migrate {moved} of "
-                f"{rows} rows + recompile+step; loss-free (vs "
-                f"fail_shard)")
+                f"device tier: activate 8->16 on a 16-slot mesh, "
+                f"all_to_all {moved} of {rows} rows "
+                f"({int(nbytes)} B), no recompile; loss-free")
+            p = float(pause)
+            row("migration_rows_per_s", p * 1e6,
+                f"{int(moved)/p:.2e} rows/s through the device "
+                f"migration kernel (pause {p*1e3:.1f} ms)")
+        elif line.startswith("SHRINK,"):
+            _, us, moved, pause = line.split(",")
+            row("elastic_shrink_16to8", float(us),
+                f"device tier: planned leave 16->8 active, all_to_all "
+                f"{moved} rows off the parked slots + step "
+                f"(pause {float(pause)*1e3:.1f} ms)")
         elif line.startswith("REBALANCE,"):
             _, us, vn, budget = line.split(",")
             row("rebalance_hot_ring", float(us),
@@ -687,6 +745,26 @@ def bench_serving():
 
 
 # ----------------------------------------------------------------------
+# CI regression-guard anchor (benchmarks/guard.py)
+# ----------------------------------------------------------------------
+
+def bench_guard_calibration():
+    """A fixed, workload-independent anchor — a jitted argsort over a
+    constant 64k array — recorded into every BENCH_<n>.json.  The CI
+    ratio guard divides each guarded metric by this anchor on both
+    sides of the comparison, cancelling machine-speed differences so
+    the pinned baseline stays meaningful across runners."""
+    x = jnp.asarray(np.random.default_rng(42).standard_normal(1 << 16),
+                    jnp.float32)
+    f = jax.jit(lambda a: jnp.argsort(a))
+    f(x).block_until_ready()
+    us = _time_min(lambda: f(x).block_until_ready(), n=30)
+    row("guard_calibration", us,
+        "fixed jitted argsort(65536): machine-speed anchor for the "
+        "CI bench ratio guard")
+
+
+# ----------------------------------------------------------------------
 # kernels (ref-path timings; Pallas targets TPU, validated in tests)
 # ----------------------------------------------------------------------
 
@@ -728,6 +806,7 @@ def main() -> None:
     bench_wal()
     bench_durability()
     bench_serving()
+    bench_guard_calibration()
     bench_kernels()
     root = os.path.join(os.path.dirname(__file__), "..")
     out = os.path.join(root, "experiments", "bench_results.json")

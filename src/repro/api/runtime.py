@@ -31,6 +31,12 @@ class RuntimeConfig:
     mesh: Optional[object] = None    # jax.sharding.Mesh
     exchange_slack: float = 2.0
     two_choice_threshold: int = 0
+    # migration tiering (DESIGN.md section 14): "auto" moves slate rows
+    # on device at shape-preserving reconfigures; "off" forces the host
+    # remap.  compact_threshold: dead-slot fraction that triggers
+    # physical slot compaction on scale-down (0 disables).
+    device_migration: str = "auto"
+    compact_threshold: float = 0.75
     # durability (DESIGN.md section 10): a directory turns on the WAL +
     # slate flush + crash recovery runtime
     durable_dir: Optional[str] = None
@@ -112,6 +118,8 @@ class RuntimeConfig:
             durability=self._durability(),
             exchange_slack=self.exchange_slack,
             two_choice_threshold=self.two_choice_threshold,
+            device_migration=self.device_migration,
+            compact_threshold=self.compact_threshold,
             autoscale=self.autoscale,
             telemetry=self._telemetry())
 

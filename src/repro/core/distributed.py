@@ -8,8 +8,16 @@ master is on the data path; the ring is a runtime *array* input with a
 fixed shape, so failure re-routes and elastic joins/leaves/reweights
 swap ring contents without recompiling — ``scale`` / ``add_shards`` /
 ``remove_shards`` / ``rebalance`` migrate slates and in-flight events
-loss-free at a drain barrier (DESIGN.md section 12); only growing the
-physical slot count recompiles.
+loss-free at a drain barrier (DESIGN.md section 12); only changing the
+physical slot count (grow, or compaction shrink) recompiles.
+
+Migration itself is tiered (DESIGN.md section 14): shape-preserving
+reconfigures re-home slate rows *on device* — ``exchange_rows`` packs
+each table's moving rows by their new ring owner and delivers them with
+one ``all_to_all``, the same collective the event path uses — while
+shape changes (physical grow, slot compaction) fall back to the host
+remap.  Both paths produce bitwise-identical slates (the PR-4 parity
+contract).
 
 Two-choice dispatch (Muppet 2.0 dual queues): for associative updaters,
 per-key load beyond ``two_choice_threshold`` in a tick spills to the
@@ -55,6 +63,17 @@ def _axis_size(axis_names) -> int:
     if hasattr(jax.lax, "axis_size"):
         return int(jax.lax.axis_size(axis_names))
     return int(jax.lax.psum(1, axis_names))
+
+
+def _linear_shard_index(axis_names):
+    """This shard's linearized id over the (possibly multi-) mesh axes —
+    the shard-dim index of the global state arrays, matching
+    ``np.prod``-order linearization (trailing axis fastest)."""
+    idx = None
+    for a in axis_names:
+        i = jax.lax.axis_index(a)
+        idx = i if idx is None else idx * _axis_size(a) + i
+    return idx
 
 
 def _salt(name: str) -> int:
@@ -109,6 +128,132 @@ def exchange(batch: EventBatch, dest, axis_names, cap_per_dest: int
     return received, dropped
 
 
+def exchange_rows(t: tbl.SlateTable, dest_salt: int, ring_hashes,
+                  ring_shards, axis_names, cap_per_dest: int, combine
+                  ) -> Tuple[tbl.SlateTable, jnp.ndarray]:
+    """Slate-row migration as one all_to_all (DESIGN.md section 14.1):
+    the table-row generalization of :func:`exchange`, run under
+    shard_map on every shard at a reconfigure boundary.
+
+    Each shard routes its rows through the *new* ring, packs movers
+    ``(key, value, ts, dirty)`` into per-destination buckets, trades
+    buckets with the collective, and rebuilds its table from stayers +
+    arrivals.  Duplicate keys converging on one shard (two-choice /
+    hot-split partials) fold via the updater's ``combine`` (else
+    last-ts-wins), exactly like the host rebuild: folded rows are
+    dirty, the fold is timestamp-monotone, and rows that do not fit
+    (bucket overflow, full table) are dropped and counted.  ``combine``
+    must be associative and — for bitwise parity with the host path's
+    first-encountered fold order — commutative, which every partial-
+    producing dispatch mode already requires.
+
+    ``cap_per_dest`` bounds rows moved per (src, dest) pair; the caller
+    sizes it from an exact on-device count (``_migrate_device``), so
+    nothing is lost in practice.  Returns ``(new_table, moved_out)``.
+    """
+    n = _axis_size(axis_names)
+    me = _linear_shard_index(axis_names)
+    C = t.capacity
+    valid = t.keys != tbl.EMPTY
+    owner = route(t.keys, dest_salt, ring_hashes, ring_shards)
+    mover = valid & (owner != me)
+    moved_out = jnp.sum(mover.astype(jnp.int32))
+
+    # pack movers into per-destination buckets (the exchange() layout)
+    dest = jnp.where(mover, owner, n)                   # stayers -> sink
+    order = jnp.argsort(dest, stable=True)
+    sdest = dest[order]
+    pos = jnp.arange(C, dtype=jnp.int32) - jnp.searchsorted(
+        sdest, sdest, side="left").astype(jnp.int32)
+    ok = (sdest < n) & (pos < cap_per_dest)
+    slot = jnp.where(ok, sdest * cap_per_dest + pos, n * cap_per_dest)
+    lost = jnp.sum(((sdest < n) & ~ok).astype(jnp.int32))
+
+    def bucket(src, fill):
+        buf = jnp.full((n * cap_per_dest,) + src.shape[1:], fill,
+                       src.dtype)
+        return buf.at[slot].set(src[order], mode="drop")
+
+    def a2a(x):
+        return jax.lax.all_to_all(
+            x.reshape((n, cap_per_dest) + x.shape[1:]), axis_names,
+            split_axis=0, concat_axis=0).reshape((n * cap_per_dest,)
+                                                 + x.shape[1:])
+
+    rvalid = a2a(jnp.zeros((n * cap_per_dest,), bool)
+                 .at[slot].set(ok, mode="drop"))
+    rkeys = a2a(bucket(t.keys, tbl.EMPTY))
+    rts = a2a(bucket(t.ts, 0))
+    rdirty = a2a(bucket(t.dirty, False))
+    rvals = jax.tree.map(lambda v: a2a(bucket(v, 0)), t.vals)
+
+    # candidates = stayers ∪ arrivals; sort valid-first, key-ascending
+    # (two stable passes — no 64-bit composite key needed) so duplicate
+    # keys are adjacent and segment folding is a single scan
+    stay = valid & (owner == me)
+    ckeys = jnp.concatenate([t.keys, rkeys])
+    cvalid = jnp.concatenate([stay, rvalid])
+    cts = jnp.concatenate([t.ts, rts])
+    cdirty = jnp.concatenate([t.dirty, rdirty])
+    cvals = jax.tree.map(lambda a, b: jnp.concatenate([a, b]),
+                         t.vals, rvals)
+    o1 = jnp.argsort(ckeys, stable=True)
+    o2 = jnp.argsort(jnp.where(cvalid[o1], 0, 1).astype(jnp.int32),
+                     stable=True)
+    order2 = o1[o2]
+    ks, vs = ckeys[order2], cvalid[order2]
+    ts_s, dt_s = cts[order2], cdirty[order2]
+    vals_s = jax.tree.map(lambda v: v[order2], cvals)
+
+    prev_same = jnp.concatenate(
+        [jnp.zeros((1,), bool), (ks[1:] == ks[:-1]) & vs[1:] & vs[:-1]])
+    seg_start = ~prev_same
+
+    def _b(mask, like):
+        return mask.reshape(mask.shape + (1,) * (like.ndim - 1))
+
+    def fold(a, b):
+        fa, va, ta, da = a
+        fb, vb, tb, db = b
+        if combine is not None:
+            merged = combine(va, vb)
+        else:
+            merged = jax.tree.map(
+                lambda x, y: jnp.where(_b(tb >= ta, x), y, x), va, vb)
+        v = jax.tree.map(lambda m, y: jnp.where(_b(fb, m), y, m),
+                         merged, vb)
+        return (fa | fb, v,
+                jnp.where(fb, tb, jnp.maximum(ta, tb)),
+                jnp.where(fb, db, jnp.ones_like(db)))
+
+    _, fvals, fts, fdirty = jax.lax.associative_scan(
+        fold, (seg_start, vals_s, ts_s, dt_s))
+
+    # one representative per key: the last row of its sorted run holds
+    # the full fold; singleton runs keep their original ts/dirty
+    rep = vs & ~jnp.concatenate([prev_same[1:], jnp.zeros((1,), bool)])
+
+    fresh = tbl.SlateTable(
+        keys=jnp.full((C,), tbl.EMPTY, jnp.int32),
+        ts=jnp.zeros((C,), jnp.int32),
+        dirty=jnp.zeros((C,), bool),
+        vals=jax.tree.map(jnp.zeros_like, t.vals),
+        dropped=t.dropped + lost)
+    fresh, slot2, _, placed = tbl.insert_or_find(fresh, ks, rep)
+    safe = jnp.where(placed, slot2, C)
+    new_vals = jax.tree.map(
+        lambda dst, src: dst.at[safe].set(src.astype(dst.dtype),
+                                          mode="drop"),
+        fresh.vals, fvals)
+    new = tbl.SlateTable(
+        keys=fresh.keys,
+        ts=fresh.ts.at[safe].set(fts, mode="drop"),
+        dirty=fresh.dirty.at[safe].set(fdirty, mode="drop"),
+        vals=new_vals,
+        dropped=fresh.dropped + jnp.sum((rep & ~placed).astype(jnp.int32)))
+    return new, moved_out
+
+
 @dataclass
 class AutoscalePolicy:
     """Declarative elasticity for ``DistributedEngine.run`` (DESIGN.md
@@ -133,7 +278,10 @@ class MigrationReport:
     drain_ticks: int             # barrier ticks run before migration
     moved_rows: Dict[str, int]   # slate rows re-homed, per updater
     moved_events: Dict[str, int]  # queued events re-homed, per operator
-    recompiled: bool             # physical grow (shape change) happened
+    recompiled: bool             # physical shape change (grow/compact)
+    pause_s: float = 0.0         # wall seconds the stream stood still
+    bytes_moved: int = 0         # payload re-homed (rows + events)
+    path: str = "host"           # "device" (all_to_all) or "host" remap
 
 
 @dataclass
@@ -149,6 +297,16 @@ class DistConfig(EngineConfig):
     # route); >0 opts in, and a LoadAutoscaler with skew > 0 implies 8.
     # Needs cfg.telemetry and no durability.  See split_keys.
     hot_key_capacity: int = 0
+    # migration tier selection (DESIGN.md 14.1).  "auto": reconfigures
+    # that keep physical shapes and whose drain barrier emptied the
+    # queues re-home slate rows on device (all_to_all row exchange);
+    # "off" forces the host remap everywhere (debug / parity baseline).
+    device_migration: str = "auto"
+    # physical slot compaction (DESIGN.md 14.2): when a deactivation
+    # leaves >= this fraction of slots dead, shrink the mesh to the
+    # active set and free the parked slots' HBM (shape change — the
+    # tick recompiles, like grow).  0 disables; compact() forces it.
+    compact_threshold: float = 0.75
 
 
 class DistributedEngine:
@@ -170,6 +328,8 @@ class DistributedEngine:
         self._step = None
         self._chunk = None
         self._empty_step = None
+        self._plan_fn = None       # device-migration owner-count jit
+        self._migrate_fns = {}     # cap_per_dest -> jitted row exchange
         self._load_mark = np.zeros(self.n_shards)  # rebalance window base
         self.tick_cursor = 0      # post-run() *source* cursor
         self.dur: Optional[EngineDurability] = None
@@ -627,9 +787,12 @@ class DistributedEngine:
         t = start_tick
         end = start_tick + n_ticks
         limit = pol.max_shards or len(jax.devices())
-        if len(self.axes) != 1:
-            # multi-axis meshes cannot grow physically (DESIGN.md 12)
-            limit = min(limit, self.n_shards)
+        lead = self._lead_axis_size()
+        if lead > 1:
+            # multi-axis meshes grow along their trailing axis, so the
+            # reachable ceiling is the largest multiple of the leading
+            # axes' product (never below the current physical size)
+            limit = max(self.n_shards, (limit // lead) * lead)
         while t < end:
             n = min(pol.window - (t - start_tick) % pol.window, end - t)
             state, outs = self._run_span(state, source_fn, n,
@@ -657,7 +820,11 @@ class DistributedEngine:
                                                 drain_max=pol.drain_max)
                 elif action.kind == "split":
                     state, rep = self.split_keys(state, action.keys)
-                self.telemetry.note_pause(time.perf_counter() - t0)
+                self.telemetry.note_pause(
+                    rep.pause_s if rep is not None
+                    else time.perf_counter() - t0,
+                    bytes_moved=rep.bytes_moved if rep is not None
+                    else 0)
                 self.telemetry.rebase(self, state)
                 if rep is not None and pol.on_change is not None:
                     pol.on_change(rep)
@@ -1050,36 +1217,49 @@ class DistributedEngine:
                 if v]
 
     def heat_owners(self, keys) -> np.ndarray:
-        """Ring owner per key for the engine's first updater — the
-        heavy-hitter -> arc attribution used by
-        :meth:`~repro.telemetry.LoadAutoscaler.heat_weights` (a
-        heuristic: multi-updater workflows route per destination, but
-        heavy hitters overwhelmingly mean counter-style updaters)."""
+        """Ring owner per key *per updater* — [n_updaters, K], one row
+        per updater salt, the heavy-hitter -> arc attribution used by
+        :meth:`~repro.telemetry.LoadAutoscaler.heat_weights`.  Routing
+        is salted by destination, so a key heavy for two updaters heats
+        two (generally different) shards; the sketch counts the key once
+        per subscribing updater's dequeue, and ``heat_weights`` splits a
+        hitter's estimated mass evenly across these rows."""
         ups = list(self.wf.updaters())
-        salt = _salt(ups[0].name) if ups else 0
-        return self.ring.owners(np.asarray(keys, np.int32), salt)
+        ks = np.asarray(keys, np.int32)
+        if not ups:
+            return np.zeros((1, len(ks)), np.int32)
+        return np.stack([self.ring.owners(ks, _salt(u.name))
+                         for u in ups])
 
     def _report(self, drain_ticks, moved_rows, moved_events, *,
-                recompiled: bool) -> MigrationReport:
+                recompiled: bool, pause_s: float = 0.0,
+                bytes_moved: int = 0, path: str = "host"
+                ) -> MigrationReport:
         return MigrationReport(
             n_shards=self.n_shards, active=self.active_shards,
             drain_ticks=drain_ticks, moved_rows=moved_rows,
-            moved_events=moved_events, recompiled=recompiled)
+            moved_events=moved_events, recompiled=recompiled,
+            pause_s=pause_s, bytes_moved=bytes_moved, path=path)
 
     def _reconfigure(self, state, *, grow_to: Optional[int] = None,
                      activate=(), deactivate=(), weights=None,
-                     drain_max: int = 64):
+                     drain_max: int = 64, force_compact: bool = False):
         """The migration kernel behind scale/remove/rebalance:
 
         1. drain-barrier the queues (and flush, with durability);
         2. swap in the new ring (membership / weights / physical size);
-        3. re-home slate rows, leftover queued events, and the per-shard
-           WAL/frontier set to the new owners (host-side remap +
-           ``device_put`` with the target sharding — the elastic-restore
-           move of ``distributed/checkpoint.py``);
+        3. re-home slate rows to their new owners — on device when the
+           physical shapes are unchanged and the barrier emptied the
+           queues (``exchange_rows`` under shard_map: no host round
+           trip), else the host remap + ``device_put`` fallback (the
+           elastic-restore move of ``distributed/checkpoint.py``),
+           which also re-homes any leftover queued events;
         4. resume on the swapped ring — recompilation only if the
-           physical slot count grew.
+           physical slot count changed (grow, or compaction shrink).
+
+        Both tiers yield bitwise-identical slates (DESIGN.md 14.3).
         """
+        t_start = time.perf_counter()
         state, drained = self._drain_queues(state, drain_max)
         if self.dur is not None:
             tick = int(np.asarray(jax.device_get(state["tick"])).max())
@@ -1093,7 +1273,6 @@ class DistributedEngine:
             meta = {"source_tick": max(int(prev),
                                        int(self.tick_cursor))}
             state, _ = self._flush_boundary(state, tick, meta=meta)
-        host = jax.device_get(state)
         old_n = self.n_shards
 
         grew = grow_to is not None and grow_to > old_n
@@ -1106,45 +1285,279 @@ class DistributedEngine:
         if weights is not None:
             self.ring.set_weights(weights)
 
-        if grew:
-            host = self._host_grow(host, old_n)
-        moved_rows = self._migrate_tables_host(host["tables"])
-        moved_events = self._migrate_queues_host(host["queues"])
+        compacting = False
+        if not grew:
+            n_active = len(self.active_shards)
+            dead_frac = 1.0 - n_active / self.n_shards
+            want = force_compact or (
+                self.cfg.compact_threshold > 0.0
+                and dead_frac >= self.cfg.compact_threshold)
+            if want and n_active < self.n_shards:
+                lead = self._lead_axis_size()
+                if n_active % lead == 0:
+                    compacting = True
+                elif force_compact:
+                    raise ValueError(
+                        f"cannot compact to {n_active} shards on a "
+                        f"multi-axis mesh: the active count must be a "
+                        f"multiple of the leading axes' product {lead}")
 
-        state = jax.tree.map(
-            jnp.asarray, host,
-            is_leaf=lambda x: isinstance(x, np.ndarray))
-        state = jax.device_put(state, self._shard_tree(state))
+        use_device = (not grew and not compacting
+                      and self.cfg.device_migration != "off"
+                      and self._queues_empty(state))
+        if use_device:
+            state, moved_rows, bytes_moved = self._migrate_device(state)
+            moved_events = {op.name: 0 for op in self.wf.operators}
+            # the host path rebuilds queues with peak restarted at the
+            # (empty) post-migration backlog; mirror that here so the
+            # rebalance load window measures fresh high-water marks
+            state = self._reset_queue_peaks(state)
+            path = "device"
+        else:
+            host = jax.device_get(state)
+            slot_map = None
+            if grew:
+                host = self._host_grow(host, old_n)
+            if compacting:
+                host, slot_map = self._compact_physical(host)
+            moved_rows = self._migrate_tables_host(host["tables"],
+                                                   slot_map=slot_map)
+            moved_events = self._migrate_queues_host(host["queues"],
+                                                     slot_map=slot_map)
+            bytes_moved = self._bytes_of(moved_rows, moved_events)
+            state = jax.tree.map(
+                jnp.asarray, host,
+                is_leaf=lambda x: isinstance(x, np.ndarray))
+            state = jax.device_put(state, self._shard_tree(state))
+            path = "host"
         if self.dur is not None:
             self.dur.resize(self.n_shards)
         # queue peak counters restarted at migration: rebase the
         # rebalance window on the post-migration load, or the next
         # window's delta would subtract peaks that no longer exist
+        jax.block_until_ready(state["tables"])
         self._rebase_load_window(state)
-        return state, self._report(drained, moved_rows, moved_events,
-                                   recompiled=grew)
+        return state, self._report(
+            drained, moved_rows, moved_events,
+            recompiled=grew or compacting,
+            pause_s=time.perf_counter() - t_start,
+            bytes_moved=bytes_moved, path=path)
+
+    def _queues_empty(self, state) -> bool:
+        sizes = jax.device_get({k: q.size
+                                for k, q in state["queues"].items()})
+        return all(int(np.asarray(v).sum()) == 0
+                   for v in sizes.values())
+
+    def _reset_queue_peaks(self, state):
+        state = dict(state)
+        state["queues"] = {
+            name: q_mod.QueueState(
+                buf=q.buf, head=q.head, size=q.size, dropped=q.dropped,
+                peak=jax.device_put(jnp.zeros_like(q.peak),
+                                    self._sharding))
+            for name, q in state["queues"].items()}
+        return state
+
+    def _lead_axis_size(self) -> int:
+        """Product of every mesh axis size except the trailing one —
+        the granularity physical grow/compact must respect."""
+        return int(np.prod([self.mesh.shape[a]
+                            for a in self.axes[:-1]], dtype=np.int64)) \
+            if len(self.axes) > 1 else 1
+
+    def _row_bytes(self, up) -> int:
+        n = 4 + 4 + 1                       # key + ts + dirty
+        for leaf in jax.tree.leaves(up.slate_spec(),
+                                    is_leaf=tbl._is_spec_leaf):
+            shp, dt = leaf
+            n += int(np.prod(shp, dtype=np.int64)) * np.dtype(dt).itemsize
+        return n
+
+    def _event_bytes(self, op) -> int:
+        n = 4 * 3 + 1                       # sid + ts + key + valid
+        for leaf in jax.tree.leaves(op.in_value_spec,
+                                    is_leaf=tbl._is_spec_leaf):
+            shp, dt = leaf
+            n += int(np.prod(shp, dtype=np.int64)) * np.dtype(dt).itemsize
+        return n
+
+    def _bytes_of(self, moved_rows, moved_events) -> int:
+        total = sum(moved_rows.get(up.name, 0) * self._row_bytes(up)
+                    for up in self.wf.updaters())
+        total += sum(moved_events.get(op.name, 0) * self._event_bytes(op)
+                     for op in self.wf.operators)
+        return total
+
+    def _migrate_device(self, state):
+        """The device migration tier (DESIGN.md 14.1): count movers per
+        (src, dest) with a tiny jitted plan, pick a pow2 bucket capacity
+        (bounding the jit cache), then run ``exchange_rows`` for every
+        updater table in one shard_map dispatch.  Slates never leave the
+        device.  Returns ``(state, moved_rows, bytes_moved)``."""
+        from jax.experimental.shard_map import shard_map
+        updaters = list(self.wf.updaters())
+        if not updaters:
+            return state, {}, 0
+        rh, rs = self.ring.table()
+        tables = state["tables"]
+        if self._plan_fn is None:
+            sharded, rep = P(self.axes), P()
+            specs = self._spec_like(tables)
+            n = self.n_shards
+
+            def plan_local(tb, rh_, rs_):
+                me = _linear_shard_index(self.axes)
+                out = {}
+                for up in updaters:
+                    t = jax.tree.map(lambda x: x[0], tb[up.name])
+                    owner = route(t.keys, _salt(up.name), rh_, rs_)
+                    mover = (t.keys != tbl.EMPTY) & (owner != me)
+                    cnt = jnp.zeros((n,), jnp.int32).at[
+                        jnp.where(mover, owner, n)].add(1, mode="drop")
+                    out[up.name] = cnt[None]
+                return out
+
+            def plan(tb, rh_, rs_):
+                return shard_map(plan_local, mesh=self.mesh,
+                                 in_specs=(specs, rep, rep),
+                                 out_specs=sharded,
+                                 check_rep=False)(tb, rh_, rs_)
+            self._plan_fn = jax.jit(plan)
+        counts = jax.device_get(self._plan_fn(tables, rh, rs))
+        moved = {name: int(np.asarray(c).sum())
+                 for name, c in counts.items()}
+        maxc = max((int(np.asarray(c).max()) for c in counts.values()),
+                   default=0)
+        bytes_moved = sum(moved[up.name] * self._row_bytes(up)
+                          for up in updaters)
+        if maxc == 0:
+            return state, moved, 0          # nobody moves: tables stand
+        cap = 8
+        while cap < maxc:
+            cap *= 2
+        fn = self._migrate_fns.get(cap)
+        if fn is None:
+            fn = self._make_migrate_fn(tables, updaters, cap)
+            self._migrate_fns[cap] = fn
+        state = dict(state)
+        state["tables"] = fn(tables, rh, rs)
+        return state, moved, bytes_moved
+
+    def _make_migrate_fn(self, tables, updaters, cap: int):
+        from jax.experimental.shard_map import shard_map
+        sharded, rep = P(self.axes), P()
+        specs = self._spec_like(tables)
+
+        def mig_local(tb, rh_, rs_):
+            out = {}
+            for up in updaters:
+                t = jax.tree.map(lambda x: x[0], tb[up.name])
+                nt, _ = exchange_rows(
+                    t, _salt(up.name), rh_, rs_, self.axes, cap,
+                    getattr(up, "combine", None))
+                out[up.name] = jax.tree.map(lambda x: x[None], nt)
+            return out
+
+        def run(tb, rh_, rs_):
+            return shard_map(mig_local, mesh=self.mesh,
+                             in_specs=(specs, rep, rep),
+                             out_specs=sharded,
+                             check_rep=False)(tb, rh_, rs_)
+        return jax.jit(run, donate_argnums=(0,))
+
+    def compact(self, state, *, drain_max: int = 64):
+        """Force physical slot compaction (DESIGN.md 14.2): shrink the
+        mesh/state to the current active shard set, freeing the parked
+        slots' HBM, regardless of ``compact_threshold``.  No-op when
+        every slot is active.  Returns ``(state, MigrationReport)``."""
+        if len(self.active_shards) == self.n_shards:
+            return state, self._report(0, {}, {}, recompiled=False,
+                                       path="none")
+        return self._reconfigure(state, drain_max=drain_max,
+                                 force_compact=True)
 
     def _grow_physical(self, new_n: int):
         """More shard slots: bigger mesh over more devices, bigger
-        state arrays — shapes change, jit caches reset."""
-        if len(self.axes) != 1:
-            raise NotImplementedError(
-                "live physical growth needs a single-axis mesh; "
-                "multi-axis meshes can only scale within their dead "
-                "slots (or re-shard offline via distributed/checkpoint)")
+        state arrays — shapes change, jit caches reset.  Multi-axis
+        meshes grow along their trailing axis (``('pod','data')`` keeps
+        the pod count and widens each pod), so ``new_n`` must be a
+        multiple of the leading axes' product."""
+        lead = self._lead_axis_size()
+        if new_n % lead:
+            raise ValueError(
+                f"multi-axis mesh {dict(self.mesh.shape)} grows along "
+                f"its trailing axis {self.axes[-1]!r}: target {new_n} "
+                f"must be a multiple of {lead}")
         devs = jax.devices()
         if len(devs) < new_n:
             raise ValueError(
                 f"scale to {new_n} shards needs {new_n} devices; only "
                 f"{len(devs)} visible")
-        self.mesh = Mesh(np.asarray(devs[:new_n]), self.axes)
+        shape = tuple(int(self.mesh.shape[a])
+                      for a in self.axes[:-1]) + (new_n // lead,)
+        self.mesh = Mesh(np.asarray(devs[:new_n]).reshape(shape),
+                         self.axes)
         self.n_shards = new_n
         self.ring.grow(new_n)
+        self._reset_for_new_shape()
+
+    def _reset_for_new_shape(self):
+        """Shared tail of grow/compact: rebind shardings and bucket
+        capacity to the new physical size, invalidate every jit."""
         self._sharding = NamedSharding(self.mesh, P(self.axes))
         self._replicated = NamedSharding(self.mesh, P())
-        cap = int(self.cfg.batch_size * self.cfg.exchange_slack / new_n)
+        cap = int(self.cfg.batch_size * self.cfg.exchange_slack
+                  / self.n_shards)
         self.cap_per_dest = max(8, cap)
         self._step = self._chunk = self._empty_step = None
+        self._plan_fn = None
+        self._migrate_fns = {}
+
+    def _compact_physical(self, host):
+        """Physical slot compaction (DESIGN.md 14.2): renumber the
+        active shards onto a smaller mesh — the inverse of
+        ``_host_grow``, and the move that actually frees parked HBM
+        (deactivation alone keeps the full-size arrays allocated).
+        The ring is rebuilt at the new size (weights carried).
+
+        Tables and queues are left at the *old* physical size here:
+        dead slots may still hold slate rows (deactivation re-homes
+        ownership, not residency, on the device path), so the host
+        migrators the caller runs next scan every old slice and rebuild
+        at the new shard count.  Only per-slot counters (tick, sketch,
+        processed, drop tallies) are sliced to the surviving slots —
+        dead slots' telemetry residue is forfeited, which the decaying
+        window metrics absorb.  Returns ``(host, slot_map)`` where
+        ``slot_map[d]`` is the old slot renumbered to new slot ``d``;
+        durability shrinks its WAL set via ``resize`` after the flush
+        barrier that preceded us."""
+        actives = self.active_shards
+        k, old_n = len(actives), self.n_shards
+        lead = self._lead_axis_size()
+        shape = tuple(int(self.mesh.shape[a])
+                      for a in self.axes[:-1]) + (k // lead,)
+        self.mesh = Mesh(np.asarray(jax.devices()[:k]).reshape(shape),
+                         self.axes)
+        self.n_shards = k
+        self.ring = HashRing(k, vnodes=self.ring.vnodes,
+                             weights=self.ring.weights[actives],
+                             seed=self.ring.seed)
+        self._reset_for_new_shape()
+        idx = np.asarray(actives, np.int64)
+
+        def sel(leaf):
+            if hasattr(leaf, "ndim") and leaf.ndim >= 1 \
+                    and leaf.shape[0] == old_n:
+                return np.asarray(leaf)[idx]
+            return leaf
+
+        out = {key: (val if key in ("tables", "queues")
+                     else jax.tree.map(sel, val))
+               for key, val in host.items()}
+        tick = int(np.asarray(host["tick"]).max())
+        out["tick"] = np.full((k,), tick, np.int32)
+        return out, [int(a) for a in actives]
 
     def _host_grow(self, host, old_n: int):
         """Pad every [old_n, ...] leaf to the new physical size: fresh
@@ -1171,7 +1584,8 @@ class DistributedEngine:
         out["tables"] = new_tables
         return out
 
-    def _migrate_tables_host(self, tables) -> Dict[str, int]:
+    def _migrate_tables_host(self, tables,
+                             slot_map=None) -> Dict[str, int]:
         """Re-home slate rows whose ring owner changed (host-side).
 
         Every shard's table is rebuilt from scratch rather than patched
@@ -1181,15 +1595,37 @@ class DistributedEngine:
         ``ts``/``dirty`` are preserved; same-key rows converging on one
         shard (two-choice partials) merge via the updater's combine
         (else last-ts-wins).  Rows a destination table cannot place are
-        dropped and counted — the paper's bounded-resource semantics."""
+        dropped and counted — the paper's bounded-resource semantics.
+
+        The input table's leading dim may exceed ``self.n_shards``
+        (slot compaction): all old slices are scanned, the rebuild is
+        stacked at the new count, and ``slot_map[d]`` names the old
+        slot whose ``dropped`` tally new slot ``d`` inherits."""
         moved: Dict[str, int] = {}
         n = self.n_shards
         for up in self.wf.updaters():
             t = tables[up.name]
             keys = np.array(t.keys)
+            smap = np.asarray(slot_map if slot_map is not None
+                              else range(n), np.int64)
+            old2new = np.full(keys.shape[0], -1, np.int64)
+            old2new[smap] = np.arange(n)
             sh, slot = np.nonzero(keys != -1)
             moved[up.name] = 0
+            drop = np.array(t.dropped)
             if len(sh) == 0:
+                if keys.shape[0] != n:
+                    out = []
+                    for d in range(n):
+                        loc = tbl.make_table(up.table_capacity,
+                                             up.slate_spec())
+                        out.append(jax.device_get(tbl.SlateTable(
+                            keys=loc.keys, ts=loc.ts, dirty=loc.dirty,
+                            vals=loc.vals,
+                            dropped=jnp.asarray(int(drop[smap[d]]),
+                                                jnp.int32))))
+                    tables[up.name] = jax.tree.map(
+                        lambda *xs: np.stack(xs), *out)
                 continue
             ts = np.asarray(t.ts)[sh, slot]
             dirty = np.asarray(t.dirty)[sh, slot]
@@ -1197,13 +1633,12 @@ class DistributedEngine:
                                 t.vals)
             rkeys = keys[sh, slot]
             owner = self.ring.owners(rkeys, _salt(up.name))
-            moved[up.name] = int((owner != sh).sum())
-            drop = np.array(t.dropped)
+            moved[up.name] = int((owner != old2new[sh]).sum())
             out = [None] * n
             for d in range(n):
                 pick = np.nonzero(owner == d)[0]
                 loc = self._build_local_table(
-                    up, int(drop[d]), rkeys[pick], ts[pick],
+                    up, int(drop[smap[d]]), rkeys[pick], ts[pick],
                     dirty[pick],
                     jax.tree.map(lambda v: v[pick], vals))
                 out[d] = jax.device_get(loc)
@@ -1265,12 +1700,17 @@ class DistributedEngine:
             vals=local.vals,
             dropped=jnp.asarray(dropped0 + drops, jnp.int32))
 
-    def _migrate_queues_host(self, queues) -> Dict[str, int]:
+    def _migrate_queues_host(self, queues,
+                             slot_map=None) -> Dict[str, int]:
         """Re-home in-flight queued events (anything the drain barrier
         could not retire) through the new ring, rebuilding each queue
         compacted at head 0.  ``dropped`` counters carry; ``peak``
         restarts at the post-migration backlog (it is the rebalance
-        window's load signal)."""
+        window's load signal).  Like the table migrator, the input may
+        have more slices than ``self.n_shards`` (compaction): every old
+        slice is scanned and the rebuild is stacked at the new count,
+        with ``slot_map`` naming the old slot each new ``dropped``
+        tally carries from."""
         moved: Dict[str, int] = {}
         n = self.n_shards
         for op in self.wf.operators:
@@ -1280,11 +1720,17 @@ class DistributedEngine:
             cap = q.buf.key.shape[1]
             moved[op.name] = 0
             total = int(sizes.sum())
+            smap = np.asarray(slot_map if slot_map is not None
+                              else range(n), np.int64)
+            old2new = np.full(len(sizes), -1, np.int64)
+            old2new[smap] = np.arange(n)
             new_sizes = np.zeros(n, np.int32)
-            new_drop = np.asarray(q.dropped).copy()
+            new_drop = np.asarray(q.dropped)[smap].copy()
             if total == 0:
                 queues[op.name] = q_mod.QueueState(
-                    buf=q.buf, head=np.zeros(n, np.int32),
+                    buf=jax.tree.map(lambda x: np.asarray(x)[smap],
+                                     q.buf),
+                    head=np.zeros(n, np.int32),
                     size=new_sizes, dropped=new_drop,
                     peak=np.zeros(n, np.int32))
                 continue
@@ -1292,7 +1738,7 @@ class DistributedEngine:
             leaves, treedef = jax.tree.flatten(
                 jax.tree.map(np.asarray, q.buf.value))
             ev_leaves: List[list] = [[] for _ in leaves]
-            for s in range(min(len(sizes), n)):
+            for s in range(len(sizes)):
                 idx = (heads[s] + np.arange(sizes[s])) % cap
                 ev["sid"].append(np.asarray(q.buf.sid)[s][idx])
                 ev["ts"].append(np.asarray(q.buf.ts)[s][idx])
@@ -1304,7 +1750,7 @@ class DistributedEngine:
             cat = {k: np.concatenate(v) for k, v in ev.items()}
             cat_leaves = [np.concatenate(v) for v in ev_leaves]
             dest = self.ring.owners(cat["key"], _salt(op.name))
-            moved[op.name] = int((dest != cat["src"]).sum())
+            moved[op.name] = int((dest != old2new[cat["src"]]).sum())
             # rebuild each destination queue: stayers + movers, FIFO
             buf_sid = np.zeros((n, cap), np.int32)
             buf_ts = np.zeros((n, cap), np.int32)

@@ -186,19 +186,26 @@ class EngineDurability:
         return list(off) if isinstance(off, (list, tuple)) else [off]
 
     def resize(self, n_shards: int):
-        """Live elasticity (DESIGN.md section 12): grow the per-shard
-        WAL set to the new physical shard count and re-record the
-        frontier with the extended offset list.  Called at a scale
-        boundary right after a flush barrier, so old shards' frontier
-        offsets are current and new shards start at their (empty) WAL
-        head.  Deactivated shards keep their WAL — it simply receives
-        nothing until the slot rejoins."""
+        """Live elasticity (DESIGN.md sections 12/14): match the
+        per-shard WAL set to the new physical shard count and re-record
+        the frontier with the adjusted offset list.  Called at a scale
+        boundary right after a flush barrier, so every shard's frontier
+        offset is current: growth appends WALs starting at their
+        (empty) head; a compaction shrink closes the WALs of the
+        dropped slots — sound only behind the barrier, which
+        guarantees those files hold no records past the frontier
+        (replay re-routes every event by key, so WAL-slot identity
+        never matters).  Deactivated-but-not-compacted shards keep
+        their WAL — it simply receives nothing until the slot
+        rejoins."""
         assert self.n_shards is not None, \
             "resize() is for per-shard durability (DistributedEngine)"
-        if n_shards < len(self.wals):
-            raise ValueError("durability cannot shrink below the "
-                             "physical shard count")
         offs = self.frontier_offsets()
+        if n_shards < len(self.wals):
+            for w in self.wals[n_shards:]:
+                w.close()
+            del self.wals[n_shards:]
+            offs = offs[:n_shards]
         for s in range(len(self.wals), n_shards):
             self.wals.append(WriteAheadLog(self.cfg.wal_path(s),
                                            sync=self.cfg.sync_wal))

@@ -143,6 +143,7 @@ class HashRing:
             [real_h, np.full(pad, _PAD_HASH, np.uint32)])
         self.ring_shards = np.concatenate(
             [real_s, real_s[np.arange(pad) % len(real_s)]])
+        self._table_cache = None    # device copy, rebuilt lazily
 
     # ---- host-side membership / weight changes (master broadcast) ----
     def fail(self, shard: int):
@@ -184,7 +185,14 @@ class HashRing:
         self._build()
 
     def table(self) -> Tuple[jnp.ndarray, jnp.ndarray]:
-        return (jnp.asarray(self.ring_hashes), jnp.asarray(self.ring_shards))
+        """Device copy of the ring arrays.  Cached until the next
+        ``_build`` — ``table()`` feeds every jitted tick *and* the
+        device migration owner lookup, so re-uploading two host arrays
+        per call would put a host->device transfer on the hot path."""
+        if self._table_cache is None:
+            self._table_cache = (jnp.asarray(self.ring_hashes),
+                                 jnp.asarray(self.ring_shards))
+        return self._table_cache
 
     def owners(self, keys: np.ndarray, dest_salt: int) -> np.ndarray:
         """Host-side routing (migration planning): shard id per key."""

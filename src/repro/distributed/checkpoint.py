@@ -10,10 +10,14 @@ Layout:  <dir>/step_<N>/
 - ``restore`` rebuilds the pytree and ``jax.device_put``s each leaf with
   the *target* sharding: restoring to a different mesh shape (elastic
   scale-up/down, failed-chip exclusion) is just a different sharding
-  argument.  The same host-rows -> target-sharding remap is the live
-  migration kernel of ``DistributedEngine._reconfigure`` (DESIGN.md
-  section 12), which applies it to slate tables and queues *mid-run*
-  instead of at restart.
+  argument.  The same host-rows -> target-sharding remap is the *host
+  tier* of the live migration kernel in
+  ``DistributedEngine._reconfigure`` (DESIGN.md sections 12/14), which
+  applies it to slate tables and queues *mid-run* whenever physical
+  shapes change (grow, slot compaction); shape-preserving reconfigures
+  skip the host round trip entirely and move rows with an on-device
+  ``all_to_all`` instead.  This module stays the offline / arbitrary-
+  reshape tier of that hierarchy.
 - ``latest_step`` only trusts committed checkpoints, so a crash mid-write
   rolls back to the previous step (restart-safety).
 """

@@ -55,6 +55,13 @@ class LoadAutoscaler:
     window: int = 8             # source ticks per decision window
     dwell: int = 2              # consecutive windows past a watermark
     cooldown: int = 2           # windows to sit out after any action
+    # adaptive cooldown: >0 stretches the post-action cooldown to at
+    # least pause_factor * (observed migration pause / window wall
+    # time) windows — a migration that stalls the stream for many
+    # windows' worth of time earns a proportionally longer sit-out,
+    # while the device-path's millisecond pauses keep the floor above.
+    # 0 keeps the fixed constant.
+    pause_factor: float = 0.0
     min_shards: int = 1
     max_shards: int = 0         # 0 = bounded by visible devices
     scale_factor: int = 2       # grow/shrink multiplier per action
@@ -69,9 +76,10 @@ class LoadAutoscaler:
     _cool: int = field(default=0, repr=False)
     _hi: int = field(default=0, repr=False)
     _lo: int = field(default=0, repr=False)
+    _next_cool: int = field(default=0, repr=False)
 
     def reset(self):
-        self._cool = self._hi = self._lo = 0
+        self._cool = self._hi = self._lo = self._next_cool = 0
 
     def decide(self, report: TelemetryReport, *, n_active: int,
                limit: int, can_split: bool = True,
@@ -88,6 +96,12 @@ class LoadAutoscaler:
         act = [s for s in report.active if s < report.pressure.shape[0]]
         p = report.pressure[act] if act else report.pressure
         mean = float(p.mean()) if p.size else 0.0
+        self._next_cool = self.cooldown
+        if (self.pause_factor > 0.0 and report.migration_pause_s > 0.0
+                and report.window_s > 0.0):
+            self._next_cool = max(self.cooldown, int(np.ceil(
+                self.pause_factor * report.migration_pause_s
+                / report.window_s)))
         # streaks accumulate even during cooldown — a persistent
         # condition should fire the moment the cooldown expires
         self._hi = self._hi + 1 if mean > self.high else 0
@@ -133,7 +147,7 @@ class LoadAutoscaler:
         return None
 
     def _fire(self, action: Action) -> Action:
-        self._cool = self.cooldown
+        self._cool = self._next_cool or self.cooldown
         self._hi = self._lo = 0
         return action
 
@@ -143,15 +157,20 @@ class LoadAutoscaler:
         heat shed arcs; the share attributable to a single heavy hitter
         is subtracted first (moving that key's arc merely relocates the
         hotspot — ``split`` is its remedy, not reweighting).  ``owners``
-        maps candidate keys to their shard (``engine.heat_owners``)."""
+        maps candidate keys to their shard(s): [K] for a single owner
+        arc, or [n_updaters, K] (``engine.heat_owners``) when routing
+        is salted per destination updater — the sketch counted each key
+        once per subscribing updater's dequeue, so a hitter's mass is
+        split evenly across its per-updater rows."""
         heat = np.asarray(report.events, np.float64).copy()
         if owners is not None and report.heavy_hitters:
             keys = np.asarray([k for k, _, _ in report.heavy_hitters],
                               np.int32)
-            own = np.asarray(owners(keys))
-            for (key, est, _), s in zip(report.heavy_hitters, own):
-                if 0 <= s < heat.shape[0]:
-                    heat[s] = max(0.0, heat[s] - est)
+            own = np.atleast_2d(np.asarray(owners(keys)))
+            for row in own:
+                for (key, est, _), s in zip(report.heavy_hitters, row):
+                    if 0 <= s < heat.shape[0]:
+                        heat[s] = max(0.0, heat[s] - est / own.shape[0])
         act = [s for s in report.active if s < heat.shape[0]]
         mean = float(heat[act].mean()) if act else 0.0
         if mean <= 0.0:

@@ -17,6 +17,7 @@ count-min sketch, attaches heavy-hitter estimates.
 from __future__ import annotations
 
 import dataclasses
+import time
 from dataclasses import dataclass
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
@@ -68,6 +69,9 @@ class TelemetryReport:
     pressure: np.ndarray          # EMA normalized load (see `observe_raw`)
     heavy_hitters: List[Tuple[int, int, float]]  # (key, est, share)
     migration_pause_s: float      # EMA of reconfigure pause seconds
+    # trailing fields default so older constructors stay valid
+    window_s: float = 0.0         # wall seconds since the last observe
+    migration_bytes_moved: float = 0.0  # EMA of bytes per reconfigure
 
     def to_dict(self) -> Dict[str, Any]:
         """JSON-safe form (the HTTP status surface)."""
@@ -96,6 +100,8 @@ class MetricsRegistry:
         self._ema_ev: Optional[np.ndarray] = None
         self._ema_pressure: Optional[np.ndarray] = None
         self._pause_ema = 0.0
+        self._bytes_ema = 0.0
+        self._obs_t: Optional[float] = None
 
     # ---- engine-agnostic core ---------------------------------------
     def observe_raw(self, *, tick: int, events: np.ndarray,
@@ -146,13 +152,18 @@ class MetricsRegistry:
               for k, est in heavy]
         self._mark = {"tick": tick, "events": events, "peak": queue_peak,
                       "dropped": dropped}
+        now = time.perf_counter()
+        window_s = (now - self._obs_t) if self._obs_t is not None else 0.0
+        self._obs_t = now
         self.last = TelemetryReport(
             tick=tick, ticks=dt, n_shards=n, active=list(active),
             events=ev_d, events_per_tick=self._ema_ev.copy(),
             queue_depth=queue_depth, queue_peak_delta=peak_d,
             dropped_delta=drop_d, occupancy=occupancy,
             pressure=self._ema_pressure.copy(), heavy_hitters=hh,
-            migration_pause_s=self._pause_ema)
+            migration_pause_s=self._pause_ema,
+            window_s=window_s,
+            migration_bytes_moved=self._bytes_ema)
         return self.last
 
     # ---- stream-engine adapter --------------------------------------
@@ -239,7 +250,12 @@ class MetricsRegistry:
         self._mark = {"tick": tick, "events": events, "peak": qpeak,
                       "dropped": dropped}
 
-    def note_pause(self, seconds: float):
-        """Record a reconfigure pause (EMA; surfaced on the report)."""
+    def note_pause(self, seconds: float, bytes_moved: int = 0):
+        """Record a reconfigure pause and the payload it re-homed
+        (EMAs; surfaced on the report — the controller sizes its
+        cooldown from the pause, relative to the observed wall-clock
+        window, instead of a fixed constant)."""
         a = self.cfg.alpha
         self._pause_ema = a * float(seconds) + (1 - a) * self._pause_ema
+        self._bytes_ema = a * float(bytes_moved) \
+            + (1 - a) * self._bytes_ema

@@ -149,6 +149,67 @@ def test_migration_kernel_preserves_slates_bitwise():
             np.float32(after[k]["sum"]).tobytes()   # bitwise
 
 
+def test_host_grow_pads_only_shard_leaves():
+    """_host_grow pads exactly the [old_n, ...] leaves: a non-shard
+    leaf keeps its shape, the new slot's table starts empty, its queue
+    starts drained, and the tick carries over."""
+    from jax.sharding import Mesh
+    from repro.core.distributed import DistConfig, DistributedEngine
+    from repro.core.workflow import Workflow
+    from tests.conftest import CountingUpdater
+
+    class U(CountingUpdater):
+        subscribes = ("S1",)
+
+    mesh = Mesh(np.asarray(jax.devices()[:1]), ("data",))
+    wf = Workflow([U()], external_streams=("S1",))
+    eng = DistributedEngine(wf, mesh, DistConfig(batch_size=16,
+                                                 queue_capacity=64))
+    state = eng.init_state()
+    host = jax.device_get(state)
+    host["aux"] = np.arange(15).reshape(3, 5)    # non-shard leaf
+    eng.n_shards = 2                             # pad target (test rig)
+    try:
+        out = eng._host_grow(host, 1)
+    finally:
+        eng.n_shards = 1
+    assert out["aux"].shape == (3, 5)            # untouched
+    assert out["tick"].shape == (2,)
+    assert int(out["tick"][1]) == int(np.asarray(host["tick"])[0])
+    t = out["tables"]["U1"]
+    assert t.keys.shape[0] == 2 and (t.keys[1] == -1).all()
+    q = out["queues"]["U1"]
+    assert q.size.shape == (2,) and int(q.size[1]) == 0
+
+
+def test_durability_resize_shrink_closes_extra_wals(tmp_path):
+    """Compaction's WAL shrink: resize down closes the dropped slots'
+    logs and truncates the frontier offset list; resize back up appends
+    fresh WALs at their (empty) head."""
+    from repro.core.durability import DurabilityConfig, EngineDurability
+    from repro.core.workflow import Workflow
+    from repro.slates.flush import FlushConfig, FlushPolicy
+    from tests.conftest import CountingUpdater
+
+    class U(CountingUpdater):
+        subscribes = ("S1",)
+
+    wf = Workflow([U()], external_streams=("S1",))
+    cfg = DurabilityConfig(dir=str(tmp_path),
+                           flush=FlushConfig(policy=FlushPolicy.EVERY_K,
+                                             every_k=4))
+    dur = EngineDurability(cfg, wf, queue_capacity=64, batch_size=16,
+                           n_shards=4)
+    assert len(dur.wals) == 4
+    dur.record_frontier(0)
+    dur.resize(2)
+    assert len(dur.wals) == 2
+    assert len(dur.frontier_offsets()) == 2
+    dur.resize(4)
+    assert len(dur.wals) == 4 and len(dur.frontier_offsets()) == 4
+    dur.close()
+
+
 # ---------------------------------------------------------------------------
 # multi-shard elasticity (subprocess; slow)
 # ---------------------------------------------------------------------------
@@ -240,6 +301,239 @@ def test_scale_2to4_parity_fast():
         print('FAST-PARITY-OK')
     """, devices=4)
     assert "FAST-PARITY-OK" in out
+
+
+def test_device_migration_parity_fast():
+    """The device tier (DESIGN.md 14.1): shape-preserving reconfigures
+    move rows with on-device all_to_all and must match the host remap
+    bitwise; reports carry the measured pause and payload, and
+    heat_owners maps keys per updater salt."""
+    out = run_sub("""
+        class C2(Counter):
+            name = 'U2'
+        def run(mode, reconf):
+            mesh = Mesh(np.array(jax.devices()[:4]), ('data',))
+            wf = Workflow([Counter(), C2()], external_streams=('S1',))
+            eng = DistributedEngine(wf, mesh, DistConfig(
+                batch_size=32, queue_capacity=256, fused='off',
+                device_migration=mode))
+            state = eng.init_state()
+            rng = np.random.default_rng(3)
+            reps = []
+            for t in range(6):
+                keys = rng.integers(0, 48, 32).astype(np.int32)
+                xs = rng.integers(0, 99, 32).astype(np.float32)
+                if reconf and t == 2:
+                    state, rep = eng.remove_shards(state, [3])
+                    reps.append(rep)
+                if reconf and t == 4:
+                    state, rep = eng.scale(state, 4)    # rejoin
+                    reps.append(rep)
+                state, _ = eng.step(state, {'S1': gb(keys, xs, t, 4)})
+            state, _ = eng.drain(state)
+            return slates(eng, state, 48), reps, eng
+        ref, _, _ = run('off', False)
+        dev, dreps, eng = run('auto', True)
+        host, hreps, _ = run('off', True)
+        assert [r.path for r in dreps] == ['device', 'device'], dreps
+        assert [r.path for r in hreps] == ['host', 'host']
+        assert not any(r.recompiled for r in dreps)
+        assert dev == ref and host == ref, (dev, host, ref)
+        assert all(r.pause_s > 0 for r in dreps + hreps)
+        assert sum(r.bytes_moved for r in dreps) > 0
+        assert sum(dreps[0].moved_rows.values()) > 0
+        # per-updater salted owner rows: [n_updaters, K], rows differ
+        own = eng.heat_owners(np.arange(256, dtype=np.int32))
+        assert own.shape == (2, 256)
+        assert (own[0] != own[1]).any()
+        print('DEVICE-PARITY-OK')
+    """, devices=4)
+    assert "DEVICE-PARITY-OK" in out
+
+
+def test_grow_compact_grow_roundtrip_fast():
+    """Physical grow -> auto-compaction -> grow again round-trips with
+    exact counts and actually frees the parked slots' table HBM."""
+    out = run_sub("""
+        def tbytes(state):
+            return sum(v.nbytes for v in jax.tree.leaves(state['tables']))
+        mesh = Mesh(np.array(jax.devices()[:2]), ('data',))
+        wf = Workflow([Counter()], external_streams=('S1',))
+        eng = DistributedEngine(wf, mesh, DistConfig(
+            batch_size=32, queue_capacity=256, fused='off',
+            compact_threshold=0.5))
+        state = eng.init_state()
+        rng = np.random.default_rng(11)
+        truth = np.zeros(48, np.int64)
+        for t in range(9):
+            keys = rng.integers(0, 48, 32).astype(np.int32)
+            xs = np.ones(32, np.float32)
+            for k in keys: truth[k] += 1
+            if t == 2:
+                state, rep = eng.scale(state, 4)        # physical grow
+                assert rep.recompiled and eng.n_shards == 4
+            if t == 5:
+                big = tbytes(state)
+                state, rep = eng.remove_shards(state, [2, 3])
+                assert rep.recompiled and rep.path == 'host'
+                assert eng.n_shards == 2                # auto-compacted
+                assert tbytes(state) < big
+            if t == 7:
+                state, rep = eng.scale(state, 4)        # grow again
+                assert rep.recompiled and eng.n_shards == 4
+            state, _ = eng.step(state, {'S1': gb(keys, xs, t,
+                                                 eng.n_shards)})
+        state, _ = eng.drain(state)
+        got = np.array([c for c, _ in slates(eng, state, 48)])
+        assert (got == truth).all(), (got - truth)
+        assert eng.stats(state)['exchange_dropped'] == 0
+        print('ROUNDTRIP-OK')
+    """, devices=4)
+    assert "ROUNDTRIP-OK" in out
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("fused", ["jnp", "interpret"])
+def test_device_path_scale_8to16_bitwise_parity(fused):
+    """Acceptance bar for the device tier: on a pre-provisioned 16-slot
+    mesh, activating 8 -> 16 moves rows via all_to_all (no recompile)
+    with bitwise slate parity against both a never-scaled run and the
+    host remap."""
+    out = run_sub("""
+        FUSED = %r
+        def run(scale_to=None, mode='auto'):
+            mesh = Mesh(np.array(jax.devices()[:16]), ('data',))
+            wf = Workflow([Counter()], external_streams=('S1',))
+            eng = DistributedEngine(wf, mesh, DistConfig(
+                batch_size=64, queue_capacity=512, fused=FUSED,
+                device_migration=mode, compact_threshold=0.0))
+            state = eng.init_state()
+            state, rep0 = eng.remove_shards(state, range(8, 16))
+            assert not rep0.recompiled
+            rng = np.random.default_rng(7)
+            rep = None
+            for t in range(12):
+                keys = rng.integers(0, 96, 128).astype(np.int32)
+                xs = rng.integers(0, 99, 128).astype(np.float32)
+                if scale_to and t == 6:
+                    state, rep = eng.scale(state, scale_to)
+                    assert not rep.recompiled       # content-only swap
+                state, _ = eng.step(state, {'S1': gb(keys, xs, t, 16)})
+            state, _ = eng.drain(state)
+            return slates(eng, state, 96), rep, eng, state
+        a, _, _, _ = run()
+        b, rep, eng, state = run(16)
+        assert rep.path == 'device', rep
+        assert rep.pause_s > 0 and rep.bytes_moved > 0
+        assert sum(rep.moved_rows.values()) > 0
+        for (ca, sa), (cb, sb) in zip(a, b):
+            assert ca == cb
+            assert np.float32(sa).tobytes() == np.float32(sb).tobytes()
+        c, hrep, _, _ = run(16, mode='off')
+        assert hrep.path == 'host' and b == c
+        assert eng.stats(state)['exchange_dropped'] == 0
+        rows16 = [int(jax.device_get(
+            (state['tables']['U1'].keys[i] != -1).sum()))
+            for i in range(16)]
+        assert sum(1 for r in rows16[8:] if r > 0) >= 4, rows16
+        print('DEVICE-8TO16-OK')
+    """ % fused, devices=16)
+    assert "DEVICE-8TO16-OK" in out
+
+
+@pytest.mark.slow
+def test_compaction_durable_recovery():
+    """Compaction under durability: the WAL set shrinks with the mesh,
+    counts stay exact through compact + continued feeding, and a crash
+    after compaction recovers on the compacted layout."""
+    out = run_sub("""
+        import tempfile
+        from repro.core.durability import DurabilityConfig
+        from repro.slates.flush import FlushConfig, FlushPolicy
+        def tbytes(state):
+            return sum(v.nbytes for v in jax.tree.leaves(state['tables']))
+        with tempfile.TemporaryDirectory() as d:
+            def make(n):
+                return DistributedEngine(
+                    Workflow([Counter()], external_streams=('S1',)),
+                    Mesh(np.array(jax.devices()[:n]), ('data',)),
+                    DistConfig(batch_size=32, queue_capacity=256,
+                               fused='off',
+                               durability=DurabilityConfig(
+                                   dir=d, flush=FlushConfig(
+                                       policy=FlushPolicy.EVERY_K,
+                                       every_k=2))))
+            eng = make(8)
+            state = eng.init_state()
+            truth = np.zeros(64, np.int64)
+            def src(t, _mx):
+                r = np.random.default_rng(100 + t)
+                ks = r.integers(0, 64, 64).astype(np.int32)
+                for k in ks: truth[k] += 1
+                return {'S1': gb(ks, np.ones(64, np.float32), t,
+                                 eng.n_shards)}
+            state, _ = eng.run(state, src, 6)
+            b0 = tbytes(state)
+            state, rep = eng.remove_shards(state, list(range(2, 8)))
+            assert eng.n_shards == 2 and rep.recompiled
+            assert rep.path == 'host' and rep.bytes_moved > 0
+            assert len(eng.dur.wals) == 2           # WAL set compacted
+            assert tbytes(state) < b0 / 3           # HBM actually freed
+            state, _ = eng.drain(state)
+            got = np.array([c for c, _ in slates(eng, state, 64)])
+            assert (got == truth).all(), (got - truth)
+            state, _ = eng.run(state, src, 2)       # keep feeding at 2
+            state, _ = eng.drain(state)
+            got = np.array([c for c, _ in slates(eng, state, 64)])
+            assert (got == truth).all(), (got - truth)
+            del state                               # crash
+            eng2 = make(2)
+            rec = eng2.recover()
+            rec, _ = eng2.drain(rec)
+            got2 = np.array([c for c, _ in slates(eng2, rec, 64)])
+            assert (got2 == truth).all(), (got2 - truth)
+            eng.close(); eng2.close()
+        print('COMPACT-DURABLE-OK')
+    """)
+    assert "COMPACT-DURABLE-OK" in out
+
+
+@pytest.mark.slow
+def test_multiaxis_pod_data_growth():
+    """Multi-axis growth: a ('pod','data') mesh scales 4 -> 8 along its
+    trailing axis with exact counts; a target that is not a multiple of
+    the leading axes' product is rejected."""
+    out = run_sub("""
+        mesh = Mesh(np.array(jax.devices()[:4]).reshape(2, 2),
+                    ('pod', 'data'))
+        eng = DistributedEngine(
+            Workflow([Counter()], external_streams=('S1',)), mesh,
+            DistConfig(batch_size=32, queue_capacity=256, fused='off',
+                       axis_names=('pod', 'data')))
+        state = eng.init_state()
+        rng = np.random.default_rng(9)
+        truth = np.zeros(48, np.int64)
+        for t in range(8):
+            keys = rng.integers(0, 48, 32).astype(np.int32)
+            xs = np.ones(32, np.float32)
+            for k in keys: truth[k] += 1
+            if t == 4:
+                state, rep = eng.scale(state, 8)
+                assert rep.recompiled and eng.n_shards == 8
+                assert tuple(eng.mesh.devices.shape) == (2, 4)
+            state, _ = eng.step(state, {'S1': gb(keys, xs, t,
+                                                 eng.n_shards)})
+        state, _ = eng.drain(state)
+        got = np.array([c for c, _ in slates(eng, state, 48)])
+        assert (got == truth).all(), (got - truth)
+        try:
+            eng._grow_physical(9)
+            raise SystemExit('expected ValueError')
+        except ValueError as e:
+            assert 'multiple' in str(e), e
+        print('MULTIAXIS-OK')
+    """)
+    assert "MULTIAXIS-OK" in out
 
 
 @pytest.mark.slow

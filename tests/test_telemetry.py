@@ -250,6 +250,76 @@ def test_controller_rebalance_on_imbalance():
     assert a is not None and a.kind == "rebalance", a
 
 
+def test_controller_pause_sized_cooldown():
+    """pause_factor stretches the post-action cooldown to cover the
+    observed migration pause, measured in window wall-time units — a
+    host-path migration that stalls the stream for 5 windows' worth of
+    time earns a ~10-window sit-out at factor 2, while the device
+    path's millisecond pauses keep the configured floor."""
+    ctl = LoadAutoscaler(high=0.75, dwell=1, cooldown=1,
+                         pause_factor=2.0)
+    rep = _rep([1.0] * 2)
+    rep.migration_pause_s = 5.0
+    rep.window_s = 1.0
+    a = ctl.decide(rep, n_active=2, limit=16)
+    assert a is not None and a.kind == "scale"
+    # ceil(2 * 5s / 1s) = 10 silent windows despite cooldown=1
+    for _ in range(10):
+        assert ctl.decide(rep, n_active=4, limit=16) is None
+    a2 = ctl.decide(rep, n_active=4, limit=16)
+    assert a2 is not None and a2.target == 8
+    # a millisecond (device-path) pause keeps the configured floor
+    ctl2 = LoadAutoscaler(high=0.75, dwell=1, cooldown=1,
+                          pause_factor=2.0)
+    rep2 = _rep([1.0] * 2)
+    rep2.migration_pause_s = 0.001
+    rep2.window_s = 1.0
+    assert ctl2.decide(rep2, n_active=2, limit=16) is not None
+    assert ctl2.decide(rep2, n_active=4, limit=16) is None
+    assert ctl2.decide(rep2, n_active=4, limit=16) is not None
+
+
+def test_registry_window_wall_clock_and_bytes_ema():
+    """note_pause carries bytes alongside seconds, and observe_raw
+    stamps the wall-clock span between readings (the denominator the
+    controller sizes its pause cooldown with)."""
+    import time as _time
+    from repro.telemetry.metrics import MetricsRegistry
+    reg = MetricsRegistry(TelemetryConfig(alpha=1.0), batch_size=32)
+    kw = dict(queue_depth=[0.0], queue_peak=[0.0], dropped=[0.0],
+              occupancy=[0.0], active=[0])
+    rep0 = reg.observe_raw(tick=0, events=[0.0], **kw)
+    assert rep0.window_s == 0.0              # no previous reading
+    reg.note_pause(1.5, bytes_moved=4096)
+    _time.sleep(0.02)
+    rep1 = reg.observe_raw(tick=4, events=[64.0], **kw)
+    assert rep1.window_s >= 0.02
+    assert rep1.migration_pause_s == pytest.approx(1.5)
+    assert rep1.migration_bytes_moved == pytest.approx(4096.0)
+    assert rep1.to_dict()["migration_bytes_moved"] == \
+        pytest.approx(4096.0)
+
+
+def test_heat_weights_multi_updater_owner_rows():
+    """heat_owners-shaped [n_updaters, K] owner maps: the sketch
+    counted a hitter once per subscribing updater's dequeue, so its
+    mass splits evenly across rows — two rows pinning key 7 to shard 0
+    must discount exactly est, not 2*est."""
+    ctl = LoadAutoscaler(skew=0.5)
+    rep = _rep([1.0, 1.0])
+    rep.events = np.array([132.0, 32.0])
+    rep.heavy_hitters = [(7, 100, 0.6)]
+    w = ctl.heat_weights(
+        rep, owners=lambda ks: np.zeros((2, len(ks)), int))
+    assert abs(w[0] - w[1]) < 0.02, w        # 132 - 2*(100/2) == 32
+    # one row behaves exactly like the 1-D map
+    w1 = ctl.heat_weights(
+        rep, owners=lambda ks: np.zeros((1, len(ks)), int))
+    w1d = ctl.heat_weights(
+        rep, owners=lambda ks: np.zeros(len(ks), int))
+    assert np.allclose(w1, w1d)
+
+
 # ---------------------------------------------------------------------------
 # front door (tier-1, single device)
 # ---------------------------------------------------------------------------
