@@ -41,7 +41,8 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
-GUARDED = ("latency_per_tick", "tick_dispatch_chunked32")
+GUARDED = ("latency_per_tick", "tick_dispatch_chunked32",
+           "slate_read_qps")
 ANCHOR = "guard_calibration"
 ROOT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..")
 
@@ -74,6 +75,7 @@ def measure():
     bench.ROWS.clear()
     bench.bench_latency()
     bench.bench_chunked_vs_pertick()
+    bench.bench_slate_read()
     bench.bench_guard_calibration()
     out = {n: u for n, u, _ in bench.ROWS}
     bench.ROWS.clear()

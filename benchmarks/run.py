@@ -275,6 +275,64 @@ def bench_hotspot_key_splitting():
 
 
 # ----------------------------------------------------------------------
+# high-QPS slate reads (DESIGN.md section 15): one batched device
+# dispatch for a [Q] key vector vs Q looped host reads, plus the
+# telemetry-admitted hot-key cache hit path
+# ----------------------------------------------------------------------
+
+def bench_slate_read():
+    from repro.core.engine import StateHandle
+    from repro.slates.replica import HotKeyCache
+
+    eng, state = counting_engine(batch_size=2048, queue_capacity=8192,
+                                 vec=True)
+    rng = np.random.default_rng(10)
+    for t in range(8):
+        state, _ = eng.step(state, {"S1": zipf_batch(rng, 2048, tick=t)})
+    jax.block_until_ready(state["tick"])
+
+    Q = 1024
+    keys = [int(k) for k in np.asarray(zipf_batch(rng, Q).key)]
+    # the read mix the write path produced: Zipf-hot keys mostly
+    # present, tail keys often missing
+
+    def looped():
+        for k in keys:
+            eng.read_slate(state, "U1", k)
+
+    us_loop = _time(looped, n=3, warmup=1)
+    row("slate_read_looped_1024", us_loop,
+        f"{Q} read_slate calls: one lookup dispatch + host sync each")
+
+    def batched():
+        eng.read_slates(state, "U1", keys)
+
+    us_b = _time(batched, n=20)
+    row("slate_read_qps", us_b,
+        f"{Q/(us_b/1e6):.2e} reads/s: one fused lookup dispatch for "
+        f"Q={Q}; {us_loop/us_b:.0f}x vs looped (target >= 10x); Pallas "
+        f"kernel engages on TPU")
+
+    lats = []
+    for _ in range(50):
+        t0 = time.perf_counter()
+        batched()
+        lats.append(time.perf_counter() - t0)
+    row("slate_read_p99", float(np.percentile(lats, 99)) * 1e6,
+        f"p99 over 50 batched Q={Q} reads "
+        f"(median {float(np.median(lats))*1e6:.0f}us)")
+
+    cache = HotKeyCache(capacity=256, ttl_s=60.0)
+    cache.warm(keys[:16])
+    h = StateHandle(eng, state, cache=cache)
+    h.read_slate("U1", keys[0])          # admit + populate
+    us_hit = _time_min(lambda: h.read_slate("U1", keys[0]), n=30)
+    row("slate_read_cache_hit", us_hit,
+        f"HotKeyCache hit: no device touch "
+        f"({us_b/Q/us_hit:.1f}x vs amortized batched read)")
+
+
+# ----------------------------------------------------------------------
 # slate store: compression + read/write (paper: 2B slates, compressed)
 # ----------------------------------------------------------------------
 
@@ -798,6 +856,7 @@ def main() -> None:
     bench_fused_mapper_chain()
     bench_latency()
     bench_hotspot_key_splitting()
+    bench_slate_read()
     bench_slate_store()
     bench_failover()
     bench_elasticity()

@@ -50,6 +50,31 @@ class CounterUpdater(AssociativeUpdater):
                 "sum": s["sum"] + d["sum"]}
 
 
+class VecCounterUpdater(AssociativeUpdater):
+    """Single [8]-vector slate leaf — the packed layout the Pallas
+    point-lookup kernel accepts, so batched slate reads engage the
+    kernel on TPU (jnp gather elsewhere; BENCH slate_read_*)."""
+    name = "U1"
+    subscribes = ("S2",)
+    in_value_spec = VSPEC
+    out_streams = {}
+    table_capacity = 1 << 16
+    sum_mergeable = True
+
+    def slate_spec(self):
+        return {"v": ((8,), jnp.float32)}
+
+    def lift(self, batch):
+        return {"v": jnp.broadcast_to(batch.value["x"][:, None],
+                                      (batch.key.shape[0], 8))}
+
+    def combine(self, a, b):
+        return {"v": a["v"] + b["v"]}
+
+    def merge(self, s, d):
+        return {"v": s["v"] + d["v"]}
+
+
 class SequentialCounter(SequentialUpdater):
     """Order-sensitive variant (EWMA) — exercises the padded-run path."""
     name = "U1"
@@ -68,8 +93,10 @@ class SequentialCounter(SequentialUpdater):
 
 
 def counting_engine(batch_size=2048, queue_capacity=8192,
-                    sequential=False, fused="auto", telemetry=None):
-    upd = SequentialCounter() if sequential else CounterUpdater()
+                    sequential=False, fused="auto", telemetry=None,
+                    vec=False):
+    upd = (SequentialCounter() if sequential else
+           VecCounterUpdater() if vec else CounterUpdater())
     wf = Workflow([SourceMapper(), upd], external_streams=("S1",))
     eng = Engine(wf, EngineConfig(batch_size=batch_size,
                                   queue_capacity=queue_capacity,

@@ -27,6 +27,7 @@ bound the paper proves acceptable in production.
 """
 from __future__ import annotations
 
+import threading
 import time
 from collections import deque
 from dataclasses import dataclass, field, replace
@@ -254,6 +255,88 @@ def exchange_rows(t: tbl.SlateTable, dest_salt: int, ring_hashes,
     return new, moved_out
 
 
+def exchange_queue(q: q_mod.QueueState, dest_salt: int, ring_hashes,
+                   ring_shards, axis_names, cap_per_dest: int
+                   ) -> Tuple[q_mod.QueueState, jnp.ndarray]:
+    """Queued-event re-homing as one all_to_all: the queue counterpart
+    of :func:`exchange_rows`, so a planned leave with backlog
+    (``drain_max=0``, or a drain barrier that could not retire the
+    queues) stays on the device migration path instead of falling back
+    to the host remap.
+
+    Mirrors ``_migrate_queues_host`` exactly: every in-``size`` slot is
+    scanned in dequeue order, routed by its key's *primary* owner on
+    the new ring (validity flags ride along as payload, like the host
+    scan), and each destination rebuilds its queue compacted at head 0
+    in (source shard asc, dequeue order) — the host path's
+    shard-ascending concat.  ``dropped`` carries plus any overflow
+    (bucket or destination-capacity); ``peak`` restarts at the
+    post-migration backlog, the rebalance window's load signal.
+    Returns ``(new_queue, moved_out)``.
+    """
+    n = _axis_size(axis_names)
+    me = _linear_shard_index(axis_names)
+    buf = q.buf
+    C = buf.capacity
+    pos = (q.head + jnp.arange(C, dtype=jnp.int32)) % C
+    live = jnp.arange(C, dtype=jnp.int32) < q.size
+    sid, ts, key = buf.sid[pos], buf.ts[pos], buf.key[pos]
+    vflag = buf.valid[pos]
+    vals = jax.tree.map(lambda v: v[pos], buf.value)
+    owner = route(key, dest_salt, ring_hashes, ring_shards)
+    moved_out = jnp.sum((live & (owner != me)).astype(jnp.int32))
+
+    # all live events (stayers included) go through the buckets so the
+    # rebuild's arrival order is purely (src, dequeue) — host parity
+    dest = jnp.where(live, owner, n)                    # dead -> sink
+    order = jnp.argsort(dest, stable=True)
+    sdest = dest[order]
+    bpos = jnp.arange(C, dtype=jnp.int32) - jnp.searchsorted(
+        sdest, sdest, side="left").astype(jnp.int32)
+    ok = (sdest < n) & (bpos < cap_per_dest)
+    slot = jnp.where(ok, sdest * cap_per_dest + bpos, n * cap_per_dest)
+    lost = jnp.sum(((sdest < n) & ~ok).astype(jnp.int32))
+
+    def bucket(src, fill):
+        b = jnp.full((n * cap_per_dest,) + src.shape[1:], fill,
+                     src.dtype)
+        return b.at[slot].set(src[order], mode="drop")
+
+    def a2a(x):
+        return jax.lax.all_to_all(
+            x.reshape((n, cap_per_dest) + x.shape[1:]), axis_names,
+            split_axis=0, concat_axis=0).reshape((n * cap_per_dest,)
+                                                 + x.shape[1:])
+
+    rlive = a2a(jnp.zeros((n * cap_per_dest,), bool)
+                .at[slot].set(ok, mode="drop"))
+    rsid, rts, rkey = a2a(bucket(sid, 0)), a2a(bucket(ts, 0)), \
+        a2a(bucket(key, 0))
+    rvflag = a2a(bucket(vflag, False))
+    rvals = jax.tree.map(lambda v: a2a(bucket(v, 0)), vals)
+
+    # compact arrivals at head 0; received layout is already src-major
+    # with dequeue order within each source, so rank order == the host
+    # rebuild's FIFO order
+    rank = jnp.cumsum(rlive.astype(jnp.int32)) - 1
+    fits = rlive & (rank < C)
+    size = jnp.sum(fits.astype(jnp.int32))
+    tgt = jnp.where(fits, rank, C)
+
+    def scat(src, fill):
+        b = jnp.full((C,) + src.shape[1:], fill, src.dtype)
+        return b.at[tgt].set(src, mode="drop")
+
+    nbuf = EventBatch(
+        sid=scat(rsid, 0), ts=scat(rts, 0), key=scat(rkey, 0),
+        value=jax.tree.map(lambda v: scat(v, 0), rvals),
+        valid=scat(rvflag, False))
+    drops = lost + jnp.sum((rlive & ~fits).astype(jnp.int32))
+    return q_mod.QueueState(
+        buf=nbuf, head=jnp.zeros_like(q.head), size=size,
+        dropped=q.dropped + drops, peak=size), moved_out
+
+
 @dataclass
 class AutoscalePolicy:
     """Declarative elasticity for ``DistributedEngine.run`` (DESIGN.md
@@ -298,9 +381,10 @@ class DistConfig(EngineConfig):
     # Needs cfg.telemetry and no durability.  See split_keys.
     hot_key_capacity: int = 0
     # migration tier selection (DESIGN.md 14.1).  "auto": reconfigures
-    # that keep physical shapes and whose drain barrier emptied the
-    # queues re-home slate rows on device (all_to_all row exchange);
-    # "off" forces the host remap everywhere (debug / parity baseline).
+    # that keep physical shapes re-home slate rows AND any queued
+    # backlog on device (all_to_all row + event exchange — a drained
+    # queue set is no longer required); "off" forces the host remap
+    # everywhere (debug / parity baseline).
     device_migration: str = "auto"
     # physical slot compaction (DESIGN.md 14.2): when a deactivation
     # leaves >= this fraction of slots dead, shrink the mesh to the
@@ -329,7 +413,16 @@ class DistributedEngine:
         self._chunk = None
         self._empty_step = None
         self._plan_fn = None       # device-migration owner-count jit
-        self._migrate_fns = {}     # cap_per_dest -> jitted row exchange
+        self._migrate_fns = {}     # (row_cap, ev_cap) -> jitted exchange
+        self._read_fns = {}        # (updater, with_sec) -> batched read
+        # serializes slate readers against in-flight reconfigures and
+        # the donating step dispatches: a read racing either would see a
+        # half-swapped ring or donated (deleted) buffers.  RLock so
+        # read_split_slate can hold it across its sub-key loop while
+        # read_slate re-acquires.  Drivers that publish a StateHandle
+        # republish it *inside* the critical section (_live_handle).
+        self.read_lock = threading.RLock()
+        self._live_handle = None
         self._load_mark = np.zeros(self.n_shards)  # rebalance window base
         self.tick_cursor = 0      # post-run() *source* cursor
         self.dur: Optional[EngineDurability] = None
@@ -739,6 +832,7 @@ class DistributedEngine:
         reconfigure drain ticks — WAL records are keyed by the engine
         tick, the frontier meta records the source cursor."""
         pol = self.cfg.autoscale
+        self._live_handle = handle
         if pol is None:
             return self._run_span(state, source_fn, n_ticks,
                                   start_tick=start_tick, handle=handle)
@@ -844,6 +938,7 @@ class DistributedEngine:
         consecutive indices, even across mid-run reconfigures."""
         outputs = []
         src_t = start_tick
+        self._live_handle = handle
         eng_tick = int(np.asarray(jax.device_get(state["tick"])).max()) \
             if self.dur is not None else 0
         # without a closed-loop controller (which observes at its own
@@ -857,22 +952,30 @@ class DistributedEngine:
             srcs = source_fn(src_t, None)
             if self.dur is not None:
                 self.append_sources(eng_tick, srcs)
-            state, outs = self.step(state, srcs)
-            outputs.append(outs)
-            src_t += 1
-            eng_tick += 1
-            if self.dur is not None and self.dur.due(eng_tick,
-                                                     state["tables"]):
-                state, eng_tick = self._flush_boundary(
-                    state, eng_tick, meta={"source_tick": src_t})
-            if observe and src_t - obs_mark >= self.tele_cfg.window:
-                self.telemetry.observe(self, state)
-                state = dict(state)
-                state["sketch"] = sk_mod.decay(state["sketch"],
-                                               self.tele_cfg.decay)
-                obs_mark = src_t
-            if handle is not None:
-                handle.state = state
+            # step donates (deletes) the buffers a handle reader may be
+            # holding: lock from dispatch until the fresh state is
+            # republished
+            with self.read_lock:
+                state, outs = self.step(state, srcs)
+                outputs.append(outs)
+                src_t += 1
+                eng_tick += 1
+                if self.dur is not None and self.dur.due(
+                        eng_tick, state["tables"]):
+                    state, eng_tick = self._flush_boundary(
+                        state, eng_tick, meta={"source_tick": src_t})
+                    if handle is not None:
+                        handle.on_frontier_advance()
+                if observe and src_t - obs_mark >= self.tele_cfg.window:
+                    report = self.telemetry.observe(self, state)
+                    if handle is not None:
+                        handle.on_telemetry(report)
+                    state = dict(state)
+                    state["sketch"] = sk_mod.decay(state["sketch"],
+                                                   self.tele_cfg.decay)
+                    obs_mark = src_t
+                if handle is not None:
+                    handle.state = state
         self.tick_cursor = src_t
         return state, outputs
 
@@ -1258,7 +1361,28 @@ class DistributedEngine:
            physical slot count changed (grow, or compaction shrink).
 
         Both tiers yield bitwise-identical slates (DESIGN.md 14.3).
+
+        Runs under ``read_lock``: concurrent slate readers must observe
+        either the pre-migration state (old ring, rows in place) or the
+        post-migration state — never a half-swapped ring over mid-
+        exchange rows, and never the deleted buffers the drain steps
+        donate.  The live :class:`StateHandle` (when a driver published
+        one) is re-pointed at the migrated state *before* the lock is
+        released, so a reader waking on the lock can never see a handle
+        still bound to pre-migration (freed) state.
         """
+        with self.read_lock:
+            state, report = self._reconfigure_impl(
+                state, grow_to=grow_to, activate=activate,
+                deactivate=deactivate, weights=weights,
+                drain_max=drain_max, force_compact=force_compact)
+            if self._live_handle is not None:
+                self._live_handle.state = state
+        return state, report
+
+    def _reconfigure_impl(self, state, *, grow_to=None, activate=(),
+                          deactivate=(), weights=None, drain_max=64,
+                          force_compact=False):
         t_start = time.perf_counter()
         state, drained = self._drain_queues(state, drain_max)
         if self.dur is not None:
@@ -1303,15 +1427,14 @@ class DistributedEngine:
                         f"multiple of the leading axes' product {lead}")
 
         use_device = (not grew and not compacting
-                      and self.cfg.device_migration != "off"
-                      and self._queues_empty(state))
+                      and self.cfg.device_migration != "off")
         if use_device:
-            state, moved_rows, bytes_moved = self._migrate_device(state)
-            moved_events = {op.name: 0 for op in self.wf.operators}
-            # the host path rebuilds queues with peak restarted at the
-            # (empty) post-migration backlog; mirror that here so the
-            # rebalance load window measures fresh high-water marks
-            state = self._reset_queue_peaks(state)
+            # a non-empty backlog (planned leave with drain_max=0, or a
+            # barrier that could not retire the queues) stays on this
+            # path too: exchange_queue re-homes queued events with the
+            # same all_to_all and rebases peaks at the new backlog
+            state, moved_rows, moved_events, bytes_moved = \
+                self._migrate_device(state)
             path = "device"
         else:
             host = jax.device_get(state)
@@ -1350,11 +1473,14 @@ class DistributedEngine:
                    for v in sizes.values())
 
     def _reset_queue_peaks(self, state):
+        """Rebase every queue's high-water mark at its current backlog
+        (the host migrator's ``peak=new_sizes``) so the next rebalance
+        window measures post-migration load only."""
         state = dict(state)
         state["queues"] = {
             name: q_mod.QueueState(
                 buf=q.buf, head=q.head, size=q.size, dropped=q.dropped,
-                peak=jax.device_put(jnp.zeros_like(q.peak),
+                peak=jax.device_put(jnp.copy(q.size),
                                     self._sharding))
             for name, q in state["queues"].items()}
         return state
@@ -1390,81 +1516,134 @@ class DistributedEngine:
         return total
 
     def _migrate_device(self, state):
-        """The device migration tier (DESIGN.md 14.1): count movers per
-        (src, dest) with a tiny jitted plan, pick a pow2 bucket capacity
-        (bounding the jit cache), then run ``exchange_rows`` for every
-        updater table in one shard_map dispatch.  Slates never leave the
-        device.  Returns ``(state, moved_rows, bytes_moved)``."""
+        """The device migration tier (DESIGN.md 14.1): count row movers
+        AND queued-event movers per (src, dest) with a tiny jitted
+        plan, pick pow2 bucket capacities (bounding the jit cache),
+        then run ``exchange_rows`` for every updater table and
+        ``exchange_queue`` for every backlogged operator queue in one
+        shard_map dispatch.  Slates and events never leave the device.
+        Returns ``(state, moved_rows, moved_events, bytes_moved)``."""
         from jax.experimental.shard_map import shard_map
         updaters = list(self.wf.updaters())
-        if not updaters:
-            return state, {}, 0
         rh, rs = self.ring.table()
-        tables = state["tables"]
+        tables, queues = state["tables"], state["queues"]
         if self._plan_fn is None:
             sharded, rep = P(self.axes), P()
-            specs = self._spec_like(tables)
+            specs = (self._spec_like(tables), self._spec_like(queues))
             n = self.n_shards
+            operators = list(self.wf.operators)
 
-            def plan_local(tb, rh_, rs_):
+            def plan_local(tb, qs, rh_, rs_):
                 me = _linear_shard_index(self.axes)
-                out = {}
+                rows = {}
                 for up in updaters:
                     t = jax.tree.map(lambda x: x[0], tb[up.name])
                     owner = route(t.keys, _salt(up.name), rh_, rs_)
                     mover = (t.keys != tbl.EMPTY) & (owner != me)
-                    cnt = jnp.zeros((n,), jnp.int32).at[
-                        jnp.where(mover, owner, n)].add(1, mode="drop")
-                    out[up.name] = cnt[None]
-                return out
+                    rows[up.name] = jnp.zeros((n,), jnp.int32).at[
+                        jnp.where(mover, owner, n)].add(
+                            1, mode="drop")[None]
+                evs = {}
+                for op in operators:
+                    q = jax.tree.map(lambda x: x[0], qs[op.name])
+                    C = q.buf.capacity
+                    pos = (q.head
+                           + jnp.arange(C, dtype=jnp.int32)) % C
+                    live = jnp.arange(C, dtype=jnp.int32) < q.size
+                    owner = route(q.buf.key[pos], _salt(op.name),
+                                  rh_, rs_)
+                    # count *all* live events per dest (stayers too):
+                    # exchange_queue routes everything through the
+                    # buckets, so the cap must cover to-self traffic
+                    evs[op.name] = jnp.zeros((n,), jnp.int32).at[
+                        jnp.where(live, owner, n)].add(
+                            1, mode="drop")[None]
+                return {"rows": rows, "events": evs}
 
-            def plan(tb, rh_, rs_):
+            def plan(tb, qs, rh_, rs_):
                 return shard_map(plan_local, mesh=self.mesh,
-                                 in_specs=(specs, rep, rep),
+                                 in_specs=specs + (rep, rep),
                                  out_specs=sharded,
-                                 check_rep=False)(tb, rh_, rs_)
+                                 check_rep=False)(tb, qs, rh_, rs_)
             self._plan_fn = jax.jit(plan)
-        counts = jax.device_get(self._plan_fn(tables, rh, rs))
+        plan = jax.device_get(self._plan_fn(tables, queues, rh, rs))
         moved = {name: int(np.asarray(c).sum())
-                 for name, c in counts.items()}
-        maxc = max((int(np.asarray(c).max()) for c in counts.values()),
-                   default=0)
-        bytes_moved = sum(moved[up.name] * self._row_bytes(up)
-                          for up in updaters)
-        if maxc == 0:
-            return state, moved, 0          # nobody moves: tables stand
-        cap = 8
-        while cap < maxc:
-            cap *= 2
-        fn = self._migrate_fns.get(cap)
-        if fn is None:
-            fn = self._make_migrate_fn(tables, updaters, cap)
-            self._migrate_fns[cap] = fn
-        state = dict(state)
-        state["tables"] = fn(tables, rh, rs)
-        return state, moved, bytes_moved
+                 for name, c in plan["rows"].items()}
+        # event movers exclude the diagonal (stayers route to-self)
+        moved_ev = {name: int(np.asarray(c).sum()
+                              - np.trace(np.asarray(c)))
+                    for name, c in plan["events"].items()}
+        maxc = max((int(np.asarray(c).max())
+                    for c in plan["rows"].values()), default=0)
+        ev_maxc = max((int(np.asarray(c).max())
+                       for c in plan["events"].values()), default=0)
+        bytes_moved = self._bytes_of(moved, moved_ev)
+        if maxc == 0 and sum(moved_ev.values()) == 0:
+            # nothing re-homes: tables and queues stand (the caller
+            # rebases queue peaks at the standing backlog)
+            return self._reset_queue_peaks(state), moved, moved_ev, 0
 
-    def _make_migrate_fn(self, tables, updaters, cap: int):
+        def pow2(c):
+            cap = 8
+            while cap < c:
+                cap *= 2
+            return cap
+        cap_rows = pow2(maxc) if maxc else 0
+        cap_ev = pow2(ev_maxc) if ev_maxc else 0
+        fn = self._migrate_fns.get((cap_rows, cap_ev))
+        if fn is None:
+            fn = self._make_migrate_fn(tables, updaters,
+                                       cap_rows, cap_ev)
+            self._migrate_fns[(cap_rows, cap_ev)] = fn
+        state = dict(state)
+        state["tables"], qs = fn(tables, queues, rh, rs)
+        # peak is rebased to the backlog (= size) inside the jit, so
+        # the two leaves come back aliased to one buffer — copy so the
+        # next donating step dispatch doesn't donate it twice
+        state["queues"] = {
+            name: q_mod.QueueState(buf=q.buf, head=q.head, size=q.size,
+                                   dropped=q.dropped,
+                                   peak=jnp.copy(q.peak))
+            for name, q in qs.items()}
+        return state, moved, moved_ev, bytes_moved
+
+    def _make_migrate_fn(self, tables, updaters, cap_rows: int,
+                         cap_ev: int):
         from jax.experimental.shard_map import shard_map
         sharded, rep = P(self.axes), P()
         specs = self._spec_like(tables)
+        operators = list(self.wf.operators)
 
-        def mig_local(tb, rh_, rs_):
-            out = {}
+        def mig_local(tb, qs, rh_, rs_):
+            out_t = {}
             for up in updaters:
                 t = jax.tree.map(lambda x: x[0], tb[up.name])
-                nt, _ = exchange_rows(
-                    t, _salt(up.name), rh_, rs_, self.axes, cap,
-                    getattr(up, "combine", None))
-                out[up.name] = jax.tree.map(lambda x: x[None], nt)
-            return out
+                if cap_rows:
+                    t, _ = exchange_rows(
+                        t, _salt(up.name), rh_, rs_, self.axes,
+                        cap_rows, getattr(up, "combine", None))
+                out_t[up.name] = jax.tree.map(lambda x: x[None], t)
+            out_q = {}
+            for op in operators:
+                q = jax.tree.map(lambda x: x[0], qs[op.name])
+                if cap_ev:
+                    q, _ = exchange_queue(q, _salt(op.name), rh_, rs_,
+                                          self.axes, cap_ev)
+                else:   # no backlog anywhere: rebase peak in place
+                    q = q_mod.QueueState(buf=q.buf, head=q.head,
+                                         size=q.size,
+                                         dropped=q.dropped,
+                                         peak=q.size)
+                out_q[op.name] = jax.tree.map(lambda x: x[None], q)
+            return out_t, out_q
 
-        def run(tb, rh_, rs_):
+        def run(tb, qs, rh_, rs_):
+            qspecs = self._spec_like(qs)
             return shard_map(mig_local, mesh=self.mesh,
-                             in_specs=(specs, rep, rep),
-                             out_specs=sharded,
-                             check_rep=False)(tb, rh_, rs_)
-        return jax.jit(run, donate_argnums=(0,))
+                             in_specs=(specs, qspecs, rep, rep),
+                             out_specs=(sharded, sharded),
+                             check_rep=False)(tb, qs, rh_, rs_)
+        return jax.jit(run, donate_argnums=(0, 1))
 
     def compact(self, state, *, drain_max: int = 64):
         """Force physical slot compaction (DESIGN.md 14.2): shrink the
@@ -1513,6 +1692,7 @@ class DistributedEngine:
         self._step = self._chunk = self._empty_step = None
         self._plan_fn = None
         self._migrate_fns = {}
+        self._read_fns = {}
 
     def _compact_physical(self, host):
         """Physical slot compaction (DESIGN.md 14.2): renumber the
@@ -1525,13 +1705,16 @@ class DistributedEngine:
         dead slots may still hold slate rows (deactivation re-homes
         ownership, not residency, on the device path), so the host
         migrators the caller runs next scan every old slice and rebuild
-        at the new shard count.  Only per-slot counters (tick, sketch,
-        processed, drop tallies) are sliced to the surviving slots —
-        dead slots' telemetry residue is forfeited, which the decaying
-        window metrics absorb.  Returns ``(host, slot_map)`` where
-        ``slot_map[d]`` is the old slot renumbered to new slot ``d``;
-        durability shrinks its WAL set via ``resize`` after the flush
-        barrier that preceded us."""
+        at the new shard count.  Per-slot *lifetime* counters — the
+        count-min sketch's counts/total/sample_n, ``processed``,
+        ``exchange_dropped``, ``throttle_hits``, and the table/queue
+        ``dropped`` tallies — are folded from the dead slots into the
+        first survivor before slicing, so ``TelemetryReport`` lifetime
+        counts stay exact across a compaction (the sketch key-sample
+        ring is positional, not a counter: it is sliced, not summed).
+        Returns ``(host, slot_map)`` where ``slot_map[d]`` is the old
+        slot renumbered to new slot ``d``; durability shrinks its WAL
+        set via ``resize`` after the flush barrier that preceded us."""
         actives = self.active_shards
         k, old_n = len(actives), self.n_shards
         lead = self._lead_axis_size()
@@ -1545,6 +1728,8 @@ class DistributedEngine:
                              seed=self.ring.seed)
         self._reset_for_new_shape()
         idx = np.asarray(actives, np.int64)
+        dead = np.asarray(sorted(set(range(old_n)) - set(
+            int(a) for a in actives)), np.int64)
 
         def sel(leaf):
             if hasattr(leaf, "ndim") and leaf.ndim >= 1 \
@@ -1552,9 +1737,46 @@ class DistributedEngine:
                 return np.asarray(leaf)[idx]
             return leaf
 
-        out = {key: (val if key in ("tables", "queues")
-                     else jax.tree.map(sel, val))
-               for key, val in host.items()}
+        def fold(leaf):
+            """Dead slots' tallies accumulate into survivor 0, then
+            slice — lifetime sums are invariant under compaction."""
+            a = np.asarray(leaf).copy()
+            if dead.size and a.ndim >= 1 and a.shape[0] == old_n:
+                a[idx[0]] += a[dead].sum(axis=0).astype(a.dtype)
+            return a[idx] if a.ndim >= 1 and a.shape[0] == old_n \
+                else leaf
+
+        counters = {"exchange_dropped", "throttle_hits", "processed"}
+        out = {}
+        for key, val in host.items():
+            if key in ("tables", "queues"):
+                out[key] = val
+            elif key in counters:
+                out[key] = jax.tree.map(fold, val)
+            elif key == "sketch":
+                out[key] = {nm: (fold(lf) if nm != "sample" else
+                                 sel(lf))
+                            for nm, lf in val.items()}
+            else:
+                out[key] = jax.tree.map(sel, val)
+        # table/queue drop tallies stay at the old size for the host
+        # migrators, which inherit ``dropped[slot_map[d]]`` — park the
+        # dead slots' counts on the first survivor so they carry
+        if dead.size:
+            for name, t in host["tables"].items():
+                drop = np.asarray(t.dropped).copy()
+                drop[idx[0]] += drop[dead].sum(axis=0).astype(drop.dtype)
+                drop[dead] = 0
+                out["tables"][name] = tbl.SlateTable(
+                    keys=t.keys, ts=t.ts, dirty=t.dirty, vals=t.vals,
+                    dropped=drop)
+            for name, q in host["queues"].items():
+                drop = np.asarray(q.dropped).copy()
+                drop[idx[0]] += drop[dead].sum(axis=0).astype(drop.dtype)
+                drop[dead] = 0
+                out["queues"][name] = q_mod.QueueState(
+                    buf=q.buf, head=q.head, size=q.size, dropped=drop,
+                    peak=q.peak)
         tick = int(np.asarray(host["tick"]).max())
         out["tick"] = np.full((k,), tick, np.int32)
         return out, [int(a) for a in actives]
@@ -1797,23 +2019,27 @@ class DistributedEngine:
     def read_slate(self, state, updater: str, key: int, *, merge=None):
         """Read a slate by key; with two-choice enabled — or the key in
         the live hot-key split set — merges the (<=2) partial
-        aggregates (primary + secondary shard)."""
-        rh, rs = self.ring.table()
-        karr = jnp.asarray([key], jnp.int32)
-        shards = [int(route(karr, _salt(updater), rh, rs)[0])]
-        is_hot = bool(np.any(self._hot_valid
-                             & (self._hot_keys == np.int32(key))))
-        if self.cfg.two_choice_threshold or is_hot:
-            shards.append(int(route_secondary(karr, _salt(updater),
-                                              rh, rs)[0]))
-        vals = []
-        t = state["tables"][updater]
-        for s in dict.fromkeys(shards):
-            local = jax.tree.map(lambda x: x[s], t)
-            slot, found = tbl.lookup(local, karr)
-            if bool(found[0]):
-                vals.append(jax.tree.map(
-                    lambda v: jax.device_get(v[int(slot[0])]), local.vals))
+        aggregates (primary + secondary shard).  Holds ``read_lock`` so
+        the ring/table pair is a consistent pre- or post-migration
+        snapshot."""
+        with self.read_lock:
+            rh, rs = self.ring.table()
+            karr = jnp.asarray([key], jnp.int32)
+            shards = [int(route(karr, _salt(updater), rh, rs)[0])]
+            is_hot = bool(np.any(self._hot_valid
+                                 & (self._hot_keys == np.int32(key))))
+            if self.cfg.two_choice_threshold or is_hot:
+                shards.append(int(route_secondary(karr, _salt(updater),
+                                                  rh, rs)[0]))
+            vals = []
+            t = state["tables"][updater]
+            for s in dict.fromkeys(shards):
+                local = jax.tree.map(lambda x: x[s], t)
+                slot, found = tbl.lookup(local, karr)
+                if bool(found[0]):
+                    vals.append(jax.tree.map(
+                        lambda v: jax.device_get(v[int(slot[0])]),
+                        local.vals))
         if not vals:
             return None
         if len(vals) == 1:
@@ -1825,4 +2051,103 @@ class DistributedEngine:
         for v in vals[1:]:
             out = combine(jax.tree.map(np.asarray, out),
                           jax.tree.map(np.asarray, v))
+        return out
+
+    def _make_read_fn(self, tables, updater: str, with_sec: bool,
+                      impl: str):
+        """Compile the batched distributed read (DESIGN.md 15): every
+        shard runs the device lookup over its local table for the whole
+        [Q] key vector, masks its rows to the keys it owns in each ring
+        role, and a ``psum`` across shards acts as the select (at most
+        one shard contributes per (key, role)).  Returns replicated
+        ``(prim_found, prim_rows[, sec_found, sec_rows])``."""
+        from jax.experimental.shard_map import shard_map
+        from repro.kernels.slate_lookup import ops as lk_ops
+        rep = P()
+        tspec = self._spec_like(tables)
+        salt = _salt(updater)
+        two = bool(self.cfg.two_choice_threshold)
+        axes = self.axes
+
+        def local(tb, karr, rh_, rs_, hk_, hv_):
+            me = _linear_shard_index(axes)
+            t = jax.tree.map(lambda x: x[0], tb)
+            found, rows = lk_ops.lookup_tree(t.keys, t.vals, karr,
+                                             impl=impl)
+
+            def role(owner):
+                mine = found & (owner == me)
+
+                def pick(v):
+                    m = mine.reshape(mine.shape + (1,) * (v.ndim - 1))
+                    c = jnp.where(m, v, jnp.zeros_like(v))
+                    if c.dtype == jnp.bool_:
+                        return jax.lax.psum(
+                            c.astype(jnp.int32), axes).astype(bool)
+                    return jax.lax.psum(c, axes)
+
+                return (jax.lax.psum(mine.astype(jnp.int32), axes),
+                        jax.tree.map(pick, rows))
+
+            prim = route(karr, salt, rh_, rs_)
+            pf, pr = role(prim)
+            if not with_sec:
+                return pf, pr
+            sec = route_secondary(karr, salt, rh_, rs_)
+            is_hot = jnp.any((karr[:, None] == hk_[None, :])
+                             & hv_[None, :], axis=1)
+            use_sec = (jnp.bool_(two) | is_hot) & (sec != prim)
+            sf, sr = role(jnp.where(use_sec, sec, jnp.int32(-1)))
+            return pf, pr, sf, sr
+
+        def run(tb, karr, rh_, rs_, hk_, hv_):
+            outs = (rep, rep, rep, rep) if with_sec else (rep, rep)
+            fn = shard_map(local, mesh=self.mesh,
+                           in_specs=(tspec, rep, rep, rep, rep, rep),
+                           out_specs=outs, check_rep=False)
+            return fn(tb, karr, rh_, rs_, hk_, hv_)
+
+        return jax.jit(run)
+
+    def read_slates(self, state, updater: str, keys, *,
+                    impl: str = "auto"):
+        """Batched point reads through the ring: one sharded device
+        dispatch + one host sync for a [Q] key vector, bitwise identical
+        to Q ``read_slate`` calls (two-choice / hot-split partials merge
+        primary-then-secondary via the updater's combine).  Returns a
+        list aligned with ``keys`` (``None`` for missing)."""
+        keys_np = np.asarray(keys, np.int32).reshape(-1)
+        if keys_np.size == 0:
+            return []
+        with self.read_lock:
+            with_sec = (bool(self.cfg.two_choice_threshold)
+                        or bool(self._hot_valid.any()))
+            cache_key = (updater, with_sec, impl)
+            fn = self._read_fns.get(cache_key)
+            if fn is None:
+                fn = self._make_read_fn(state["tables"][updater],
+                                        updater, with_sec, impl)
+                self._read_fns[cache_key] = fn
+            rh, rs = self.ring.table()
+            hk, hv = self._hot_table()
+            res = jax.device_get(fn(state["tables"][updater],
+                                    jnp.asarray(keys_np), rh, rs, hk, hv))
+        if with_sec:
+            pf, pr, sf, sr = res
+        else:
+            (pf, pr), sf, sr = res, np.zeros_like(np.asarray(res[0])), None
+        pf, sf = np.asarray(pf), np.asarray(sf)
+        op = self.wf.by_name[updater]
+        combine = getattr(op, "combine", None)
+        out = []
+        for i in range(keys_np.size):
+            a = (jax.tree.map(lambda v: v[i], pr) if pf[i] else None)
+            b = (jax.tree.map(lambda v: v[i], sr)
+                 if sr is not None and sf[i] else None)
+            if a is not None and b is not None:
+                out.append(combine(a, b))
+            elif a is not None:
+                out.append(a)
+            else:
+                out.append(b)
         return out

@@ -20,7 +20,9 @@ front of every enqueue.
 """
 from __future__ import annotations
 
+import threading
 from collections import deque
+from contextlib import nullcontext
 from dataclasses import dataclass, field
 from functools import partial
 from typing import Any, Dict, List, Optional, Sequence, Tuple
@@ -107,6 +109,14 @@ def _limit_ingest(batch: "EventBatch", ingest) -> "EventBatch":
     return batch.mask(rank < ingest)
 
 
+@partial(jax.jit, static_argnames=("impl",))
+def _batched_lookup(table_keys, table_vals, query, *, impl: str):
+    """One fused device program for a [Q] read batch: probe-walk +
+    per-leaf row gather (kernels/slate_lookup.lookup_tree)."""
+    from repro.kernels.slate_lookup import ops as lk_ops
+    return lk_ops.lookup_tree(table_keys, table_vals, query, impl=impl)
+
+
 class StateHandle:
     """Live view of ``(engine, state)`` for concurrent readers.
 
@@ -121,21 +131,55 @@ class StateHandle:
     (same ``read_slate(state, ...)`` / ``stats(state)`` shape).
     """
 
-    def __init__(self, engine, state=None):
+    def __init__(self, engine, state=None, cache=None):
         self.engine = engine
         self.state = state
+        # optional slates.replica.HotKeyCache: consulted before touching
+        # device state, warmed from telemetry heavy hitters, invalidated
+        # whenever the flush frontier advances (DESIGN.md section 15)
+        self.cache = cache
+
+    def _lock(self):
+        return getattr(self.engine, "read_lock", None) or nullcontext()
 
     def read_slate(self, updater: str, key: int):
-        return self.engine.read_slate(self.state, updater, key)
+        c = self.cache
+        if c is not None:
+            hit, val = c.get(updater, key)
+            if hit:
+                return val
+        with self._lock():
+            val = self.engine.read_slate(self.state, updater, key)
+        if c is not None and val is not None:
+            c.put(updater, key, val)
+        return val
+
+    def read_slates(self, updater: str, keys):
+        """Batched point reads (one device dispatch); list aligned with
+        ``keys``, ``None`` for missing."""
+        with self._lock():
+            return self.engine.read_slates(self.state, updater, keys)
 
     def stats(self) -> Dict[str, Any]:
-        return self.engine.stats(self.state)
+        with self._lock():
+            return self.engine.stats(self.state)
+
+    # -- driver hooks (Engine.run calls these at chunk boundaries) --
+    def on_telemetry(self, report):
+        if self.cache is not None and report is not None:
+            self.cache.warm([k for k, _, _ in report.heavy_hitters])
+
+    def on_frontier_advance(self):
+        """Flush frontier moved: cached rows may now disagree with the
+        durable snapshot the replica tier serves — drop them."""
+        if self.cache is not None:
+            self.cache.invalidate()
 
     def serve(self, port: int = 0):
         """Start an HTTP slate server bound to this handle."""
         from repro.slates.http import SlateServer
         return SlateServer(read_fn=self.read_slate, stats_fn=self.stats,
-                           port=port)
+                           read_many_fn=self.read_slates, port=port)
 
 
 class Engine:
@@ -144,6 +188,12 @@ class Engine:
     def __init__(self, workflow: Workflow, config: EngineConfig = None):
         self.wf = workflow
         self.cfg = config or EngineConfig()
+        # serializes concurrent readers against the donating dispatches
+        # in run(): donated state buffers are deleted the moment a chunk
+        # is dispatched, so a read racing the chunk would touch freed
+        # arrays.  RLock: read_split_slate holds it across its sub-key
+        # loop while read_slate re-acquires.
+        self.read_lock = threading.RLock()
         self._step = jax.jit(self._tick, donate_argnums=(0,))
         self._chunk = jax.jit(self._chunk_impl, donate_argnums=(0,),
                               static_argnames=("n_ticks", "adapt",
@@ -403,37 +453,47 @@ class Engine:
             if self.dur:
                 for i, srcs in enumerate(per_tick):
                     self.dur.append(eng_tick + i, srcs)
-            state, outs, info = self.run_chunk(state,
-                                               stack_sources(per_tick), n)
-            for i in range(n):
-                outputs.append(jax.tree.map(lambda x, i=i: x[i], outs))
-            hits_trace = jax.device_get(info["throttle_hits"])  # 1 sync
-            for hits in (int(h) for h in hits_trace):
-                if hits > last_hits:     # backpressure signal
-                    cur = (ingest if ingest is not None
-                           else self.cfg.batch_size)
-                    ingest = max(throttle_floor, cur // 2)
-                elif ingest is not None:
-                    ingest = min(self.cfg.batch_size, ingest * 2)
-                    if ingest == self.cfg.batch_size:
-                        ingest = None
-                last_hits = hits
-            t += n
-            eng_tick += n
-            if self.dur and self.dur.due(eng_tick, state["tables"]):
-                state, eng_tick = self._flush_boundary(
-                    state, eng_tick, meta={"source_tick": t})
-            if (self.telemetry is not None
-                    and t - obs_mark >= self.cfg.telemetry.window):
-                # windowed reading + sketch aging: piggybacks on the
-                # chunk boundary we are already synced at
-                self.telemetry.observe(self, state)
-                state = dict(state)
-                state["sketch"] = sk_mod.decay(state["sketch"],
-                                               self.cfg.telemetry.decay)
-                obs_mark = t
-            if handle is not None:
-                handle.state = state
+            # the chunk dispatch donates (deletes) the buffers a handle
+            # reader may be touching; hold the read lock from dispatch
+            # until the fresh state is republished
+            with self.read_lock:
+                state, outs, info = self.run_chunk(
+                    state, stack_sources(per_tick), n)
+                for i in range(n):
+                    outputs.append(jax.tree.map(lambda x, i=i: x[i],
+                                                outs))
+                hits_trace = jax.device_get(
+                    info["throttle_hits"])  # 1 sync
+                for hits in (int(h) for h in hits_trace):
+                    if hits > last_hits:     # backpressure signal
+                        cur = (ingest if ingest is not None
+                               else self.cfg.batch_size)
+                        ingest = max(throttle_floor, cur // 2)
+                    elif ingest is not None:
+                        ingest = min(self.cfg.batch_size, ingest * 2)
+                        if ingest == self.cfg.batch_size:
+                            ingest = None
+                    last_hits = hits
+                t += n
+                eng_tick += n
+                if self.dur and self.dur.due(eng_tick, state["tables"]):
+                    state, eng_tick = self._flush_boundary(
+                        state, eng_tick, meta={"source_tick": t})
+                    if handle is not None:
+                        handle.on_frontier_advance()
+                if (self.telemetry is not None
+                        and t - obs_mark >= self.cfg.telemetry.window):
+                    # windowed reading + sketch aging: piggybacks on the
+                    # chunk boundary we are already synced at
+                    report = self.telemetry.observe(self, state)
+                    if handle is not None:
+                        handle.on_telemetry(report)
+                    state = dict(state)
+                    state["sketch"] = sk_mod.decay(
+                        state["sketch"], self.cfg.telemetry.decay)
+                    obs_mark = t
+                if handle is not None:
+                    handle.state = state
         return state, outputs
 
     def drain(self, state, max_ticks: int = 64):
@@ -561,6 +621,25 @@ class Engine:
             return None
         s = int(slot[0])
         return jax.tree.map(lambda v: jax.device_get(v[s]), table.vals)
+
+    def read_slates(self, state, updater: str, keys, *,
+                    impl: str = "auto"):
+        """Batched point reads: one device dispatch + one host sync for
+        a whole [Q] key vector, bitwise identical to Q ``read_slate``
+        calls.  Returns a list aligned with ``keys`` of per-key slate
+        dicts (``None`` for missing keys).  ``impl`` picks the lookup
+        backend (kernels/slate_lookup: "auto"/"pallas"/"interpret"/
+        "jnp")."""
+        keys = np.asarray(keys, np.int32).reshape(-1)
+        if keys.size == 0:
+            return []
+        table = state["tables"][updater]
+        found, rows = _batched_lookup(table.keys, table.vals,
+                                      jnp.asarray(keys), impl=impl)
+        found = np.asarray(jax.device_get(found))
+        rows = jax.device_get(rows)
+        return [jax.tree.map(lambda v, i=i: v[i], rows)
+                if found[i] else None for i in range(keys.size)]
 
     def stats(self, state) -> Dict[str, Any]:
         g = jax.device_get

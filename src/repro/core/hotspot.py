@@ -29,6 +29,7 @@ engine's own ``read_slate``.
 """
 from __future__ import annotations
 
+from contextlib import nullcontext
 from typing import Dict, List, Optional
 
 import jax
@@ -133,10 +134,15 @@ def read_split_slate(engine, state, updater: str, key: int, ways: int,
             f"{updater!r} is a {type(op).__name__} with no combine — "
             f"split-slate reads need an associative updater")
     partials = []
-    for sub in subkeys_of(key, ways):
-        s = read(state, updater, sub)
-        if s is not None:
-            partials.append(s)
+    # all sub-key reads under one read_lock hold (re-entrant: the
+    # engine's read_slate re-acquires) so a mid-loop reconfigure cannot
+    # hand back a mix of pre- and post-migration partials
+    lock = getattr(engine, "read_lock", None) or nullcontext()
+    with lock:
+        for sub in subkeys_of(key, ways):
+            s = read(state, updater, sub)
+            if s is not None:
+                partials.append(s)
     if not partials:
         return None
     out = partials[0]

@@ -1,0 +1,3 @@
+from repro.kernels.slate_lookup.ops import lookup_slots, slate_lookup
+
+__all__ = ["slate_lookup", "lookup_slots"]

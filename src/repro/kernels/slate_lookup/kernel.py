@@ -1,0 +1,99 @@
+"""Muppet read-path hot loop — batched slate point-lookup.
+
+One kernel invocation answers a [Q] vector of point reads against the
+open-addressing slate table: per query, walk the (precomputed) probe
+chain until the key matches, then DMA that slate row out of HBM — the
+same row-at-a-time access pattern the write kernel's scatter uses, in
+reverse.  The probe *candidates* are computed outside the kernel with
+the table's own double-hash sequence, so the hash math exists in
+exactly one place and the kernel is pure pointer-chasing: SMEM holds
+the small int vectors (queries, candidate slots, results), the table
+stays in HBM (``ANY``) and only hit rows cross into registers.
+
+Serving shape, not throughput shape: Q is a request batch (<= ~2K),
+so the whole walk is a scalar loop — the win over the host path is
+collapsing Q round-trips into one dispatch, not FLOPs.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+MAX_Q = 2048      # SMEM budget for the per-query scalar vectors
+
+
+def _lookup_kernel(query_ref, cand_ref, tkeys_ref, vals_ref,
+                   slot_ref, found_ref, rows_ref, *, P: int, Q: int,
+                   D: int):
+    def body(qi, _):
+        def probe(p, carry):
+            slot, found = carry
+            c = cand_ref[p, qi]
+            k = pl.load(tkeys_ref, (pl.dslice(c, 1),))[0]
+            hit = k == query_ref[qi]
+            # first hit wins (matches table.lookup's first_true)
+            slot = jnp.where(hit & ~found, c, slot)
+            return slot, found | hit
+
+        slot, found = jax.lax.fori_loop(
+            0, P, probe, (jnp.int32(-1), jnp.bool_(False)))
+        slot_ref[qi] = slot
+        found_ref[qi] = found.astype(jnp.int32)
+
+        @pl.when(found)
+        def _():
+            row = pl.load(vals_ref, (pl.dslice(slot, 1), slice(None)))
+            pl.store(rows_ref, (pl.dslice(qi, 1), slice(None)), row)
+
+        @pl.when(~found)
+        def _():
+            pl.store(rows_ref, (pl.dslice(qi, 1), slice(None)),
+                     jnp.zeros((1, D), vals_ref.dtype))
+
+        return 0
+
+    jax.lax.fori_loop(0, Q, body, 0)
+
+
+def supported(table_vals, query) -> bool:
+    return (table_vals.ndim == 2 and table_vals.shape[1] % 8 == 0
+            and query.shape[0] <= MAX_Q)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def slate_lookup(table_keys, query, cand, table_vals, *,
+                 interpret: bool = False):
+    """``table_keys``: int32 [C]; ``query``: int32 [Q]; ``cand``:
+    int32 [P, Q] probe candidates (``table._probe_seq``); ``table_vals``:
+    [C, D].  Returns ``(slot [Q], found [Q] bool, rows [Q, D])`` with
+    rows of missing keys zeroed."""
+    Q = query.shape[0]
+    P = cand.shape[0]
+    D = table_vals.shape[1]
+    kernel = functools.partial(_lookup_kernel, P=P, Q=Q, D=D)
+    slot, found, rows = pl.pallas_call(
+        kernel,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),       # query
+            pl.BlockSpec(memory_space=pltpu.SMEM),       # cand
+            pl.BlockSpec(memory_space=pltpu.ANY),        # table keys
+            pl.BlockSpec(memory_space=pltpu.ANY),        # table vals
+        ],
+        out_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Q,), jnp.int32),
+            jax.ShapeDtypeStruct((Q,), jnp.int32),
+            jax.ShapeDtypeStruct((Q, D), table_vals.dtype),
+        ],
+        interpret=interpret,
+    )(query.astype(jnp.int32), cand.astype(jnp.int32), table_keys,
+      table_vals)
+    return slot, found.astype(bool), rows

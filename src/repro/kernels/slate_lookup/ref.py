@@ -1,0 +1,53 @@
+"""Pure-jnp oracle for the batched slate point-lookup.
+
+The read-side twin of ``slate_update``'s oracle: walk the probe chain
+of every query key over the open-addressing table and gather the hit
+rows.  The probe math is imported from ``slates.table`` — the lookup
+contract is *bitwise* agreement with the looped host ``read_slate``
+(which goes through ``table.lookup``), so there is exactly one copy of
+the double-hashing sequence in the tree.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.slates.table import _probe_seq
+
+
+def lookup_slots(table_keys, query):
+    """``table_keys``: int32 [C] (EMPTY = -1 = free); ``query``: int32
+    [Q].  Returns ``(slot [Q], found [Q])`` — the first probe position
+    holding the key, or -1.  Unlike ``table.lookup`` this never
+    reports an insertion point: a read has no use for one, and -1
+    keeps the downstream gather's clip branch-free.  ``found`` is
+    bitwise ``table.lookup``'s (all PROBES positions are checked, so
+    rows parked behind TTL holes stay visible)."""
+    cand = _probe_seq(query, int(table_keys.shape[0]))     # [P, Q]
+    hit = table_keys[cand] == query[None]
+    found = jnp.any(hit, axis=0)
+    idx = jnp.argmax(hit, axis=0)
+    slot = jnp.where(found,
+                     jnp.take_along_axis(cand, idx[None], axis=0)[0],
+                     jnp.int32(-1))
+    return slot, found
+
+
+def gather_rows(vals, slot, found):
+    """Gather one pytree of [C, ...] value leaves at ``slot`` ([Q]);
+    missing keys ([Q] ``~found``) read as zeros."""
+    safe = jnp.clip(slot, 0, None)
+
+    def pick(v):
+        rows = v[safe]
+        mask = found.reshape(found.shape + (1,) * (rows.ndim - 1))
+        return jnp.where(mask, rows, jnp.zeros_like(rows))
+
+    return jax.tree.map(pick, vals)
+
+
+def slate_lookup(table_keys, query, table_vals):
+    """Fused oracle: probe walk + row gather.  ``table_vals``: [C, D].
+    Returns ``(slot [Q], found [Q], rows [Q, D])``."""
+    slot, found = lookup_slots(table_keys, query)
+    return slot, found, gather_rows(table_vals, slot, found)

@@ -5,6 +5,7 @@ The fetch retrieves the slate from Muppet's slate cache ... rather than
 from the durable key-value store to ensure an up-to-date reply."
 
 GET /slate/<updater>/<key>     -> JSON slate (from the device table)
+GET /slates/<updater>?keys=a,b -> batched read: {"slates": {key: slate|null}}
 GET /status                    -> engine stats JSON
 """
 from __future__ import annotations
@@ -13,6 +14,7 @@ import json
 import threading
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 from typing import Any, Callable, Optional
+from urllib.parse import parse_qs, urlparse
 
 import numpy as np
 
@@ -32,8 +34,10 @@ class SlateServer:
     driver (which swaps the state reference every tick)."""
 
     def __init__(self, read_fn: Callable[[str, int], Any],
-                 stats_fn: Callable[[], Any], port: int = 0):
-        handler = self._make_handler(read_fn, stats_fn)
+                 stats_fn: Callable[[], Any], port: int = 0,
+                 read_many_fn: Optional[Callable[[str, list], list]]
+                 = None):
+        handler = self._make_handler(read_fn, stats_fn, read_many_fn)
         self.httpd = ThreadingHTTPServer(("127.0.0.1", port), handler)
         self.port = self.httpd.server_address[1]
         self._thread = threading.Thread(target=self.httpd.serve_forever,
@@ -41,7 +45,7 @@ class SlateServer:
         self._thread.start()
 
     @staticmethod
-    def _make_handler(read_fn, stats_fn):
+    def _make_handler(read_fn, stats_fn, read_many_fn=None):
         class Handler(BaseHTTPRequestHandler):
             def log_message(self, *a):  # quiet
                 pass
@@ -55,7 +59,8 @@ class SlateServer:
                 self.wfile.write(raw)
 
             def do_GET(self):
-                parts = [p for p in self.path.split("/") if p]
+                url = urlparse(self.path)
+                parts = [p for p in url.path.split("/") if p]
                 try:
                     if parts[:1] == ["status"]:
                         self._send(200, stats_fn())
@@ -65,6 +70,21 @@ class SlateServer:
                             self._send(404, {"error": "no such slate"})
                         else:
                             self._send(200, _jsonable(slate))
+                    elif len(parts) == 2 and parts[0] == "slates":
+                        # batched read: one device dispatch for the
+                        # whole key vector (the serving-rate path)
+                        q = parse_qs(url.query).get("keys", [""])[0]
+                        keys = [int(k) for k in q.split(",") if k]
+                        if not keys:
+                            self._send(400, {"error": "keys= required"})
+                            return
+                        if read_many_fn is not None:
+                            slates = read_many_fn(parts[1], keys)
+                        else:       # engines without a batched path
+                            slates = [read_fn(parts[1], k) for k in keys]
+                        self._send(200, {"slates": {
+                            str(k): (None if s is None else _jsonable(s))
+                            for k, s in zip(keys, slates)}})
                     else:
                         self._send(404, {"error": "unknown path"})
                 except Exception as e:  # pragma: no cover

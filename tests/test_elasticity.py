@@ -764,3 +764,200 @@ def test_runtime_config_autoscale_front_door():
         RuntimeConfig(shards=1, autoscale=pol).engine_config()
     with pytest.raises(TypeError, match="AutoscalePolicy"):
         RuntimeConfig(shards=2, autoscale={"24": 16}).dist_config()
+
+
+# ---------------------------------------------------------------------------
+# read-tier edge cases against live elasticity (ISSUE 7)
+# ---------------------------------------------------------------------------
+
+def test_planned_leave_with_backlog_stays_on_device_path():
+    """remove_shards(..., drain_max=0) with a queued backlog used to
+    fall back to the host remap (exchange_rows only re-homed table
+    rows).  exchange_queue now moves the backlog on device too: the
+    device path must engage, report the same moved-event counts as the
+    host migrator, and converge to bitwise-equal slates."""
+    out = run_sub("""
+        from repro.core.hashing import route
+        from repro.core.distributed import _salt
+
+        def total_dropped(eng, state):
+            st = eng.stats(state)
+            return (st['exchange_dropped'] +
+                    sum(st['queue_dropped'].values()))
+
+        def run(mode):
+            mesh = Mesh(np.array(jax.devices()[:4]), ('data',))
+            wf = Workflow([Counter()], external_streams=('S1',))
+            eng = DistributedEngine(wf, mesh, DistConfig(
+                batch_size=32, queue_capacity=2048, fused='off',
+                device_migration=mode))
+            state = eng.init_state()
+            rng = np.random.default_rng(7)
+            # keys the pre-leave ring homes on shard 3: hammer them so
+            # the planned leave has a backlog exactly where it re-homes
+            rh, rs = eng.ring.table()
+            cand = jnp.arange(64, dtype=jnp.int32)
+            owners = np.asarray(route(cand, _salt('U1'), rh, rs))
+            hot = np.nonzero(owners == 3)[0][:4].astype(np.int32)
+            assert len(hot) > 0
+            reps = []
+            for t in range(6):
+                keys = np.where(rng.random(128) < 0.6,
+                                rng.choice(hot, 128),
+                                rng.integers(0, 24, 128)
+                                ).astype(np.int32)
+                xs = rng.integers(0, 99, 128).astype(np.float32)
+                if t == 3:
+                    sizes = jax.device_get({k: q.size for k, q in
+                                            state['queues'].items()})
+                    backlog = sum(int(np.asarray(v).sum())
+                                  for v in sizes.values())
+                    assert backlog > 0, 'no backlog built'
+                    state, rep = eng.remove_shards(state, [3],
+                                                   drain_max=0)
+                    reps.append(rep)
+                state, _ = eng.step(state, {'S1': gb(keys, xs, t, 4)})
+            state, _ = eng.drain(state, max_ticks=256)
+            return (slates(eng, state, 24), reps[0],
+                    total_dropped(eng, state))
+
+        dev, drep, ddrop = run('auto')
+        host, hrep, hdrop = run('off')
+        assert drep.path == 'device', drep
+        assert hrep.path == 'host'
+        assert drep.drain_ticks == 0 and hrep.drain_ticks == 0
+        assert sum(drep.moved_events.values()) > 0, drep.moved_events
+        assert drep.moved_events == hrep.moved_events, (
+            drep.moved_events, hrep.moved_events)
+        assert ddrop == hdrop, (ddrop, hdrop)  # feed overflow only
+        assert dev == host, (dev, host)
+        print('QEX-PARITY-OK')
+    """, devices=4)
+    assert "QEX-PARITY-OK" in out
+
+
+def test_compaction_folds_lifetime_counters():
+    """_compact_physical slices dead slots away; their lifetime
+    counters (processed, drop tallies, count-min sketch mass) must fold
+    into survivors so TelemetryReport lifetime counts stay exact."""
+    out = run_sub("""
+        from repro.telemetry.metrics import TelemetryConfig
+
+        def lifetime(eng, state):
+            st = eng.stats(state)
+            out = {'processed': sum(st['processed'].values()),
+                   'queue_dropped': sum(st['queue_dropped'].values()),
+                   'exchange_dropped': st['exchange_dropped'],
+                   'throttle_hits': st['throttle_hits']}
+            sk = jax.device_get(state['sketch'])
+            out['sk_total'] = int(np.asarray(sk['total']).sum())
+            out['sk_counts'] = int(np.asarray(sk['counts']).sum())
+            out['sk_sample_n'] = int(np.asarray(sk['sample_n']).sum())
+            tdrop = jax.device_get({k: t.dropped for k, t in
+                                    state['tables'].items()})
+            out['table_dropped'] = sum(int(np.asarray(v).sum())
+                                       for v in tdrop.values())
+            return out
+
+        mesh = Mesh(np.array(jax.devices()[:4]), ('data',))
+        wf = Workflow([Counter()], external_streams=('S1',))
+        eng = DistributedEngine(wf, mesh, DistConfig(
+            batch_size=16, queue_capacity=32, fused='off',
+            telemetry=TelemetryConfig(window=4, decay=0.5),
+            compact_threshold=0.0))
+        state = eng.init_state()
+        rng = np.random.default_rng(1)
+        for t in range(10):
+            # heavy skew onto one key overflows a queue -> real drops
+            keys = np.where(rng.random(64) < 0.5, 3,
+                            rng.integers(0, 200, 64)).astype(np.int32)
+            xs = rng.integers(0, 99, 64).astype(np.float32)
+            state, _ = eng.step(state, {'S1': gb(keys, xs, t, 4)})
+        state, _ = eng.drain(state, max_ticks=64)
+        before = lifetime(eng, state)
+        assert (before['queue_dropped'] > 0 or
+                before['exchange_dropped'] > 0), before
+
+        state, rep = eng.remove_shards(state, [2, 3])
+        state, rep = eng.compact(state)
+        assert rep.recompiled and eng.n_shards == 2, rep
+        after = lifetime(eng, state)
+        for k in before:
+            assert before[k] == after[k], (k, before[k], after[k])
+        r = eng.telemetry.observe(eng, state)
+        assert r.n_shards == 2
+        print('COMPACT-FOLD-OK')
+    """, devices=4)
+    assert "COMPACT-FOLD-OK" in out
+
+
+@pytest.mark.slow
+def test_concurrent_reads_during_live_scale():
+    """Readers on a StateHandle race a 4->8 scale mid-run.  step() and
+    _reconfigure donate the buffers a reader may hold; the read_lock +
+    in-lock handle republish must keep every read either pre- or post-
+    migration -- no deleted-buffer errors, no torn slates -- and the
+    scaled run still matches a never-scaled run slate for slate."""
+    out = run_sub("""
+        import threading
+        from repro.core.distributed import AutoscalePolicy
+        from repro.core.engine import StateHandle
+
+        def src(t, ingest=None):
+            rng = np.random.default_rng(40 + t)
+            keys = rng.integers(0, 48, 128).astype(np.int32)
+            xs = rng.integers(0, 99, 128).astype(np.float32)
+            return {'S1': gb(keys, xs, t, eng.n_shards)}
+
+        def build(scale):
+            pol = AutoscalePolicy(scale_at={6: 8}) if scale else None
+            mesh = Mesh(np.array(jax.devices()[:4]), ('data',))
+            wf = Workflow([Counter()], external_streams=('S1',))
+            return DistributedEngine(wf, mesh, DistConfig(
+                batch_size=32, queue_capacity=512, fused='off',
+                autoscale=pol))
+
+        eng = build(scale=True)
+        state = eng.init_state()
+        h = StateHandle(eng, state)
+        errors, n_reads = [], [0]
+        stop = threading.Event()
+
+        def reader():
+            rng = np.random.default_rng(99)
+            while not stop.is_set():
+                try:
+                    k = int(rng.integers(0, 48))
+                    s = h.read_slate('U1', k)
+                    if s is not None:   # torn slate check
+                        assert int(s['count']) >= 0
+                    many = h.read_slates(
+                        'U1', rng.integers(0, 48, 16).tolist())
+                    assert len(many) == 16
+                    n_reads[0] += 1
+                except Exception as e:  # noqa: BLE001
+                    errors.append(repr(e))
+                    return
+
+        threads = [threading.Thread(target=reader) for _ in range(3)]
+        for th in threads:
+            th.start()
+        state, _ = eng.run(state, src, 12, handle=h)
+        state, _ = eng.drain(state)
+        h.state = state
+        stop.set()
+        for th in threads:
+            th.join(timeout=60)
+        assert not errors, errors
+        assert n_reads[0] > 0
+        assert eng.n_shards == 8
+        scaled = slates(eng, state, 48)
+
+        eng = build(scale=False)   # src() reads eng.n_shards
+        s2 = eng.init_state()
+        s2, _ = eng.run(s2, src, 12)
+        s2, _ = eng.drain(s2)
+        assert scaled == slates(eng, s2, 48)
+        print('READ-RACE-OK')
+    """, devices=8)
+    assert "READ-RACE-OK" in out
