@@ -42,7 +42,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 GUARDED = ("latency_per_tick", "tick_dispatch_chunked32",
-           "slate_read_qps")
+           "slate_read_qps", "ml_mapper_throughput")
 ANCHOR = "guard_calibration"
 ROOT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..")
 
@@ -76,6 +76,7 @@ def measure():
     bench.bench_latency()
     bench.bench_chunked_vs_pertick()
     bench.bench_slate_read()
+    bench.bench_ml_mapper_throughput()
     bench.bench_guard_calibration()
     out = {n: u for n, u, _ in bench.ROWS}
     bench.ROWS.clear()

@@ -803,6 +803,137 @@ def bench_serving():
 
 
 # ----------------------------------------------------------------------
+# streaming ML (DESIGN.md section 16): model inference inside the tick,
+# semantic top-k on the fused max path, LM serving as a MapUpdate app
+# ----------------------------------------------------------------------
+
+_ML_CFG = None
+
+
+def _ml_cfg():
+    global _ML_CFG
+    if _ML_CFG is None:
+        from repro.configs import get_config
+        _ML_CFG = get_config("qwen2-0.5b").replace(
+            n_layers=2, d_model=64, n_heads=2, n_kv_heads=1, d_ff=128,
+            vocab_size=512, head_dim=32)
+    return _ML_CFG
+
+
+def bench_ml_mapper_throughput():
+    """Events/s through a FLOP-heavy ModelMapper stage + semantic top-k
+    updater — the full streaming-ML tick (embed, score, fused max slate
+    scatter), guarded in CI."""
+    from repro import App, EventBatch, RuntimeConfig
+    from repro.api import ops
+    cfg = _ml_cfg()
+    SEQ, B = 8, 64
+    app = App("bench_ml")
+    app.source("events", {"tokens": ((SEQ,), jnp.int32),
+                          "item": ((), jnp.int32)})
+    app.add(ops.model_mapper(cfg, field="tokens", out="scored", bucket=8,
+                             keep=("item",), name="embed"),
+            subscribes=("events",))
+    app.stream("scored").update(ops.semantic_topk(
+        k=4, n_slots=32, table_capacity=256))
+    h = app.start(RuntimeConfig(batch_size=B))
+    rng = np.random.default_rng(12)
+    batches = []
+    for t in range(8):
+        toks = rng.integers(1, cfg.vocab_size, (B, SEQ)).astype(np.int32)
+        item = rng.integers(1, 1 << 10, B).astype(np.int32)
+        topic = rng.integers(0, 64, B).astype(np.int32)
+        batches.append({"events": EventBatch.of(
+            key=topic, value={"tokens": toks, "item": item},
+            ts=np.full(B, t, np.int32))})
+    box = {"s": h.state, "i": 0}
+
+    def step():
+        b = batches[box["i"] % len(batches)]
+        box["s"], _ = app.engine.step(box["s"], b)
+        box["i"] += 1
+        jax.block_until_ready(box["s"]["tick"])
+
+    us = _time(step, n=15)
+    row("ml_mapper_throughput", us,
+        f"{B/(us/1e6):.0f} events/s: 2-layer model inference "
+        f"(bucket=8 microbatches) + fused max slate tick")
+    app.close()
+
+
+def bench_semantic_topk():
+    """The updater alone at counting-bench scale: pre-scored events
+    straight into the packed max-sketch slate (no model in the loop)."""
+    from repro import App, EventBatch, RuntimeConfig
+    from repro.api import ops
+    B, D = 2048, 16
+    app = App("bench_topk")
+    app.source("scored", {"emb": ((D,), jnp.float32),
+                          "item": ((), jnp.int32)})
+    app.stream("scored").update(ops.semantic_topk(
+        k=8, n_slots=64, table_capacity=1 << 12))
+    h = app.start(RuntimeConfig(batch_size=B, queue_capacity=4 * B))
+    rng = np.random.default_rng(13)
+    batches = []
+    for t in range(8):
+        z = zipf_batch(rng, B, tick=t)
+        batches.append({"scored": EventBatch.of(
+            key=z.key,
+            value={"emb": rng.standard_normal((B, D)).astype(np.float32),
+                   "item": rng.integers(1, 1 << 10, B).astype(np.int32)},
+            ts=np.full(B, t, np.int32))})
+    box = {"s": h.state, "i": 0}
+
+    def step():
+        b = batches[box["i"] % len(batches)]
+        box["s"], _ = app.engine.step(box["s"], b)
+        box["i"] += 1
+        jax.block_until_ready(box["s"]["tick"])
+
+    us = _time(step, n=20)
+    row("semantic_topk_per_tick", us,
+        f"{B/(us/1e6):.0f} slate updates/s on the fused elementwise-max "
+        f"path (Zipf keys, 64-slot sketch)")
+    app.close()
+
+
+def bench_serve_lm_app():
+    """Tokens/s of the LM-serving-as-MapUpdate-app path (DESIGN 16.4):
+    admission source -> prefill + scan-decode mapper -> request slate,
+    compared against the direct ServingEngine loop (serving_decode_tick
+    above runs the reduced config; this runs the bench-tiny one)."""
+    from repro import RuntimeConfig
+    from repro.launch.serve import Request
+    from repro.ml.serve_app import build_serve_app, request_source
+    cfg = _ml_cfg()
+    PROMPT, MAX_NEW = 16, 8
+    rng = np.random.default_rng(14)
+
+    def mk_reqs(n, base):
+        return [Request(rid=base + i,
+                        prompt=rng.integers(1, cfg.vocab_size,
+                                            8).astype(np.int32),
+                        max_new=MAX_NEW) for i in range(n)]
+
+    app = build_serve_app(cfg, prompt_len=PROMPT, max_new=MAX_NEW,
+                          cache_len=64, bucket=4, table_capacity=256)
+    rt = RuntimeConfig(batch_size=8)
+    # warm: compile the prefill+decode microbatch at the serving shapes
+    app.run(request_source(mk_reqs(8, 1), prompt_len=PROMPT, capacity=8,
+                           per_tick=4), n_ticks=2, runtime=rt, drain=True)
+    n_req, n_ticks = 24, 6
+    src = request_source(mk_reqs(n_req, 100), prompt_len=PROMPT,
+                         capacity=8, per_tick=4)
+    t0 = time.perf_counter()
+    app.run(src, n_ticks=n_ticks, drain=True)
+    dt = time.perf_counter() - t0
+    row("serve_lm_engine_tok_s", dt / n_ticks * 1e6,
+        f"{n_req * MAX_NEW / dt:.0f} tok/s through the MapUpdate serving "
+        f"app ({n_req} requests, greedy decode, durable-ready path)")
+    app.close()
+
+
+# ----------------------------------------------------------------------
 # CI regression-guard anchor (benchmarks/guard.py)
 # ----------------------------------------------------------------------
 
@@ -865,6 +996,9 @@ def main() -> None:
     bench_wal()
     bench_durability()
     bench_serving()
+    bench_ml_mapper_throughput()
+    bench_semantic_topk()
+    bench_serve_lm_app()
     bench_guard_calibration()
     bench_kernels()
     root = os.path.join(os.path.dirname(__file__), "..")

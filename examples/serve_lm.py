@@ -1,6 +1,8 @@
-"""Serve a small LM with batched requests through the Muppet serving
-layer: admission queue (bounded, shedding), continuous-batching decode
-slots (per-request slates), request latency stats.
+"""Serve a small LM through the stream engine itself: the serving loop
+as a MapUpdate app (``repro.ml.serve_app``, DESIGN.md section 16.4) —
+admission source -> prefill/decode mapper -> per-request slate — with a
+token-level parity smoke against the direct ``ServingEngine`` loop the
+app path replaces.
 
 Run:  PYTHONPATH=src python examples/serve_lm.py --requests 24
 """
@@ -9,47 +11,79 @@ import time
 
 import numpy as np
 
+from repro import RuntimeConfig, TelemetryConfig
 from repro.configs import get_config
-from repro.launch.serve import Request, ServeConfig, ServingEngine
+from repro.launch.serve import Request, ServeConfig, ServingEngine, \
+    lm_params
+from repro.ml.serve_app import build_serve_app, request_source
+
+PROMPT_LEN = 32   # == ServeConfig.prompt_bucket: identical prefill shapes
+MAX_NEW = 8
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=24)
-    ap.add_argument("--slots", type=int, default=8)
-    ap.add_argument("--max-new", type=int, default=24)
+    ap.add_argument("--batch", type=int, default=8)
     args = ap.parse_args()
 
     cfg = get_config("qwen2-0.5b").replace(
         n_layers=4, d_model=128, n_heads=4, n_kv_heads=2, d_ff=512,
         vocab_size=4096, head_dim=32)
-    eng = ServingEngine(cfg, ServeConfig(
-        n_slots=args.slots, cache_len=256, prompt_bucket=32,
-        admit_per_tick=2, queue_capacity=64))
-
     rng = np.random.default_rng(0)
-    t0 = time.time()
-    for i in range(args.requests):
-        eng.submit(Request(
-            rid=i,
-            prompt=rng.integers(0, cfg.vocab_size,
-                                int(rng.integers(5, 30))).astype(np.int32),
-            max_new=args.max_new))
+    reqs = [Request(rid=i + 1,
+                    prompt=rng.integers(1, cfg.vocab_size,
+                                        int(rng.integers(5, 30))
+                                        ).astype(np.int32),
+                    max_new=MAX_NEW)
+            for i in range(args.requests)]
 
+    # ---- reference: the direct continuous-batching loop ----
+    eng = ServingEngine(cfg, ServeConfig(
+        n_slots=8, cache_len=64, prompt_bucket=PROMPT_LEN,
+        admit_per_tick=2, queue_capacity=64))
+    for r in reqs:
+        eng.submit(Request(rid=r.rid, prompt=r.prompt.copy(),
+                           max_new=r.max_new))
+    t0 = time.time()
     while (eng.queue or eng.active.any()) and eng.tick < 2000:
         eng.step()
-    dt = time.time() - t0
+    dt_direct = time.time() - t0
+    direct = {r.rid: list(r.tokens_out) for r in eng.finished}
 
-    s = eng.stats()
-    print(f"finished {s['finished']} requests in {dt:.1f}s "
-          f"({s['tokens_generated']} tokens, "
-          f"{s['tokens_generated']/dt:.0f} tok/s)")
-    print(f"mean latency: {s['mean_latency_ticks']:.1f} ticks; "
-          f"shed: {s['shed']}")
-    sample = eng.finished[0]
-    print(f"request {sample.rid}: prompt[{len(sample.prompt)}] -> "
-          f"{sample.tokens_out[:12]}...")
-    assert s["finished"] == args.requests
+    # ---- the engine path: same model, same params, as an App ----
+    app = build_serve_app(cfg, params=lm_params(eng),
+                          prompt_len=PROMPT_LEN, max_new=MAX_NEW,
+                          cache_len=64, bucket=4)
+    n_ticks = -(-args.requests // 2) + 2
+    t0 = time.time()
+    app.run(request_source(reqs, prompt_len=PROMPT_LEN,
+                           capacity=args.batch, per_tick=2),
+            n_ticks=n_ticks,
+            runtime=RuntimeConfig(batch_size=args.batch,
+                                  telemetry=TelemetryConfig()),
+            drain=True)
+    dt_app = time.time() - t0
+
+    # ---- parity smoke: token streams must agree request-for-request ----
+    matched = 0
+    for r in reqs:
+        slate = app.read_slate("requests", r.rid)
+        assert slate is not None, f"request {r.rid} has no slate"
+        got = list(np.asarray(slate["tokens"]))
+        assert got == direct[r.rid], \
+            f"request {r.rid}: app {got} != direct {direct[r.rid]}"
+        matched += 1
+    toks = args.requests * MAX_NEW
+    print(f"parity OK: {matched}/{args.requests} requests, "
+          f"token-for-token vs direct ServingEngine")
+    print(f"engine path: {toks} tokens in {dt_app:.1f}s "
+          f"({toks / dt_app:.0f} tok/s); direct loop: {dt_direct:.1f}s")
+    rep = app.telemetry()   # per-shard vectors; one shard here
+    print(f"telemetry: pressure={float(np.max(rep.pressure)):.3f} "
+          f"events/tick={float(np.sum(rep.events_per_tick)):.1f}")
+    print("stats:", app.stats())
+    app.close()
 
 
 if __name__ == "__main__":

@@ -33,4 +33,19 @@ __all__ = [
     "MigrationReport",
     # telemetry + the closed control loop (DESIGN.md section 13)
     "LoadAutoscaler", "TelemetryConfig", "TelemetryReport",
+    # streaming-ML subsystem (DESIGN.md section 16) — lazy, see below
+    "ml",
 ]
+
+
+def __getattr__(name):
+    # repro.ml pulls in the model stack; load it on first touch so
+    # counting/ranking apps keep the light import path
+    if name == "ml":
+        import repro.ml as ml
+        return ml
+    raise AttributeError(f"module 'repro' has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | {"ml"})

@@ -125,3 +125,28 @@ def topk(k: int, field: str = "x", name: str = "topk", **kw) -> TopK:
 def ema(alpha: float = 0.1, field: str = "x", name: str = "ema",
         **kw) -> Ema:
     return Ema(alpha, field, name, **kw)
+
+
+# ---- streaming-ML stages (repro/ml, DESIGN.md section 16) ----
+# imported lazily: repro.ml pulls in the model stack, which apps that
+# only count and rank plain fields should not pay for
+
+def model_mapper(cfg, params=None, **kw):
+    """:class:`repro.ml.ModelMapper` — microbatched model inference as
+    a mapper stage (FLOP-heavy tagged, specs inferred by tracing)."""
+    from repro.ml.mapper import ModelMapper
+    return ModelMapper(cfg, params, **kw)
+
+
+def semantic_topk(name: str = "semantic_topk", **kw):
+    """:class:`repro.ml.SemanticTopK` — per-key top-k by model score on
+    the fused elementwise-max slate path."""
+    from repro.ml.rankers import SemanticTopK
+    return SemanticTopK(name, **kw)
+
+
+def personalization(name: str = "personalization", **kw):
+    """:class:`repro.ml.Personalization` — per-user EMA embedding +
+    re-scored candidate slate (sequential path)."""
+    from repro.ml.rankers import Personalization
+    return Personalization(name, **kw)

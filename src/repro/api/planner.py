@@ -155,6 +155,10 @@ def _tree_add(a, b):
     return jax.tree.map(jnp.add, a, b)
 
 
+def _tree_max(a, b):
+    return jax.tree.map(jnp.maximum, a, b)
+
+
 class FnMapper(Mapper):
     """A traced map function as an operator.  The function may return a
     single EventBatch (wrapped into its one declared out stream) or a
@@ -185,7 +189,7 @@ class FnAssociativeUpdater(AssociativeUpdater):
 
     def __init__(self, name, subscribes, in_spec, slate, lift_fn,
                  combine_fn, merge_fn, emit_fn, out_streams, *,
-                 table_capacity, ttl, sum_mergeable):
+                 table_capacity, ttl, sum_mergeable, monoid=""):
         self.name = name
         self.subscribes = tuple(subscribes)
         self.in_value_spec = in_spec
@@ -198,6 +202,7 @@ class FnAssociativeUpdater(AssociativeUpdater):
         self.table_capacity = table_capacity
         self.ttl = ttl
         self.sum_mergeable = sum_mergeable
+        self.monoid = monoid
 
     def slate_spec(self):
         return self._slate
@@ -255,6 +260,8 @@ class FusedMapper(Mapper):
         self.name = f"{head.name}+{tail.name}"
         self.subscribes = tuple(head.subscribes)
         self.in_value_spec = head.in_value_spec
+        self.flop_heavy = (getattr(head, "flop_heavy", False)
+                           or getattr(tail, "flop_heavy", False))
         self.out_streams = {
             **{s: sp for s, sp in head.out_streams.items() if s != via},
             **tail.out_streams}
@@ -324,10 +331,20 @@ def _build_assoc(decl: OpDecl, in_spec) -> FnAssociativeUpdater:
     if decl.slate is None:
         raise PlanError(f"updater {decl.name!r} needs slate= (a "
                         f"value_spec pytree for one slate)")
+    monoid = ""
     if decl.merge == "sum":
         merge_fn = _tree_add
         combine_fn = decl.combine or _tree_add
         auto_sm = decl.combine is None and decl.emit is None
+    elif decl.merge == "max":
+        # elementwise-max monoid (non-negative leaves, DESIGN.md 16.2):
+        # rides the same fused slate_update path as "sum" when no
+        # custom combine/emit is attached
+        merge_fn = _tree_max
+        combine_fn = decl.combine or _tree_max
+        auto_sm = False
+        if decl.combine is None and decl.emit is None:
+            monoid = "max"
     else:
         merge_fn = decl.merge
         combine_fn = decl.combine or _tree_add
@@ -338,12 +355,13 @@ def _build_assoc(decl: OpDecl, in_spec) -> FnAssociativeUpdater:
     lift_res = _trace("updater", decl.name, decl.fn,
                       abstract_batch(in_spec))
     slate_rows = _abstract_rows(decl.slate, _TRACE_B)
-    if (decl.merge == "sum"
+    if (decl.merge in ("sum", "max")
             and jax.tree.structure(lift_res)
             != jax.tree.structure(slate_rows)):
         raise PlanError(
-            f"updater {decl.name!r}: with merge='sum' the lift() pytree "
-            f"must match slate={format_spec(decl.slate)} structurally")
+            f"updater {decl.name!r}: with merge={decl.merge!r} the "
+            f"lift() pytree must match slate={format_spec(decl.slate)} "
+            f"structurally")
 
     out_specs = _declared_specs(decl.out)
     names = out_names(decl.out)
@@ -364,7 +382,7 @@ def _build_assoc(decl: OpDecl, in_spec) -> FnAssociativeUpdater:
         decl.name, decl.subscribes, in_spec, decl.slate, decl.fn,
         combine_fn, merge_fn, decl.emit, out_specs,
         table_capacity=decl.table_capacity, ttl=decl.ttl,
-        sum_mergeable=sum_mergeable)
+        sum_mergeable=sum_mergeable, monoid=monoid)
 
 
 def _build_seq(decl: OpDecl, in_spec) -> FnSequentialUpdater:
@@ -422,6 +440,16 @@ def _build_raw(decl: OpDecl, in_spec) -> Operator:
                 f"stream carries {format_spec(in_spec)}")
     else:
         op.in_value_spec = in_spec
+    # subclass-API mappers may leave out_streams to tracing (the
+    # function-style path above already does this): opt in with
+    # ``trace_out_streams = True`` — repro/ml's ModelMapper derives its
+    # embedding width from the model config, so its output spec is only
+    # cheap to state by eval_shape
+    if (isinstance(op, Mapper) and not getattr(op, "out_streams", None)
+            and getattr(op, "trace_out_streams", False)):
+        res = _trace("mapper", decl.name, op.map_batch,
+                     abstract_batch(op.in_value_spec))
+        op.out_streams = _emission_specs("mapper", decl.name, res, ())
     return op
 
 
@@ -446,14 +474,16 @@ def fuse_mappers(operators: List[Operator], external: set
                  ) -> Tuple[List[Operator], List[Tuple[str, ...]]]:
     """Collapse linear mapper chains into FusedMapper stages.
 
-    A link M1 -s-> M2 fuses iff: both are Mappers, s is M1's to-fuse
-    output and M2's *only* subscription, s has exactly one producer and
-    exactly one subscriber, s is not external, not a self-loop on
-    either operator, not part of a cycle back to M1 (fusing a cycle
-    would halve its loop latency — only *linear* chains fuse), and
-    fusing would not collide two distinct emissions into the same
-    stream name.  Applied to a fixpoint, so a 3-link chain becomes one
-    stage.
+    A link M1 -s-> M2 fuses iff: both are Mappers, neither is tagged
+    ``flop_heavy`` (model-inference stages keep their own queue hop so
+    their backpressure stays visible and their latency stays decoupled
+    from cheap field maps), s is M1's to-fuse output and M2's *only*
+    subscription, s has exactly one producer and exactly one
+    subscriber, s is not external, not a self-loop on either operator,
+    not part of a cycle back to M1 (fusing a cycle would halve its loop
+    latency — only *linear* chains fuse), and fusing would not collide
+    two distinct emissions into the same stream name.  Applied to a
+    fixpoint, so a 3-link chain becomes one stage.
     """
     ops_list = list(operators)
 
@@ -487,6 +517,12 @@ def fuse_mappers(operators: List[Operator], external: set
             head = prods[0]
             if head is tail or not isinstance(head, Mapper):
                 continue
+            if getattr(head, "flop_heavy", False) or \
+                    getattr(tail, "flop_heavy", False):
+                continue      # FLOP-heavy stage: the queue hop IS the
+                #               backpressure/telemetry boundary — fusing
+                #               would couple a matmul-bound stage's
+                #               latency to a cheap field map
             if s in head.subscribes:
                 continue
             subs = [o for o in ops_list if s in o.subscribes]

@@ -66,11 +66,22 @@ def _segmented_combine(updater, deltas, boundary):
     return scanned
 
 
+def merge_monoid(updater: AssociativeUpdater) -> str:
+    """The elementwise monoid the fused path may run this updater under:
+    "sum" (``sum_mergeable`` or ``monoid="sum"``), "max"
+    (``monoid="max"``, non-negative leaves), or "" (generic combine —
+    fused path ineligible)."""
+    if getattr(updater, "sum_mergeable", False):
+        return "sum"
+    return getattr(updater, "monoid", "") or ""
+
+
 def fused_eligible(updater: AssociativeUpdater) -> bool:
     """The fused slate_update path handles updaters whose combine/merge
-    are elementwise sums (``sum_mergeable``) and that emit nothing (the
-    packed path never materializes old/new slates per key)."""
-    return (getattr(updater, "sum_mergeable", False)
+    are an elementwise monoid the kernel implements (sum or non-negative
+    max) and that emit nothing (the packed path never materializes
+    old/new slates per key)."""
+    return (merge_monoid(updater) in ("sum", "max")
             and not updater.out_streams)
 
 
@@ -125,11 +136,13 @@ def _apply_associative_fused(updater: AssociativeUpdater,
                                         Dict[str, EventBatch],
                                         jnp.ndarray]:
     """Counter-style hot path: pack deltas/table to [B,D]/[C,D] f32 and
-    run the fused segmented-combine + in-place scatter-add.  Requires
-    ``fused_eligible(updater)`` — additive combine/merge, zero init
-    slates, no emissions — so skipping the generic gather/merge/scatter
-    is exact (modulo f32 summation, which the generic "sum" leaf already
-    uses)."""
+    run the fused segmented-combine + in-place scatter.  Requires
+    ``fused_eligible(updater)`` — an elementwise sum or non-negative max
+    combine/merge, zero init slates, no emissions — so skipping the
+    generic gather/merge/scatter is exact (modulo f32 summation on the
+    sum monoid, which the generic "sum" leaf already uses; max is
+    order-independent and therefore bitwise-identical)."""
+    op = merge_monoid(updater)
     batch = batch.sort_by_key_ts()
     key = batch.key                       # invalid rows sorted to sink
     run_last = _last_valid_of_run(key, batch.valid)
@@ -137,8 +150,9 @@ def _apply_associative_fused(updater: AssociativeUpdater,
 
     spec = packing.pack_spec(updater.slate_spec())
     deltas = updater.lift(batch)
-    # segment totals sum whole runs; invalid rows sharing the sink run
-    # with a genuine key 2**31-1 must contribute the additive neutral
+    # segment totals combine whole runs; invalid rows sharing the sink
+    # run with a genuine key 2**31-1 must contribute the identity — zero
+    # for sum, and zero again for max thanks to the non-negative contract
     deltas = jax.tree.map(
         lambda d: jnp.where(_bshape(batch.valid, d), d,
                             jnp.zeros_like(d)), deltas)
@@ -166,22 +180,29 @@ def _apply_associative_fused(updater: AssociativeUpdater,
         backend = ("pallas" if jax.default_backend() == "tpu"
                    else "jnp")
     if backend == "jnp":
-        # combine via one segment sum, then scatter-add run totals into
+        # combine via one segment reduce, then scatter run totals into
         # the slate leaves directly — no [C, D] table pack and no lane
         # padding on this side, so the CPU/GPU fallback touches only B
         # rows at the exact slate width.
         packed_deltas = packing.pack(deltas, spec, pad=False)
-        totals = slate_ref.run_totals(key, packed_deltas)  # [B, D]
+        totals = slate_ref.run_totals(key, packed_deltas, op=op)  # [B, D]
         total_tree = packing.unpack(totals, spec)          # [B, ...]
-        vals = jax.tree.map(
-            lambda tv, dv: tv.at[safe].add(dv.astype(tv.dtype),
-                                           mode="drop"),
-            base_vals, total_tree)
+        if op == "max":
+            vals = jax.tree.map(
+                lambda tv, dv: tv.at[safe].max(dv.astype(tv.dtype),
+                                               mode="drop"),
+                base_vals, total_tree)
+        else:
+            vals = jax.tree.map(
+                lambda tv, dv: tv.at[safe].add(dv.astype(tv.dtype),
+                                               mode="drop"),
+                base_vals, total_tree)
     else:
         packed_deltas = packing.pack(deltas, spec)        # [B, D] aligned
         packed_vals = packing.pack(base_vals, spec)       # [C, D]
         packed_vals = slate_ops.slate_update(key, packed_deltas, slots,
-                                             packed_vals, impl=backend)
+                                             packed_vals, impl=backend,
+                                             op=op)
         vals = packing.unpack(packed_vals, spec)
 
     # bookkeeping scatter (ts / dirty), same slots write_slates would hit

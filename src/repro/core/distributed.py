@@ -476,6 +476,7 @@ class DistributedEngine:
             "tick": z(),
             "exchange_dropped": z(),
             "throttle_hits": z(),
+            "deferred": z(),
             "processed": {op.name: z() for op in self.wf.operators},
         }
         if self.tele_cfg is not None:
@@ -503,6 +504,7 @@ class DistributedEngine:
         processed = {k: v[0] for k, v in state["processed"].items()}
         exchange_dropped = state["exchange_dropped"][0]
         throttle_hits = state["throttle_hits"][0]
+        deferred_total = state["deferred"][0]
         tick = state["tick"][0]
         sketch = None
         if "sketch" in state:
@@ -578,6 +580,7 @@ class DistributedEngine:
                     apply_mod.apply_sequential(op, tables[op.name], batch,
                                                tick)
                 emitted_now.extend(ems.items())
+                deferred_total = deferred_total + deferred.count()
                 nq, ovf = q_mod.enqueue(queues[op.name], deferred)
                 queues[op.name] = q_mod.count_drop(nq, ovf)
                 processed[op.name] = processed[op.name] + n
@@ -598,6 +601,7 @@ class DistributedEngine:
             "tick": (tick + 1)[None],
             "exchange_dropped": exchange_dropped[None],
             "throttle_hits": throttle_hits[None],
+            "deferred": deferred_total[None],
             "processed": {k: v[None] for k, v in processed.items()},
         }
         if sketch is not None:
@@ -1746,7 +1750,8 @@ class DistributedEngine:
             return a[idx] if a.ndim >= 1 and a.shape[0] == old_n \
                 else leaf
 
-        counters = {"exchange_dropped", "throttle_hits", "processed"}
+        counters = {"exchange_dropped", "throttle_hits", "deferred",
+                    "processed"}
         out = {}
         for key, val in host.items():
             if key in ("tables", "queues"):
@@ -2008,6 +2013,7 @@ class DistributedEngine:
             "tick": int(g(state["tick"]).max()),
             "exchange_dropped": int(g(state["exchange_dropped"]).sum()),
             "throttle_hits": int(g(state["throttle_hits"]).sum()),
+            "deferred": int(g(state["deferred"]).sum()),
             "processed": {k: int(g(v).sum())
                           for k, v in state["processed"].items()},
             "queue_dropped": {k: int(g(q.dropped).sum())

@@ -55,6 +55,10 @@ class DurabilityConfig:
     replicas: int = 1
     write_quorum: int = 1
     read_quorum: int = 1
+    # retain flushed rows host-side (Flusher.track_deltas) so an
+    # attached SlateReplica can refresh incrementally from the flush
+    # stream instead of re-scanning the store (DESIGN.md section 15)
+    track_flush_deltas: bool = False
 
     def store_root(self) -> str:
         return os.path.join(self.dir, "store")
@@ -101,7 +105,8 @@ class EngineDurability:
         self.n_shards = n_shards
         os.makedirs(cfg.dir, exist_ok=True)
         self.store = cfg.make_store()
-        self.flusher = Flusher(self.store, cfg.flush)
+        self.flusher = Flusher(self.store, cfg.flush,
+                               track_deltas=cfg.track_flush_deltas)
         if n_shards is None:
             self.wals = [WriteAheadLog(cfg.wal_path(), sync=cfg.sync_wal)]
         else:

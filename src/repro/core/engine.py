@@ -225,6 +225,7 @@ class Engine:
             "tables": tables,
             "tick": z,
             "throttle_hits": z,
+            "deferred": z,
             "processed": {op.name: z for op in self.wf.operators},
         }
         if self.cfg.telemetry is not None:
@@ -241,6 +242,7 @@ class Engine:
         tables = dict(state["tables"])
         processed = dict(state["processed"])
         throttle_hits = state["throttle_hits"]
+        deferred_total = state["deferred"]
         tick = state["tick"]
         sketch = state.get("sketch")
         outputs: Dict[str, List[EventBatch]] = {}
@@ -304,6 +306,7 @@ class Engine:
                                                tick)
                 emitted_now.extend(ems.items())
                 # hotspot backpressure: re-queue over-budget run tails
+                deferred_total = deferred_total + deferred.count()
                 nq, ovf = q_mod.enqueue(queues[op.name], deferred)
                 queues[op.name] = q_mod.count_drop(nq, ovf)
                 processed[op.name] = processed[op.name] + n
@@ -326,6 +329,7 @@ class Engine:
             "tables": tables,
             "tick": tick + 1,
             "throttle_hits": throttle_hits,
+            "deferred": deferred_total,
             "processed": processed,
         }
         if sketch is not None:
@@ -646,6 +650,7 @@ class Engine:
         return {
             "tick": int(g(state["tick"])),
             "throttle_hits": int(g(state["throttle_hits"])),
+            "deferred": int(g(state["deferred"])),
             "processed": {k: int(g(v))
                           for k, v in state["processed"].items()},
             "queue_dropped": {k: int(g(q.dropped))

@@ -44,6 +44,12 @@ class Mapper(Operator):
     """Stateless. ``map_batch`` must be jax-traceable and respect
     ``batch.valid`` (emitted batches carry their own validity masks)."""
 
+    # FLOP-heavy stages (model inference, repro/ml) set this so the
+    # planner's fusion pass keeps them behind their own queue hop: fusing
+    # a matmul-bound stage into a neighboring field map would hide its
+    # backpressure from telemetry and couple its latency to cheap stages.
+    flop_heavy: bool = False
+
     def map_batch(self, batch: EventBatch) -> Dict[str, EventBatch]:
         raise NotImplementedError
 
@@ -85,9 +91,21 @@ class AssociativeUpdater(Updater):
     gather/merge/scatter.  Declaring it for a non-additive updater is a
     correctness bug, not a slowdown.  Updaters that emit downstream
     events keep the generic path (emissions need old/new slates).
+
+    ``monoid`` generalizes the same contract to other elementwise
+    monoids the fused path implements.  Currently:
+      - "sum": identical to ``sum_mergeable=True``
+      - "max": combine/merge are elementwise ``maximum`` of every leaf,
+        all leaf values are **non-negative** (so the zero ``init_slate``
+        and zeroed padding rows are the identity), and values stay exact
+        in f32 lanes.  Max is idempotent, which buys exactness under
+        at-least-once replay for free (repro/ml's ``semantic_topk`` is
+        built on this).
+    Leave it "" for updaters with a general combine.
     """
 
     sum_mergeable: bool = False
+    monoid: str = ""
 
     def lift(self, batch: EventBatch):
         """EventBatch -> delta pytree with leading dim B."""

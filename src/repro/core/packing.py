@@ -11,13 +11,17 @@ Pack/unpack are pure reshape/concat/cast ops, so under jit XLA fuses
 them into the surrounding gather/scatter — the kernel's
 ``input_output_aliases`` donation chain stays intact through the tick.
 
-Contract (``AssociativeUpdater.sum_mergeable``): the packed
-representation is only sound when ``combine`` and ``merge`` are both
-elementwise float additions of every leaf and a fresh slate is all
-zeros; then a segmented sum of packed deltas scatter-added into the
-packed table is exactly ``merge(slate, combine(...))``.  Integer leaves
-(e.g. counters) ride in f32 lanes — exact up to 2**24, the same bound a
-float32 "sum" column already has.
+Contract (``AssociativeUpdater.sum_mergeable`` / ``monoid``): the packed
+representation is only sound when ``combine`` and ``merge`` are the same
+elementwise monoid on every leaf and a fresh slate is all zeros — the
+monoid's identity.  For "sum" a segmented sum of packed deltas
+scatter-added into the packed table is exactly
+``merge(slate, combine(...))``; for "max" (non-negative leaves only, so
+zero *is* the identity — including the zero pad columns this layer
+appends) a segmented max scatter-maxed in is exact *and* bitwise
+order-independent.  Integer leaves (e.g. counters, packed score|id
+words from repro/ml) ride in f32 lanes — exact up to 2**24, the same
+bound a float32 "sum" column already has.
 """
 from __future__ import annotations
 

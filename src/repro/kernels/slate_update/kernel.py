@@ -22,19 +22,22 @@ from jax.experimental.pallas import tpu as pltpu
 
 
 def _slate_kernel(keys_ref, deltas_ref, slots_ref, table_in_ref,
-                  table_ref, *, B: int, steps: int):
+                  table_ref, *, B: int, steps: int, op: str):
     keys = keys_ref[...]                        # [B] sorted, sink=int32max
     vals = deltas_ref[...].astype(jnp.float32)  # [B, D]
 
-    # segmented inclusive prefix sum (doubling): vals[i] accumulates the
-    # run prefix ending at i
+    # segmented inclusive prefix combine (doubling): vals[i] accumulates
+    # the run prefix ending at i.  For "max" the masked-out lanes inject
+    # 0.0, the identity on the kernel's non-negative max domain.
     for d in range(steps):
         sh = 1 << d
         rolled = pltpu.roll(vals, sh, 0)
         same = keys == pltpu.roll(keys, sh, 0)
         idx = jax.lax.broadcasted_iota(jnp.int32, (B,), 0)
         ok = (idx >= sh) & same
-        vals = vals + jnp.where(ok[:, None], rolled, 0.0)
+        contrib = jnp.where(ok[:, None], rolled, 0.0)
+        vals = jnp.maximum(vals, contrib) if op == "max" \
+            else vals + contrib
 
     # scatter run totals into slate rows (read-modify-write)
     def body(i, _):
@@ -44,8 +47,11 @@ def _slate_kernel(keys_ref, deltas_ref, slots_ref, table_in_ref,
         def _():
             row = pl.load(table_ref, (pl.dslice(slot, 1), slice(None)))
             total = jax.lax.dynamic_slice_in_dim(vals, i, 1, 0)
+            total = total.astype(table_ref.dtype)
+            merged = jnp.maximum(row, total) if op == "max" \
+                else row + total
             pl.store(table_ref, (pl.dslice(slot, 1), slice(None)),
-                     row + total.astype(table_ref.dtype))
+                     merged)
         return 0
 
     jax.lax.fori_loop(0, B, body, 0)
@@ -55,15 +61,19 @@ def supported(deltas) -> bool:
     return deltas.ndim == 2 and deltas.shape[1] % 8 == 0
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit, static_argnames=("interpret", "op"))
 def slate_update(keys_sorted, deltas, slots, table_vals, *,
-                 interpret: bool = False):
+                 interpret: bool = False, op: str = "sum"):
     """keys_sorted: [B] int32 (invalid rows = int32.max, sorted);
     deltas: [B, D]; slots: [B] int32 (slate row for run-LAST rows, -1
-    elsewhere); table_vals: [C, D].  Returns updated table_vals."""
+    elsewhere); table_vals: [C, D].  ``op`` is the elementwise combine
+    monoid: "sum" or "max" (non-negative domain — 0 is the identity
+    injected for masked lanes).  Returns updated table_vals."""
+    if op not in ("sum", "max"):
+        raise ValueError(f"unknown slate_update op {op!r}")
     B, D = deltas.shape
     steps = max((B - 1).bit_length(), 1)
-    kernel = functools.partial(_slate_kernel, B=B, steps=steps)
+    kernel = functools.partial(_slate_kernel, B=B, steps=steps, op=op)
     return pl.pallas_call(
         kernel,
         in_specs=[

@@ -14,15 +14,15 @@ from repro.kernels.slate_update import ref as _ref
 
 
 def slate_update(keys_sorted, deltas, slots, table_vals, *,
-                 impl: str = "auto"):
+                 impl: str = "auto", op: str = "sum"):
     if impl == "auto":
         impl = "pallas" if jax.default_backend() == "tpu" else "ref"
     if impl in ("pallas", "interpret"):
         from repro.kernels.slate_update import kernel as _k
         if _k.supported(deltas):
             return _k.slate_update(keys_sorted, deltas, slots, table_vals,
-                                   interpret=(impl == "interpret"))
+                                   interpret=(impl == "interpret"), op=op)
         impl = "ref"
     if impl != "ref":
         raise ValueError(f"unknown slate_update impl {impl!r}")
-    return _ref.slate_update(keys_sorted, deltas, slots, table_vals)
+    return _ref.slate_update(keys_sorted, deltas, slots, table_vals, op=op)

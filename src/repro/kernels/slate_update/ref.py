@@ -5,24 +5,36 @@ import jax
 import jax.numpy as jnp
 
 
-def run_totals(keys_sorted, deltas):
+def run_totals(keys_sorted, deltas, *, op: str = "sum"):
     """[B] sorted keys + [B, D] deltas -> [B, D] f32 where every row
     holds its run's total (shared by the oracle below and the fused
-    jnp backend in core/apply.py)."""
+    jnp backend in core/apply.py).  ``op`` picks the elementwise
+    monoid: "sum" (segment sum) or "max" (segment max over the
+    non-negative domain, so empty-segment fill never leaks)."""
     seg_start = jnp.concatenate([
         jnp.ones((1,), bool), keys_sorted[1:] != keys_sorted[:-1]])
     seg_ids = jnp.cumsum(seg_start.astype(jnp.int32)) - 1
-    totals = jax.ops.segment_sum(deltas.astype(jnp.float32), seg_ids,
-                                 num_segments=keys_sorted.shape[0])
+    if op == "max":
+        totals = jax.ops.segment_max(deltas.astype(jnp.float32), seg_ids,
+                                     num_segments=keys_sorted.shape[0])
+        totals = jnp.maximum(totals, 0.0)   # unused segments fill -inf
+    elif op == "sum":
+        totals = jax.ops.segment_sum(deltas.astype(jnp.float32), seg_ids,
+                                     num_segments=keys_sorted.shape[0])
+    else:
+        raise ValueError(f"unknown run_totals op {op!r}")
     return totals[seg_ids]
 
 
-def slate_update(keys_sorted, deltas, slots, table_vals):
-    """Segment totals of sorted (key, delta) runs added into
-    table_vals[slot] for run-last rows (slot >= 0)."""
-    totals = run_totals(keys_sorted, deltas)
+def slate_update(keys_sorted, deltas, slots, table_vals, *,
+                 op: str = "sum"):
+    """Segment totals of sorted (key, delta) runs merged into
+    table_vals[slot] for run-last rows (slot >= 0): added for op="sum",
+    elementwise-maxed for op="max"."""
+    totals = run_totals(keys_sorted, deltas, op=op)
     ok = slots >= 0
     safe = jnp.where(ok, slots, table_vals.shape[0])
-    return table_vals.at[safe].add(
-        jnp.where(ok[:, None], totals, 0.0).astype(table_vals.dtype),
-        mode="drop")
+    masked = jnp.where(ok[:, None], totals, 0.0).astype(table_vals.dtype)
+    if op == "max":
+        return table_vals.at[safe].max(masked, mode="drop")
+    return table_vals.at[safe].add(masked, mode="drop")

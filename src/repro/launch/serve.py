@@ -232,7 +232,7 @@ class ServingEngine:
             queue_peak=np.asarray([len(self.queue)]),
             dropped=np.asarray([self.shed]),
             occupancy=np.asarray([int(self.active.sum())]),
-            active=[0])
+            active=[0], shed=np.asarray([self.shed]))
 
     def status_server(self, port: int = 0):
         """Live HTTP introspection while serving (the stream engine's

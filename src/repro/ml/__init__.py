@@ -1,0 +1,25 @@
+"""Streaming-ML subsystem (DESIGN.md section 16): model-backed stages
+compiled into the unchanged MapUpdate engine.
+
+- :class:`ModelMapper` — microbatched device inference as a mapper
+  stage (``models/lm.py`` forward inside the jitted tick; params are
+  device-resident constants uploaded once).
+- :class:`SemanticTopK` / :class:`Personalization` — online updaters
+  over the emitted embeddings.  ``SemanticTopK`` is an elementwise-max
+  associative updater, so it rides the fused ``kernels/slate_update``
+  path, stays durable, and remains hot-key-splittable.
+- :mod:`repro.ml.serve_app` — the LM-serving loop as a MapUpdate app
+  (admission source -> prefill/decode mapper -> per-request slate).
+"""
+from repro.ml.mapper import ModelMapper
+from repro.ml.rankers import (Personalization, SemanticTopK,
+                              personalization, semantic_topk)
+from repro.ml.serve_app import (LMServeMapper, RequestSlate,
+                                build_serve_app, request_source)
+
+__all__ = [
+    "ModelMapper",
+    "SemanticTopK", "semantic_topk",
+    "Personalization", "personalization",
+    "LMServeMapper", "RequestSlate", "build_serve_app", "request_source",
+]

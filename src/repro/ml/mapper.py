@@ -1,0 +1,130 @@
+"""ModelMapper: microbatched device inference as a MapUpdate stage.
+
+The paper's mappers are cheap field transforms; real fast-data apps
+(Twitter's related-query pipeline, e-commerce ranking) run a *model*
+per event.  ``ModelMapper`` is that stage: token events in, embeddings
+or class scores out, with the full ``models/lm.py`` stack (attention /
+MLA / MoE / mamba2 / xlstm per the config) executing inside the jitted
+tick.
+
+Three engine-facing properties (DESIGN.md section 16.1):
+
+- **Param residency.**  Parameters are ``jax.device_put`` once at
+  construction and closed over by ``map_batch`` — XLA interns them as
+  device-resident constants of the compiled tick, so steady-state ticks
+  move no weights (the ``StateHandle`` pattern applied to read-only
+  state).
+- **Bucket compilation.**  The event batch is padded to a multiple of
+  ``bucket`` and inference runs as ``lax.map`` over ``[bucket, S]``
+  microbatches: one compiled inference shape regardless of engine batch
+  size, bounded peak activation memory.  Every per-event output depends
+  only on its own row (attention mixes positions *within* a row, never
+  across rows), so pad rows are exact no-ops and slicing back to the
+  true capacity loses nothing — the bucket-padding parity test pins
+  this.
+- **Fusion cost tag.**  ``flop_heavy = True`` tells the planner's
+  fusion pass this is not a cheap field map: the stage keeps its own
+  queue hop so its backpressure stays visible to telemetry and overflow
+  policies (DESIGN.md section 16.3).
+
+Output specs are inferred by the planner's existing ``jax.eval_shape``
+path (``trace_out_streams``); subclass-API users call :meth:`bind`.
+"""
+from __future__ import annotations
+
+from typing import Dict, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.event import EventBatch, spec_of
+from repro.core.operators import Mapper
+from repro.models import lm
+from repro.models.context import Ctx
+
+
+class ModelMapper(Mapper):
+    """Run a ``models/lm.py`` model over a token field of each event.
+
+    ``mode="embed"`` emits ``{"emb": [D] f32}`` — the masked mean of
+    the final hidden states over non-pad positions (token 0 = padding).
+    ``mode="classify"`` adds a linear head and emits
+    ``{"cls": [] i32, "score": [] f32}`` (argmax class + its logit).
+    Fields named in ``keep`` are passed through from the input event.
+    """
+
+    flop_heavy = True
+    trace_out_streams = True
+
+    def __init__(self, cfg, params=None, *, field: str = "tokens",
+                 out: str = "scored", mode: str = "embed",
+                 n_classes: int = 0, bucket: int = 8,
+                 keep: Sequence[str] = (), name: str = "model_mapper",
+                 seed: int = 0):
+        if mode not in ("embed", "classify"):
+            raise ValueError(f"unknown ModelMapper mode {mode!r}")
+        if mode == "classify" and n_classes <= 0:
+            raise ValueError("mode='classify' needs n_classes > 0")
+        self.model = lm.build(cfg)
+        self.cfg = cfg
+        self.field = field
+        self.out = out
+        self.mode = mode
+        self.bucket = int(bucket)
+        self.keep = tuple(keep)
+        self.name = name
+        self.subscribes = ()
+        self.out_streams = {}
+        self.in_value_spec = {}
+        key = jax.random.PRNGKey(seed)
+        if params is None:
+            params, _ = lm.init(self.model, key)
+        # uploaded once; closed over below = compiled-in device constant
+        self._params = jax.device_put(params)
+        self._head = None
+        if mode == "classify":
+            hk = jax.random.fold_in(key, 1)
+            w = jax.random.normal(hk, (cfg.d_model, n_classes),
+                                  jnp.float32) / jnp.sqrt(cfg.d_model)
+            self._head = jax.device_put(w)
+
+    # ---- inference over one [bucket, S] microbatch ----
+    def _infer(self, toks):
+        # f32 compute: the stream engine's slates are f32 and the parity
+        # contract (fused vs generic, pre vs post recovery) is bitwise
+        ctx = Ctx(phase="train", positions=lm._positions(toks.shape),
+                  cdtype=jnp.float32)
+        hidden, _, _ = lm.forward(self.model, self._params, toks, ctx,
+                                  remat=False)
+        pad_mask = (toks != 0).astype(hidden.dtype)        # 0 = pad
+        denom = jnp.maximum(pad_mask.sum(-1, keepdims=True), 1.0)
+        return (hidden * pad_mask[..., None]).sum(axis=1) / denom
+
+    def map_batch(self, batch: EventBatch) -> Dict[str, EventBatch]:
+        toks = batch.value[self.field].astype(jnp.int32)   # [B, S]
+        B, S = toks.shape
+        nb = -(-B // self.bucket)
+        padded = jnp.pad(toks, ((0, nb * self.bucket - B), (0, 0)))
+        emb = jax.lax.map(self._infer, padded.reshape(nb, self.bucket, S))
+        emb = emb.reshape(nb * self.bucket, -1)[:B]        # [B, D]
+        if self.mode == "embed":
+            value = {"emb": emb}
+        else:
+            logits = emb @ self._head                      # [B, n_cls]
+            value = {"cls": jnp.argmax(logits, -1).astype(jnp.int32),
+                     "score": jnp.max(logits, -1)}
+        for f in self.keep:
+            value[f] = batch.value[f]
+        out = EventBatch(sid=batch.sid, ts=batch.ts + 1, key=batch.key,
+                         value=value, valid=batch.valid)
+        return {self.out: out}
+
+    # ---- subclass-API spec binding (the planner does this itself via
+    #      trace_out_streams for app.add()-wired instances) ----
+    def bind(self, in_value_spec) -> "ModelMapper":
+        from repro.api.planner import abstract_batch
+        self.in_value_spec = in_value_spec
+        res = jax.eval_shape(self.map_batch,
+                             abstract_batch(in_value_spec))
+        self.out_streams = {s: spec_of(b.value) for s, b in res.items()}
+        return self

@@ -1,0 +1,199 @@
+"""Online rankers over streamed model outputs (DESIGN.md section 16.2).
+
+``SemanticTopK`` — per-key top-k by model score as an *associative*
+updater with a real elementwise-max combine, so it rides the fused
+``kernels/slate_update`` path (packed f32 lanes, in-place scatter),
+stays durable through the flush/WAL machinery unchanged, and remains
+hot-key-splittable (max is commutative, associative, and idempotent —
+partial merges and at-least-once replay are exact, not approximate).
+
+The slate is a slotted max-sketch: item ids hash to one of ``n_slots``
+columns; each column holds one f32 word packing
+``quantized_score * 2^ITEM_BITS + (item mod 2^ITEM_BITS)`` — score in
+the high bits so elementwise max keeps, per column, the best-scoring
+item seen.  SCORE_BITS + ITEM_BITS <= 24 keeps every word exact in a
+f32 lane (the packing contract, ``core/packing.py``).  Two items
+hashing to one column keep only the better one — sketch semantics, the
+price of an O(1)-merge top-k; scores are quantized to SCORE_BITS by
+construction.  Because f32 max is order-independent, fused vs generic
+execution is *bitwise* identical (the parity contract tier-1 tests pin).
+
+``Personalization`` — per-user EMA embedding + re-scored candidate
+slate.  Order-sensitive (the EMA and the rescoring depend on arrival
+order), so it runs on the sequential padded-run path; its slate carries
+a wide ``[k, D]`` float leaf — the wide-value case the packing/flush
+layers must round-trip.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.operators import AssociativeUpdater, SequentialUpdater
+
+SCORE_BITS = 14   # score quantization levels (high bits)
+ITEM_BITS = 10    # item id space per packed word (low bits)
+# SCORE_BITS + ITEM_BITS <= 24: packed words stay exact in f32 lanes
+
+
+def pack_word(score, item):
+    """(score in [0,1), item id) -> nonneg f32-exact word; elementwise
+    max over words ranks by quantized score, tie-broken by item id."""
+    q = jnp.clip(jnp.floor(score * (1 << SCORE_BITS)), 0.0,
+                 float((1 << SCORE_BITS) - 1))
+    low = (item & ((1 << ITEM_BITS) - 1)).astype(jnp.float32)
+    return q * (1 << ITEM_BITS) + low
+
+
+def unpack_word(word: float) -> Tuple[int, float]:
+    """Packed word -> (item id mod 2^ITEM_BITS, quantized score)."""
+    w = int(word)
+    return w & ((1 << ITEM_BITS) - 1), (w >> ITEM_BITS) / (1 << SCORE_BITS)
+
+
+class SemanticTopK(AssociativeUpdater):
+    """Per-key top-k (item, model score) as an elementwise-max slate.
+
+    Score per event, in ranking priority: ``score_fn(value) -> [B]``,
+    else ``value[score_field]``, else the default embedding score
+    ``sigmoid(mean(value[emb_field]))`` — all expected in [0, 1).
+    Item ids must be positive (0 marks an empty column on read).
+    """
+
+    monoid = "max"
+
+    def __init__(self, name: str = "semantic_topk", *, k: int = 8,
+                 n_slots: int = 32, item_field: str = "item",
+                 emb_field: str = "emb",
+                 score_field: Optional[str] = None, score_fn=None,
+                 table_capacity: int = 4096, ttl: int = 0):
+        if k > n_slots:
+            raise ValueError(f"k={k} > n_slots={n_slots}")
+        self.name = name
+        self.k = int(k)
+        self.n_slots = int(n_slots)
+        self.item_field = item_field
+        self.emb_field = emb_field
+        self.score_field = score_field
+        self.score_fn = score_fn
+        self.table_capacity = table_capacity
+        self.ttl = ttl
+        self.subscribes = ()
+        self.out_streams = {}
+
+    def slate_spec(self):
+        return {"cells": ((self.n_slots,), jnp.float32)}
+
+    def _scores(self, value):
+        if self.score_fn is not None:
+            return self.score_fn(value)
+        if self.score_field is not None:
+            return value[self.score_field].astype(jnp.float32)
+        return jax.nn.sigmoid(
+            jnp.mean(value[self.emb_field].astype(jnp.float32), axis=-1))
+
+    def lift(self, batch):
+        item = batch.value[self.item_field].astype(jnp.int32)
+        word = pack_word(self._scores(batch.value), item)   # [B]
+        col = jnp.mod(item, self.n_slots)
+        hot = col[:, None] == jnp.arange(self.n_slots,
+                                         dtype=jnp.int32)[None, :]
+        return {"cells": jnp.where(hot, word[:, None], 0.0)}
+
+    def combine(self, a, b):
+        return {"cells": jnp.maximum(a["cells"], b["cells"])}
+
+    merge = combine
+
+    # ---- host-side read path ----
+    def top(self, slate, k: Optional[int] = None
+            ) -> List[Tuple[int, float]]:
+        """Slate row -> [(item, score)] best-first (item ids are modulo
+        2^ITEM_BITS; empty columns are skipped)."""
+        cells = np.asarray(slate["cells"])
+        out = []
+        for w in sorted(cells, reverse=True)[:(k or self.k)]:
+            if w <= 0:
+                break
+            out.append(unpack_word(w))
+        return out
+
+
+class Personalization(SequentialUpdater):
+    """Per-user slate: EMA user embedding + re-scored candidate items.
+
+    Each event carries an item id (> 0) and its model embedding
+    ``[D]``.  The step folds the embedding into the user's EMA profile,
+    then re-scores the stored candidates *plus* the new item against
+    the updated profile (dot product) and keeps the top ``k`` — so
+    earlier candidates are re-ranked as the user's taste drifts.
+    Duplicate item arrivals replace their old entry.
+    """
+
+    def __init__(self, name: str = "personalization", *, d: int,
+                 k: int = 4, alpha: float = 0.2,
+                 item_field: str = "item", emb_field: str = "emb",
+                 table_capacity: int = 4096, ttl: int = 0,
+                 max_run: int = 32):
+        self.name = name
+        self.d = int(d)
+        self.k = int(k)
+        self.alpha = float(alpha)
+        self.item_field = item_field
+        self.emb_field = emb_field
+        self.table_capacity = table_capacity
+        self.ttl = ttl
+        self.max_run = max_run
+        self.subscribes = ()
+        self.out_streams = {}
+
+    def slate_spec(self):
+        return {"user": ((self.d,), jnp.float32),
+                "items": ((self.k,), jnp.int32),
+                "cand": ((self.k, self.d), jnp.float32),   # wide leaf
+                "scores": ((self.k,), jnp.float32),
+                "n": ((), jnp.int32)}
+
+    def step(self, slate, ev):
+        emb = ev["value"][self.emb_field].astype(jnp.float32)   # [D]
+        item = ev["value"][self.item_field].astype(jnp.int32)
+        first = slate["n"] == 0
+        user = jnp.where(first, emb,
+                         (1.0 - self.alpha) * slate["user"]
+                         + self.alpha * emb)
+        cand = jnp.concatenate([slate["cand"], emb[None]], 0)  # [k+1, D]
+        items = jnp.concatenate([slate["items"], item[None]])  # [k+1]
+        live = items > 0
+        # a re-seen item drops its stored copy in favor of the new one
+        live = live & ~((items == item)
+                        & (jnp.arange(self.k + 1) < self.k))
+        scores = jnp.where(live, cand @ user, -jnp.inf)
+        order = jnp.argsort(-scores)[:self.k]
+        sel = jnp.isfinite(scores[order])
+        new = {
+            "user": user,
+            "items": jnp.where(sel, items[order], 0),
+            "cand": jnp.where(sel[:, None], cand[order], 0.0),
+            "scores": jnp.where(sel, scores[order], 0.0),
+            "n": slate["n"] + 1,
+        }
+        return new, {}
+
+    # ---- host-side read path ----
+    def ranked(self, slate) -> List[Tuple[int, float]]:
+        items = np.asarray(slate["items"])
+        scores = np.asarray(slate["scores"])
+        return [(int(i), float(s)) for i, s in zip(items, scores)
+                if i > 0]
+
+
+def semantic_topk(name: str = "semantic_topk", **kw) -> SemanticTopK:
+    return SemanticTopK(name, **kw)
+
+
+def personalization(name: str = "personalization", **kw
+                    ) -> Personalization:
+    return Personalization(name, **kw)

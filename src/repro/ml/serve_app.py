@@ -1,0 +1,195 @@
+"""The LM-serving loop as a MapUpdate application (DESIGN.md 16.4).
+
+``launch/serve.py`` drives continuous-batching decode with a hand-rolled
+host loop; this module expresses the same workload *through the stream
+engine*: an admission source feeds request events, a FLOP-heavy mapper
+runs prefill + greedy decode (one ``lm.prefill`` then a ``lax.scan`` of
+``lm.decode_step`` per microbatch, same model fns and bf16 compute as
+``ServingEngine``), and a per-request associative slate keeps the
+generated tokens — durable, queryable over the slate HTTP server, and
+visible to the telemetry registry like any other updater.
+
+The request slate merges by elementwise max (``monoid="max"``): exactly
+one event per request id ever reaches it, token ids are non-negative
+and < vocab < 2**24, so the fused path applies, and idempotent max
+makes at-least-once WAL replay after a crash bitwise-exact.
+
+Requests pad their prompt to a static ``prompt_len``; pad positions sit
+behind the causal mask at the last real position and past the decode
+frontier afterwards, so they never influence a generated token — which
+is what makes token-level parity with the direct ``ServingEngine`` loop
+checkable (``examples/serve_lm.py``).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.app import App
+from repro.core.event import EventBatch, spec_of
+from repro.core.operators import AssociativeUpdater, Mapper
+from repro.models import lm
+from repro.models.context import Ctx
+
+
+class LMServeMapper(Mapper):
+    """prefill + greedy decode for a whole request inside one tick.
+
+    Consumes ``{"prompt": [S] i32 (0-padded), "len": [] i32}`` events
+    keyed by request id; emits ``{"tokens": [max_new] i32}`` onto
+    ``out``.  Microbatched like :class:`~repro.ml.mapper.ModelMapper`
+    (``bucket`` requests per compiled inference shape)."""
+
+    flop_heavy = True
+    trace_out_streams = True
+
+    def __init__(self, cfg, params=None, *, max_new: int = 16,
+                 cache_len: int = 128, bucket: int = 4,
+                 out: str = "generated", name: str = "lm_generate",
+                 seed: int = 0):
+        self.model = lm.build(cfg)
+        self.cfg = cfg
+        self.max_new = int(max_new)
+        self.cache_len = int(cache_len)
+        self.bucket = int(bucket)
+        self.out = out
+        self.name = name
+        self.subscribes = ()
+        self.out_streams = {}
+        self.in_value_spec = {}
+        if params is None:
+            params, _ = lm.init(self.model, jax.random.PRNGKey(seed))
+        self._params = jax.device_put(params)   # uploaded once
+
+    def _generate(self, args):
+        toks, length = args                     # [b, S], [b]
+        b, S = toks.shape
+        # bf16 compute — the same Ctx the ServingEngine's cells use, so
+        # the parity smoke in examples/serve_lm.py compares like to like
+        ctx = Ctx(cdtype=jnp.bfloat16)
+        logits, states = lm.prefill(self.model, self._params,
+                                    {"tokens": toks}, ctx,
+                                    self.cache_len, full_logits=True)
+        last = jnp.clip(length - 1, 0, S - 1)
+        tok0 = jnp.argmax(logits[jnp.arange(b), last], -1)
+        tok0 = tok0.astype(jnp.int32)
+        cur = jnp.clip(length, 1, S).astype(jnp.int32)
+
+        def dec(carry, _):
+            t, st, ci = carry
+            lg, st = lm.decode_step(self.model, self._params, t, st,
+                                    ci, ctx)
+            nxt = jnp.argmax(lg[:, -1], -1).astype(jnp.int32)
+            return (nxt[:, None], st, ci + 1), nxt
+
+        _, rest = jax.lax.scan(dec, (tok0[:, None], states, cur), None,
+                               length=self.max_new - 1)
+        return jnp.concatenate([tok0[:, None], rest.T], 1)  # [b, max_new]
+
+    def map_batch(self, batch: EventBatch) -> Dict[str, EventBatch]:
+        toks = batch.value["prompt"].astype(jnp.int32)      # [B, S]
+        length = batch.value["len"].astype(jnp.int32)       # [B]
+        B, S = toks.shape
+        nb = -(-B // self.bucket)
+        pad = nb * self.bucket - B
+        mb_toks = jnp.pad(toks, ((0, pad), (0, 0))) \
+            .reshape(nb, self.bucket, S)
+        mb_len = jnp.pad(length, (0, pad)).reshape(nb, self.bucket)
+        gen = jax.lax.map(self._generate, (mb_toks, mb_len))
+        gen = gen.reshape(nb * self.bucket, self.max_new)[:B]
+        out = EventBatch(sid=batch.sid, ts=batch.ts + 1, key=batch.key,
+                         value={"tokens": gen}, valid=batch.valid)
+        return {self.out: out}
+
+    def bind(self, in_value_spec) -> "LMServeMapper":
+        from repro.api.planner import abstract_batch
+        self.in_value_spec = in_value_spec
+        res = jax.eval_shape(self.map_batch,
+                             abstract_batch(in_value_spec))
+        self.out_streams = {s: spec_of(b.value) for s, b in res.items()}
+        return self
+
+
+class RequestSlate(AssociativeUpdater):
+    """One slate per request id: the generated token block.
+
+    Elementwise-max mergeable (one event per rid, non-negative token
+    ids < 2**24): rides the fused path and replays idempotently."""
+
+    monoid = "max"
+
+    def __init__(self, name: str = "requests", *, max_new: int,
+                 table_capacity: int = 4096, ttl: int = 0):
+        self.name = name
+        self.max_new = int(max_new)
+        self.table_capacity = table_capacity
+        self.ttl = ttl
+        self.subscribes = ()
+        self.out_streams = {}
+
+    def slate_spec(self):
+        return {"tokens": ((self.max_new,), jnp.int32),
+                "n": ((), jnp.int32)}
+
+    def lift(self, batch):
+        toks = batch.value["tokens"].astype(jnp.int32)
+        return {"tokens": toks,
+                "n": jnp.full(toks.shape[:1], self.max_new, jnp.int32)}
+
+    def combine(self, a, b):
+        return jax.tree.map(jnp.maximum, a, b)
+
+    merge = combine
+
+
+def build_serve_app(cfg, params=None, *, prompt_len: int = 32,
+                    max_new: int = 16, cache_len: int = 128,
+                    bucket: int = 4, name: str = "serve_lm",
+                    table_capacity: int = 4096) -> App:
+    """requests source -> LMServeMapper -> per-request slate, as an App.
+
+    Drive with :func:`request_source` and ``App.run``; read results via
+    ``app.read_slate("requests", rid)`` (or the HTTP slate server)."""
+    app = App(name)
+    app.source("requests", {"prompt": ((prompt_len,), jnp.int32),
+                            "len": ((), jnp.int32)})
+    app.add(LMServeMapper(cfg, params, max_new=max_new,
+                          cache_len=cache_len, bucket=bucket),
+            subscribes=("requests",))
+    app.stream("generated").update(RequestSlate(
+        "requests", max_new=max_new, table_capacity=table_capacity))
+    return app
+
+
+def request_source(requests: Sequence, *, prompt_len: int,
+                   capacity: int, per_tick: int = 2):
+    """Admission source: feeds up to ``per_tick`` queued requests per
+    tick (respecting the engine's ingest limit — unconsumed requests
+    wait, exactly like ``ServingEngine``'s bounded admission queue).
+    ``requests`` is any sequence with ``.rid`` / ``.prompt`` attributes
+    (e.g. ``launch.serve.Request``)."""
+    pending: List = list(requests)
+    cursor = [0]
+
+    def source_fn(tick, max_events):
+        n = per_tick if not max_events else min(per_tick, int(max_events))
+        take = pending[cursor[0]:cursor[0] + n]
+        cursor[0] += len(take)
+        prompts = np.zeros((capacity, prompt_len), np.int32)
+        lens = np.zeros((capacity,), np.int32)
+        keys = np.zeros((capacity,), np.int32)
+        valid = np.zeros((capacity,), bool)
+        for i, r in enumerate(take):
+            p = np.asarray(r.prompt, np.int32)[:prompt_len]
+            prompts[i, :p.shape[0]] = p
+            lens[i] = p.shape[0]
+            keys[i] = r.rid
+            valid[i] = True
+        return {"requests": EventBatch.of(
+            key=keys, value={"prompt": prompts, "len": lens},
+            ts=np.full(capacity, tick, np.int32), valid=valid)}
+
+    return source_fn

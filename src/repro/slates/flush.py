@@ -132,11 +132,21 @@ class Flusher:
     KV store.  ``flush_table`` is called from the engine driver per the
     policy; ``drain`` joins outstanding work (flush barriers / shutdown)
     and **re-raises** any write error as :class:`FlushError` — a frontier
-    must never advance past a failed store write."""
+    must never advance past a failed store write.
 
-    def __init__(self, store: KVStore, cfg: Optional[FlushConfig] = None):
+    With ``track_deltas`` the flusher also retains a host-side copy of
+    every row it successfully wrote since the last ``drain_deltas()``
+    call — the flush *stream* a :class:`~repro.slates.replica.
+    SlateReplica` consumes to refresh incrementally instead of
+    re-scanning the whole store (DESIGN.md section 15)."""
+
+    def __init__(self, store: KVStore, cfg: Optional[FlushConfig] = None,
+                 *, track_deltas: bool = False):
         self.store = store
         self.cfg = cfg or FlushConfig()
+        self.track_deltas = track_deltas
+        self._deltas: dict = {}          # updater -> {key: (ts, slate)}
+        self._dlock = threading.Lock()
         self._q: pyqueue.Queue = pyqueue.Queue()
         self._thread = threading.Thread(target=self._loop, daemon=True)
         self._thread.start()
@@ -155,10 +165,29 @@ class Flusher:
                                     zip(keys.tolist(), rows),
                                     ts=ts.tolist(), ttl=ttl)
                 self.store.flush()
+                if self.track_deltas:
+                    # recorded only after the write landed: a delta the
+                    # replica merges is always durably in the store too
+                    with self._dlock:
+                        d = self._deltas.setdefault(updater, {})
+                        for k, t, row in zip(keys.tolist(), ts.tolist(),
+                                             rows):
+                            old = d.get(k)
+                            if old is None or old[0] <= t:
+                                d[k] = (t, row)
             except Exception as e:
                 self.errors.append(e)
             finally:
                 self._q.task_done()
+
+    def drain_deltas(self) -> dict:
+        """Hand off (and clear) the rows written since the last call:
+        ``{updater: {key: (ts, slate)}}``, newest write per key.  Call
+        after ``drain()`` (a flush barrier) so the handoff covers every
+        row at the frontier."""
+        with self._dlock:
+            d, self._deltas = self._deltas, {}
+        return d
 
     def should_flush(self, tick: int, table: tbl.SlateTable) -> bool:
         p = self.cfg.policy

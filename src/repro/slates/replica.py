@@ -140,12 +140,15 @@ class SlateReplica:
     """
 
     def __init__(self, store, workflow, *,
-                 max_staleness_ticks: int = 64):
+                 max_staleness_ticks: int = 64, flusher=None):
         if max_staleness_ticks < 0:
             raise ValueError("max_staleness_ticks must be >= 0")
         self.store = store
         self.wf = workflow
         self.max_staleness_ticks = max_staleness_ticks
+        # a delta-tracking Flusher: refresh merges its flush stream
+        # instead of re-scanning the store (first refresh still scans)
+        self.flusher = flusher
         self._snap: Dict[str, Dict[int, tuple]] = {}
         self._tick = -1                      # no snapshot yet
         self._lock = threading.Lock()
@@ -165,16 +168,41 @@ class SlateReplica:
         when driving from a raw store).  TTL-bearing updaters are
         scanned with ``now=tick`` so rows the engine would have expired
         never enter the snapshot.  Returns the number of rows held.
+
+        With a delta-tracking ``flusher`` attached, refreshes after the
+        first merge the flush stream (``drain_deltas``) into the held
+        snapshot — newest write tick wins, TTL-expired rows are pruned
+        — instead of re-reading every store segment; byte-for-byte the
+        same snapshot a full scan at the frontier would build (the
+        store applies the identical newest-wins rule at merge time).
+        Call at flush barriers (after ``Flusher.drain``) so the delta
+        handoff is complete at the frontier.
         """
         if tick is None:
             tick = int(frontier.tick) if frontier is not None else 0
+        deltas = self.flusher.drain_deltas() \
+            if self.flusher is not None else {}
+        with self._lock:
+            base, base_tick = self._snap, self._tick
         snap: Dict[str, Dict[int, tuple]] = {}
         rows = 0
         for up in self.wf.updaters():
-            recs = self.store.scan_records(
-                up.name, now=tick if up.ttl else None)
-            snap[up.name] = recs
-            rows += len(recs)
+            if self.flusher is None or base_tick < 0:
+                # cold start (or no flush stream): full store scan;
+                # drained deltas are already reflected in the scan
+                cur = self.store.scan_records(
+                    up.name, now=tick if up.ttl else None)
+            else:
+                cur = dict(base.get(up.name, {}))
+                for k, rec in deltas.get(up.name, {}).items():
+                    old = cur.get(k)
+                    if old is None or old[0] <= rec[0]:
+                        cur[k] = rec
+                if up.ttl:
+                    cur = {k: rec for k, rec in cur.items()
+                           if tick - rec[0] <= up.ttl}
+            snap[up.name] = cur
+            rows += len(cur)
         with self._lock:
             self._snap = snap
             self._tick = int(tick)

@@ -72,6 +72,11 @@ class TelemetryReport:
     # trailing fields default so older constructors stay valid
     window_s: float = 0.0         # wall seconds since the last observe
     migration_bytes_moved: float = 0.0  # EMA of bytes per reconfigure
+    # overload visibility (DESIGN.md section 16): shed = ingest dropped
+    # at admission (throttle hits / shed requests), deferred = run tails
+    # re-queued by sequential hotspot backpressure — both this window
+    shed_delta: Any = 0.0         # [n_shards] when the engine reports it
+    deferred_delta: Any = 0.0
 
     def to_dict(self) -> Dict[str, Any]:
         """JSON-safe form (the HTTP status surface)."""
@@ -108,21 +113,29 @@ class MetricsRegistry:
                     queue_depth: np.ndarray, queue_peak: np.ndarray,
                     dropped: np.ndarray, occupancy: np.ndarray,
                     active: Sequence[int],
-                    heavy: List[Tuple[int, int]] = ()) -> TelemetryReport:
+                    heavy: List[Tuple[int, int]] = (),
+                    shed: Optional[np.ndarray] = None,
+                    deferred: Optional[np.ndarray] = None
+                    ) -> TelemetryReport:
         """Fold one boundary reading (cumulative counters) into the
         window state and return the report.  ``events`` / ``queue_peak``
-        / ``dropped`` are lifetime counters; this diffs them against
-        the previous reading."""
+        / ``dropped`` — and, when given, ``shed`` / ``deferred`` — are
+        lifetime counters; this diffs them against the previous
+        reading."""
         events = np.asarray(events, np.float64)
         queue_depth = np.asarray(queue_depth, np.float64)
         queue_peak = np.asarray(queue_peak, np.float64)
         dropped = np.asarray(dropped, np.float64)
         occupancy = np.asarray(occupancy, np.float64)
+        shed = np.zeros_like(events) if shed is None \
+            else np.asarray(shed, np.float64)
+        deferred = np.zeros_like(events) if deferred is None \
+            else np.asarray(deferred, np.float64)
         n = events.shape[0]
         m = self._mark
         if m is None or m["events"].shape != events.shape:
             m = {"tick": tick, "events": events, "peak": queue_peak,
-                 "dropped": dropped}
+                 "dropped": dropped, "shed": shed, "deferred": deferred}
         if self._ema_ev is None or self._ema_ev.shape != events.shape:
             # EMAs survive a same-shape rebase: only the *window marks*
             # restart at migrations — zeroing smoothed pressure there
@@ -134,6 +147,8 @@ class MetricsRegistry:
         ev_d = np.clip(events - m["events"], 0.0, None)
         peak_d = np.clip(queue_peak - m["peak"], 0.0, None)
         drop_d = np.clip(dropped - m["dropped"], 0.0, None)
+        shed_d = np.clip(shed - m.get("shed", shed), 0.0, None)
+        def_d = np.clip(deferred - m.get("deferred", deferred), 0.0, None)
         # normalized load: throughput share of batch capacity, plus
         # standing backlog and (heavily weighted) drops — a shard at
         # pressure ~1 is saturated, >1 is shedding
@@ -151,7 +166,8 @@ class MetricsRegistry:
         hh = [(k, est, min(1.0, est / norm) if norm else 0.0)
               for k, est in heavy]
         self._mark = {"tick": tick, "events": events, "peak": queue_peak,
-                      "dropped": dropped}
+                      "dropped": dropped, "shed": shed,
+                      "deferred": deferred}
         now = time.perf_counter()
         window_s = (now - self._obs_t) if self._obs_t is not None else 0.0
         self._obs_t = now
@@ -163,7 +179,8 @@ class MetricsRegistry:
             pressure=self._ema_pressure.copy(), heavy_hitters=hh,
             migration_pause_s=self._pause_ema,
             window_s=window_s,
-            migration_bytes_moved=self._bytes_ema)
+            migration_bytes_moved=self._bytes_ema,
+            shed_delta=shed_d, deferred_delta=def_d)
         return self.last
 
     # ---- stream-engine adapter --------------------------------------
@@ -173,11 +190,12 @@ class MetricsRegistry:
         then ``observe_raw``.  Heavy hitters are estimated from the
         state's sketch when present (summed over shards)."""
         (tick, events, qsize, qpeak, dropped, occ, heavy,
-         active) = self._read(engine, state, with_heavy=True)
+         active, shed, deferred) = self._read(engine, state,
+                                              with_heavy=True)
         return self.observe_raw(
             tick=tick, events=events, queue_depth=qsize,
             queue_peak=qpeak, dropped=dropped, occupancy=occ,
-            active=active, heavy=heavy)
+            active=active, heavy=heavy, shed=shed, deferred=deferred)
 
     def _read(self, engine, state, *, with_heavy: bool):
         upd = {u.name for u in engine.wf.updaters()}
@@ -195,6 +213,10 @@ class MetricsRegistry:
         }
         if "exchange_dropped" in state:
             tree["exdrop"] = state["exchange_dropped"]
+        if "throttle_hits" in state:
+            tree["shed"] = state["throttle_hits"]
+        if "deferred" in state:
+            tree["deferred"] = state["deferred"]
         if with_heavy and "sketch" in state:
             tree["sk"] = state["sketch"]
         host = jax.device_get(tree)            # the one boundary sync
@@ -234,9 +256,12 @@ class MetricsRegistry:
         active = getattr(engine, "active_shards", None)
         if active is None:
             active = list(range(events.shape[0]))
+        shed = shards(host["shed"]) if "shed" in host else None
+        deferred = shards(host["deferred"]) if "deferred" in host \
+            else None
         return (tick, events, summed(host["qsize"]),
                 summed(host["qpeak"]), dropped, summed(host["occ"]),
-                heavy, active)
+                heavy, active, shed, deferred)
 
     # ---- window management ------------------------------------------
     def rebase(self, engine, state):
@@ -245,10 +270,13 @@ class MetricsRegistry:
         no report, no heavy-hitter estimation, and the EMAs are left
         untouched (folding an artificial post-drain zero reading into
         them would bias the controller toward premature scale-down)."""
-        tick, events, _, qpeak, dropped, _, _, _ = self._read(
-            engine, state, with_heavy=False)
+        tick, events, _, qpeak, dropped, _, _, _, shed, deferred = \
+            self._read(engine, state, with_heavy=False)
+        z = np.zeros_like(events)
         self._mark = {"tick": tick, "events": events, "peak": qpeak,
-                      "dropped": dropped}
+                      "dropped": dropped,
+                      "shed": z if shed is None else shed,
+                      "deferred": z if deferred is None else deferred}
 
     def note_pause(self, seconds: float, bytes_moved: int = 0):
         """Record a reconfigure pause and the payload it re-homed
