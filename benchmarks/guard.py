@@ -42,7 +42,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 GUARDED = ("latency_per_tick", "tick_dispatch_chunked32",
-           "slate_read_qps", "ml_mapper_throughput")
+           "slate_read_qps", "ml_mapper_throughput",
+           "wal_append_per_tick", "throughput_associative_events")
 ANCHOR = "guard_calibration"
 ROOT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..")
 
@@ -77,6 +78,8 @@ def measure():
     bench.bench_chunked_vs_pertick()
     bench.bench_slate_read()
     bench.bench_ml_mapper_throughput()
+    bench.bench_event_throughput()
+    bench.bench_durability()
     bench.bench_guard_calibration()
     out = {n: u for n, u, _ in bench.ROWS}
     bench.ROWS.clear()

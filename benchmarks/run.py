@@ -208,14 +208,103 @@ def bench_latency():
     b = zipf_batch(rng, 256)
     box = {"state": state}
 
-    def step():
-        box["state"], _ = eng.step(box["state"], {"S1": b})
+    def block():  # 10 ticks per sample: amortizes the timer, and the
+        for _ in range(10):  # block min rides out scheduler company
+            box["state"], _ = eng.step(box["state"], {"S1": b})
 
-    us = _time(step, n=50)
+    us = _time_min(block, n=8, warmup=2) / 10
     depth = 2  # map hop + update hop
     row("latency_per_tick", us,
         f"end-to-end {depth} hops = {depth*us/1e3:.2f} ms "
         f"(paper: < 2000 ms)")
+
+
+def bench_latency_breakdown():
+    """Decompose the durable tick's write path (DESIGN.md section 17):
+    what still sits on the dispatch critical path after pipelining —
+    the jitted tick itself, flush-row packing, the async-WAL hand-off,
+    and the telemetry boundary *begin* — so regressions show up as the
+    component that moved, not just a fatter latency_per_tick.  Runs
+    after bench_durability so the wal row can be quoted against the
+    synchronous wal_append_per_tick it displaced."""
+    from repro.core.durability import DurabilityConfig
+    from repro.core.engine import Engine, EngineConfig
+    from repro.core.packing import pack, pack_spec
+    from repro.core.workflow import Workflow
+    from repro.slates.flush import FlushConfig, FlushPolicy
+    from repro.telemetry.metrics import TelemetryConfig
+    from benchmarks.workloads import CounterUpdater, SourceMapper
+
+    rng = np.random.default_rng(15)
+    b = zipf_batch(rng, 256)
+
+    # dispatch: the jitted tick's execution (the floor everything else
+    # is measured against)
+    eng, state = counting_engine(batch_size=256, queue_capacity=2048)
+    box = {"s": state}
+
+    def step():
+        box["s"], _ = eng.step(box["s"], {"S1": b})
+        jax.block_until_ready(box["s"]["tick"])
+
+    us_d = _time(step, n=50)
+    row("latency_breakdown_dispatch", us_d,
+        "jitted tick execution (map hop + update hop, 256 events)")
+
+    # packing: the flush snapshot's device-side row transform (pack a
+    # 512-slot two-leaf slate tree into its [C, d] buffer)
+    spec = pack_spec({"count": ((), jnp.int32), "sum": ((), jnp.float32)})
+    tree = {"count": jnp.ones((512,), jnp.int32),
+            "sum": jnp.ones((512,), jnp.float32)}
+    jax.block_until_ready(pack(tree, spec))
+    us_p = _time_min(lambda: jax.block_until_ready(pack(tree, spec)),
+                     n=30)
+    row("latency_breakdown_packing", us_p,
+        "flush-row pack of a 512-slot slate tree (chunk-boundary cost)")
+
+    # wal: what durable logging costs the dispatch path now — one
+    # bounded-queue hand-off; the writer drains during device compute
+    # and the epoch fence settles it at the flush boundary
+    sync_us = next((u for n, u, _ in ROWS if n == "wal_append_per_tick"),
+                   None)
+    with tempfile.TemporaryDirectory() as d:
+        wf = Workflow([SourceMapper(), CounterUpdater()],
+                      external_streams=("S1",))
+        de = Engine(wf, EngineConfig(
+            batch_size=256, queue_capacity=2048,
+            durability=DurabilityConfig(
+                dir=d, flush=FlushConfig(policy=FlushPolicy.EVERY_K,
+                                         every_k=8))))
+        tick_box = {"t": 0}
+
+        def enq():
+            de.dur.append(tick_box["t"], {"S1": b})
+            tick_box["t"] += 1
+
+        us_w = _time_min(enq, n=30)
+        de.dur.fence()
+        de.close()
+    vs = f"; sync append was {sync_us:.0f}us" if sync_us else ""
+    row("latency_breakdown_wal", us_w,
+        f"async WAL hand-off on the dispatch path{vs} — the fence, not "
+        f"the tick, pays the write")
+
+    # telemetry: the boundary's critical-path half (tree copy + async
+    # device->host start); the blocking device_get half overlaps the
+    # next chunk (one-chunk report lag)
+    tel_eng, tel_state = counting_engine(
+        batch_size=256, queue_capacity=2048,
+        telemetry=TelemetryConfig(impl="ref"))
+    for t in range(4):
+        tel_state, _ = tel_eng.step(tel_state, {"S1": b})
+    jax.block_until_ready(tel_state["tick"])
+    reg = tel_eng.telemetry
+    us_sync = _time(lambda: reg.observe(tel_eng, tel_state), n=20)
+    us_t = _time(lambda: reg.begin_observe(tel_eng, tel_state), n=20)
+    row("latency_breakdown_telemetry", us_t,
+        f"begin_observe (copy + async transfer start) on the dispatch "
+        f"path; blocking observe is {us_sync:.0f}us, overlapped by the "
+        f"next chunk")
 
 
 # ----------------------------------------------------------------------
@@ -995,6 +1084,7 @@ def main() -> None:
     bench_closed_loop()
     bench_wal()
     bench_durability()
+    bench_latency_breakdown()
     bench_serving()
     bench_ml_mapper_throughput()
     bench_semantic_topk()

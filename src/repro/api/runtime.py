@@ -22,6 +22,10 @@ class RuntimeConfig:
     queue_capacity: int = 0          # 0 = 4 * batch_size
     chunk_size: int = 8              # ticks per device-resident scan
     fused: str = "auto"              # slate-update backend (EngineConfig)
+    # key plane width, end-to-end: "int32" (default) or "int64" (needs
+    # JAX_ENABLE_X64; widens event keys, slate tables, WAL frames, the
+    # sketch sample, and the kernel entry points — DESIGN.md 12.5/17)
+    key_dtype: str = "int32"
     overflow: Dict[str, OverflowPolicy] = field(default_factory=dict)
     overflow_stream: Dict[str, str] = field(default_factory=dict)
     default_policy: OverflowPolicy = OverflowPolicy.DROP
@@ -94,6 +98,7 @@ class RuntimeConfig:
             overflow_stream=dict(self.overflow_stream),
             default_policy=self.default_policy,
             fused=self.fused,
+            key_dtype=self.key_dtype,
             chunk_size=self.chunk_size,
             durability=self._durability(),
             telemetry=self._telemetry())
@@ -114,6 +119,7 @@ class RuntimeConfig:
             overflow_stream=dict(self.overflow_stream),
             default_policy=self.default_policy,
             fused=self.fused,
+            key_dtype=self.key_dtype,
             chunk_size=self.chunk_size,
             durability=self._durability(),
             exchange_slack=self.exchange_slack,

@@ -45,7 +45,7 @@ def _last_valid_of_run(key, valid):
     its last valid row — marking the run's final row would either drop
     the key (final row invalid) or leak invalid rows' lift deltas into
     its slate."""
-    next_key = jnp.concatenate([key[1:], jnp.full((1,), -3, jnp.int32)])
+    next_key = jnp.concatenate([key[1:], jnp.full((1,), -3, key.dtype)])
     next_valid = jnp.concatenate([valid[1:], jnp.zeros((1,), bool)])
     return (key != next_key) | (valid & ~next_valid)
 
@@ -110,7 +110,7 @@ def apply_associative(updater: AssociativeUpdater, table: tbl.SlateTable,
     batch = batch.sort_by_key_ts()
     B = batch.capacity
     key = batch.key
-    prev_key = jnp.concatenate([jnp.full((1,), -2, jnp.int32), key[:-1]])
+    prev_key = jnp.concatenate([jnp.full((1,), -2, key.dtype), key[:-1]])
     boundary = key != prev_key                       # run starts
     run_last = _last_valid_of_run(key, batch.valid)  # run totals live here
 
@@ -240,7 +240,7 @@ def apply_sequential(updater: SequentialUpdater, table: tbl.SlateTable,
     em_vals = {s: jax.tree.map(
         lambda sp: jnp.zeros((B,) + tuple(sp[0]), sp[1]), spec,
         is_leaf=_is_spec_leaf) for s, spec in out_specs.items()}
-    em_keys = {s: jnp.zeros((B,), jnp.int32) for s in out_specs}
+    em_keys = {s: jnp.zeros((B,), key.dtype) for s in out_specs}
     em_flag = {s: jnp.zeros((B,), bool) for s in out_specs}
 
     idx_all = jnp.arange(B, dtype=jnp.int32)
@@ -271,7 +271,7 @@ def apply_sequential(updater: SequentialUpdater, table: tbl.SlateTable,
                 em_vals_c[s], row["value"])
             em_keys_c = dict(em_keys_c)
             em_keys_c[s] = em_keys_c[s].at[safe].set(
-                row["key"].astype(jnp.int32), mode="drop")
+                row["key"].astype(key.dtype), mode="drop")
             em_flag_c = dict(em_flag_c)
             em_flag_c[s] = em_flag_c[s].at[safe].set(True, mode="drop")
         return (slates_c, em_vals_c, em_keys_c, em_flag_c), None
@@ -291,7 +291,7 @@ def apply_sequential(updater: SequentialUpdater, table: tbl.SlateTable,
             value=em_vals[s],
             valid=em_flag[s],
         )
-    n_proc = jnp.sum((valid & in_budget).astype(jnp.int32))
+    n_proc = jnp.sum(valid & in_budget, dtype=jnp.int32)
     return table, emissions, deferred, n_proc
 
 

@@ -43,7 +43,7 @@ from repro.core import apply as apply_mod
 from repro.core import queues as q_mod
 from repro.core.durability import (DurabilityConfig, EngineDurability,
                                    merge_replay_ticks)
-from repro.core.engine import EngineConfig
+from repro.core.engine import EngineConfig, resolve_key_dtype
 from repro.core.event import EventBatch, concat
 from repro.core.hashing import HashRing, route, route_secondary
 from repro.core.operators import (AssociativeUpdater, Mapper,
@@ -106,7 +106,8 @@ def exchange(batch: EventBatch, dest, axis_names, cap_per_dest: int
 
     buckets = EventBatch.empty(
         n * cap_per_dest,
-        jax.tree.map(lambda a: (a.shape[1:], a.dtype), sb.value))
+        jax.tree.map(lambda a: (a.shape[1:], a.dtype), sb.value),
+        key_dtype=sb.key.dtype)
 
     def put(dst, src):
         return dst.at[slot].set(src, mode="drop")
@@ -235,7 +236,7 @@ def exchange_rows(t: tbl.SlateTable, dest_salt: int, ring_hashes,
     rep = vs & ~jnp.concatenate([prev_same[1:], jnp.zeros((1,), bool)])
 
     fresh = tbl.SlateTable(
-        keys=jnp.full((C,), tbl.EMPTY, jnp.int32),
+        keys=jnp.full((C,), tbl.EMPTY, t.keys.dtype),
         ts=jnp.zeros((C,), jnp.int32),
         dirty=jnp.zeros((C,), bool),
         vals=jax.tree.map(jnp.zeros_like, t.vals),
@@ -401,6 +402,7 @@ class DistributedEngine:
         self.wf = workflow
         self.mesh = mesh
         self.cfg = config or DistConfig()
+        self.key_dtype = resolve_key_dtype(self.cfg.key_dtype)
         self.axes = self.cfg.axis_names
         self.n_shards = int(np.prod([mesh.shape[a] for a in self.axes]))
         self.ring = HashRing(self.n_shards)
@@ -453,8 +455,13 @@ class DistributedEngine:
             hot_cap = 8
         self._hot_capacity = (hot_cap if tele is not None
                               and self.cfg.durability is None else 0)
-        self._hot_keys = np.zeros(max(1, self._hot_capacity), np.int32)
+        self._hot_keys = np.zeros(max(1, self._hot_capacity),
+                                  self.key_dtype)
         self._hot_valid = np.zeros(max(1, self._hot_capacity), bool)
+
+    @property
+    def key_bits(self) -> int:
+        return int(self.key_dtype.itemsize) * 8
 
     # ---- state ----
     def init_state(self):
@@ -464,11 +471,14 @@ class DistributedEngine:
                 lambda x: jnp.broadcast_to(
                     x[None], (self.n_shards,) + x.shape).copy(), one)
 
+        kd = self.key_dtype
         queues = {op.name: per_shard(partial(
-            q_mod.make_queue, self.cfg.queue_capacity, op.in_value_spec))
+            q_mod.make_queue, self.cfg.queue_capacity, op.in_value_spec,
+            key_dtype=kd))
             for op in self.wf.operators}
         tables = {up.name: per_shard(partial(
-            tbl.make_table, up.table_capacity, up.slate_spec()))
+            tbl.make_table, up.table_capacity, up.slate_spec(),
+            key_dtype=kd))
             for up in self.wf.updaters()}
         z = lambda: jnp.zeros((self.n_shards,), jnp.int32)
         state = {
@@ -482,7 +492,8 @@ class DistributedEngine:
         if self.tele_cfg is not None:
             tc = self.tele_cfg
             state["sketch"] = per_shard(partial(
-                sk_mod.make_sketch, tc.depth, tc.width, tc.sample))
+                sk_mod.make_sketch, tc.depth, tc.width, tc.sample,
+                key_dtype=kd))
         state = jax.tree.map(lambda x: jnp.array(x, copy=True), state)
         return jax.device_put(state, self._shard_tree(state))
 
@@ -613,7 +624,9 @@ class DistributedEngine:
         """Spill a key's per-tick excess to its secondary shard."""
         secondary = route_secondary(batch.key, _salt(dest_op), ring_hashes,
                                     ring_shards)
-        key_sink = jnp.where(batch.valid, batch.key, jnp.int32(2**31 - 1))
+        key_sink = jnp.where(
+            batch.valid, batch.key,
+            jnp.asarray(jnp.iinfo(batch.key.dtype).max, batch.key.dtype))
         order = jnp.argsort(key_sink, stable=True)
         sk = key_sink[order]
         rank_sorted = jnp.arange(batch.capacity, dtype=jnp.int32) - \
@@ -730,17 +743,31 @@ class DistributedEngine:
 
     def append_sources(self, tick: int, sources: Dict[str, EventBatch]):
         """Write-ahead: log each shard's slice of the [n_shards, B]
-        source batches to that shard's WAL (call before ``step``)."""
-        host = {s: jax.tree.map(lambda x: np.asarray(jax.device_get(x)), b)
+        source batches to that shard's WAL (call before ``step``).
+
+        The device_get and the per-shard slicing run as one deferred
+        thunk on the durability writer thread: the dispatch path only
+        pays the enqueue.  Step/chunk dispatches never donate source
+        buffers, so the captured device arrays stay valid until the
+        thunk resolves; the frontier fence orders the thunk before any
+        frontier that must cover this tick."""
+        n_shards, dur = self.n_shards, self.dur
+
+        def _log():
+            host = {s: jax.tree.map(
+                lambda x: np.asarray(jax.device_get(x)), b)
                 for s, b in sources.items()}
-        for sh in range(self.n_shards):
-            sl = {s: EventBatch(sid=b.sid[sh], ts=b.ts[sh], key=b.key[sh],
-                                value=jax.tree.map(lambda x: x[sh],
-                                                   b.value),
-                                valid=b.valid[sh])
-                  for s, b in host.items()}
-            sl = {s: b for s, b in sl.items() if b.valid.any()}
-            self.dur.append(tick, sl, shard=sh)
+            for sh in range(n_shards):
+                sl = {s: EventBatch(sid=b.sid[sh], ts=b.ts[sh],
+                                    key=b.key[sh],
+                                    value=jax.tree.map(lambda x: x[sh],
+                                                       b.value),
+                                    valid=b.valid[sh])
+                      for s, b in host.items()}
+                sl = {s: b for s, b in sl.items() if b.valid.any()}
+                dur._do_append(int(tick), sl, sh)
+
+        dur.append_deferred(_log)
 
     def _step_empty(self, state):
         """One source-less tick (drain barriers, replay gap ticks)."""
@@ -1037,7 +1064,7 @@ class DistributedEngine:
                 up.name, now=f_tick if up.ttl else None)
             if not recs:
                 continue
-            ks = np.asarray(sorted(recs), np.int32)
+            ks = np.asarray(sorted(recs), self.key_dtype)
             shard_of = np.asarray(jax.device_get(
                 route(jnp.asarray(ks), _salt(up.name), rh, rs)))
             t = state["tables"][up.name]
@@ -1111,7 +1138,8 @@ class DistributedEngine:
                 t = tmpl[s]
                 return EventBatch.empty(
                     caps[s], jax.tree.map(
-                        lambda a: (a.shape[1:], a.dtype), t.value))
+                        lambda a: (a.shape[1:], a.dtype), t.value),
+                    key_dtype=t.key.dtype)
             return EventBatch(sid=jnp.asarray(b.sid),
                               ts=jnp.asarray(b.ts),
                               key=jnp.asarray(b.key),
@@ -1332,7 +1360,7 @@ class DistributedEngine:
         per subscribing updater's dequeue, and ``heat_weights`` splits a
         hitter's estimated mass evenly across these rows."""
         ups = list(self.wf.updaters())
-        ks = np.asarray(keys, np.int32)
+        ks = np.asarray(keys, self.key_dtype)
         if not ups:
             return np.zeros((1, len(ks)), np.int32)
         return np.stack([self.ring.owners(ks, _salt(u.name))
@@ -1497,7 +1525,7 @@ class DistributedEngine:
             if len(self.axes) > 1 else 1
 
     def _row_bytes(self, up) -> int:
-        n = 4 + 4 + 1                       # key + ts + dirty
+        n = self.key_dtype.itemsize + 4 + 1   # key + ts + dirty
         for leaf in jax.tree.leaves(up.slate_spec(),
                                     is_leaf=tbl._is_spec_leaf):
             shp, dt = leaf
@@ -1505,7 +1533,7 @@ class DistributedEngine:
         return n
 
     def _event_bytes(self, op) -> int:
-        n = 4 * 3 + 1                       # sid + ts + key + valid
+        n = 4 * 2 + self.key_dtype.itemsize + 1  # sid + ts + key + valid
         for leaf in jax.tree.leaves(op.in_value_spec,
                                     is_leaf=tbl._is_spec_leaf):
             shp, dt = leaf
@@ -1845,7 +1873,8 @@ class DistributedEngine:
                     out = []
                     for d in range(n):
                         loc = tbl.make_table(up.table_capacity,
-                                             up.slate_spec())
+                                             up.slate_spec(),
+                                             key_dtype=self.key_dtype)
                         out.append(jax.device_get(tbl.SlateTable(
                             keys=loc.keys, ts=loc.ts, dirty=loc.dirty,
                             vals=loc.vals,
@@ -1902,10 +1931,11 @@ class DistributedEngine:
         in_ts, in_dirty = in_ts[uniq], in_dirty[uniq]
         in_vals = jax.tree.map(lambda v: v[uniq], in_vals)
 
-        local = tbl.make_table(up.table_capacity, up.slate_spec())
+        local = tbl.make_table(up.table_capacity, up.slate_spec(),
+                               key_dtype=self.key_dtype)
         drops = 0
         for i in range(0, len(in_keys), 256):
-            k = jnp.asarray(in_keys[i:i + 256], jnp.int32)
+            k = jnp.asarray(in_keys[i:i + 256], self.key_dtype)
             valid = jnp.ones(k.shape, bool)
             local, slot, _, placed = tbl.insert_or_find(local, k, valid)
             local = tbl.write_slates(
@@ -1981,7 +2011,7 @@ class DistributedEngine:
             # rebuild each destination queue: stayers + movers, FIFO
             buf_sid = np.zeros((n, cap), np.int32)
             buf_ts = np.zeros((n, cap), np.int32)
-            buf_key = np.zeros((n, cap), np.int32)
+            buf_key = np.zeros((n, cap), self.key_dtype)
             buf_valid = np.zeros((n, cap), bool)
             buf_leaves = [np.zeros((n, cap) + lf.shape[2:], lf.dtype)
                           for lf in leaves]
@@ -2030,10 +2060,10 @@ class DistributedEngine:
         snapshot."""
         with self.read_lock:
             rh, rs = self.ring.table()
-            karr = jnp.asarray([key], jnp.int32)
+            karr = jnp.asarray([key], self.key_dtype)
             shards = [int(route(karr, _salt(updater), rh, rs)[0])]
             is_hot = bool(np.any(self._hot_valid
-                                 & (self._hot_keys == np.int32(key))))
+                                 & (self._hot_keys == key)))
             if self.cfg.two_choice_threshold or is_hot:
                 shards.append(int(route_secondary(karr, _salt(updater),
                                                   rh, rs)[0]))
@@ -2063,10 +2093,19 @@ class DistributedEngine:
                       impl: str):
         """Compile the batched distributed read (DESIGN.md 15): every
         shard runs the device lookup over its local table for the whole
-        [Q] key vector, masks its rows to the keys it owns in each ring
-        role, and a ``psum`` across shards acts as the select (at most
-        one shard contributes per (key, role)).  Returns replicated
-        ``(prim_found, prim_rows[, sec_found, sec_rows])``."""
+        [Q] key vector, tags each hit with the ring roles it owns
+        (bitmask: 1 = primary, 2 = effective secondary), and one
+        ``all_gather`` ships the per-shard partials — role mask + local
+        rows, gathered *once* — back replicated; the host selects the
+        owning shard's row per (key, role).  Replaces the former
+        psum-per-role select (two masked psum sweeps over every value
+        leaf): the rows cross the interconnect once instead of twice,
+        and the select is an O(Q) host argmax instead of a summed
+        zero-masked reduction.  Result parity with the psum path is
+        exact — at most one shard contributes per (key, role), so
+        sum-of-masked equals select-of-owner (asserted in tests against
+        the per-key ``read_slate`` loop).  Returns replicated
+        ``(role_mask [n_shards, Q], rows [n_shards, Q, ...])``."""
         from jax.experimental.shard_map import shard_map
         from repro.kernels.slate_lookup import ops as lk_ops
         rep = P()
@@ -2080,37 +2119,26 @@ class DistributedEngine:
             t = jax.tree.map(lambda x: x[0], tb)
             found, rows = lk_ops.lookup_tree(t.keys, t.vals, karr,
                                              impl=impl)
-
-            def role(owner):
-                mine = found & (owner == me)
-
-                def pick(v):
-                    m = mine.reshape(mine.shape + (1,) * (v.ndim - 1))
-                    c = jnp.where(m, v, jnp.zeros_like(v))
-                    if c.dtype == jnp.bool_:
-                        return jax.lax.psum(
-                            c.astype(jnp.int32), axes).astype(bool)
-                    return jax.lax.psum(c, axes)
-
-                return (jax.lax.psum(mine.astype(jnp.int32), axes),
-                        jax.tree.map(pick, rows))
-
             prim = route(karr, salt, rh_, rs_)
-            pf, pr = role(prim)
-            if not with_sec:
-                return pf, pr
-            sec = route_secondary(karr, salt, rh_, rs_)
-            is_hot = jnp.any((karr[:, None] == hk_[None, :])
-                             & hv_[None, :], axis=1)
-            use_sec = (jnp.bool_(two) | is_hot) & (sec != prim)
-            sf, sr = role(jnp.where(use_sec, sec, jnp.int32(-1)))
-            return pf, pr, sf, sr
+            mask = (found & (prim == me)).astype(jnp.int32)
+            if with_sec:
+                sec = route_secondary(karr, salt, rh_, rs_)
+                is_hot = jnp.any((karr[:, None] == hk_[None, :])
+                                 & hv_[None, :], axis=1)
+                use_sec = (jnp.bool_(two) | is_hot) & (sec != prim)
+                sec_eff = jnp.where(use_sec, sec, jnp.int32(-1))
+                mask = mask | (
+                    (found & (sec_eff == me)).astype(jnp.int32) << 1)
+
+            def gath(x):
+                return jax.lax.all_gather(x, axes, tiled=False)
+
+            return gath(mask), jax.tree.map(gath, rows)
 
         def run(tb, karr, rh_, rs_, hk_, hv_):
-            outs = (rep, rep, rep, rep) if with_sec else (rep, rep)
             fn = shard_map(local, mesh=self.mesh,
                            in_specs=(tspec, rep, rep, rep, rep, rep),
-                           out_specs=outs, check_rep=False)
+                           out_specs=(rep, rep), check_rep=False)
             return fn(tb, karr, rh_, rs_, hk_, hv_)
 
         return jax.jit(run)
@@ -2122,7 +2150,7 @@ class DistributedEngine:
         to Q ``read_slate`` calls (two-choice / hot-split partials merge
         primary-then-secondary via the updater's combine).  Returns a
         list aligned with ``keys`` (``None`` for missing)."""
-        keys_np = np.asarray(keys, np.int32).reshape(-1)
+        keys_np = np.asarray(keys, self.key_dtype).reshape(-1)
         if keys_np.size == 0:
             return []
         with self.read_lock:
@@ -2138,11 +2166,19 @@ class DistributedEngine:
             hk, hv = self._hot_table()
             res = jax.device_get(fn(state["tables"][updater],
                                     jnp.asarray(keys_np), rh, rs, hk, hv))
+        # host select over the gathered partials: at most one shard's
+        # mask bit is set per (key, role), so argmax IS the owner
+        mask, rows = np.asarray(res[0]), res[1]
+        q = np.arange(keys_np.size)
+        pm = (mask & 1).astype(bool)                    # [n_shards, Q]
+        pf, psh = pm.any(axis=0), pm.argmax(axis=0)
+        pr = jax.tree.map(lambda v: np.asarray(v)[psh, q], rows)
         if with_sec:
-            pf, pr, sf, sr = res
+            sm = (mask & 2).astype(bool)
+            sf, ssh = sm.any(axis=0), sm.argmax(axis=0)
+            sr = jax.tree.map(lambda v: np.asarray(v)[ssh, q], rows)
         else:
-            (pf, pr), sf, sr = res, np.zeros_like(np.asarray(res[0])), None
-        pf, sf = np.asarray(pf), np.asarray(sf)
+            sf, sr = np.zeros_like(pf), None
         op = self.wf.by_name[updater]
         combine = getattr(op, "combine", None)
         out = []

@@ -26,9 +26,12 @@ idempotent sequential updaters (e.g. last-value), wrong for counters.
 """
 from __future__ import annotations
 
+import functools
 import os
+import queue as pyqueue
+import threading
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Callable, Dict, List, Optional
 
 from repro.slates.flush import FlushConfig, Flusher, FlushFrontier
 from repro.slates.kvstore import KVStore
@@ -77,6 +80,18 @@ class DurabilityConfig:
                        read_quorum=self.read_quorum)
 
 
+class WALAppendError(RuntimeError):
+    """One or more background WAL appends failed; ``.errors`` holds the
+    underlying exceptions in arrival order.  Raised at the next fence —
+    a frontier must never advance past a failed append."""
+
+    def __init__(self, errors):
+        self.errors = list(errors)
+        super().__init__(
+            f"{len(self.errors)} WAL append(s) failed: "
+            f"{self.errors[0]!r}")
+
+
 def auto_replay_slack(workflow, queue_capacity: int,
                       batch_size: int) -> int:
     """Sound residence bound for barrier-less frontiers: an event sits at
@@ -118,7 +133,19 @@ class EngineDurability:
             else auto_replay_slack(workflow, queue_capacity, batch_size)
         # tick -> per-wal offsets *before* that tick's appends; needed to
         # backdate barrier-less frontiers.  Pruned against the frontier.
+        # Touched only by the writer thread and by post-fence frontier
+        # code (the fence empties the queue first), so no lock is needed.
         self._tick_offsets: Dict[int, List[int]] = {}
+        # Async appender (DESIGN.md 17): the driver enqueues append
+        # thunks and returns immediately; file I/O (+ any deferred
+        # device_get the distributed driver wraps in the thunk) runs
+        # here, off the tick critical path.  Bounded so a slow disk
+        # exerts backpressure instead of growing an unbounded backlog.
+        self._wq: pyqueue.Queue = pyqueue.Queue(maxsize=64)
+        self._werrs: list = []
+        self._wthread = threading.Thread(target=self._writer_loop,
+                                         daemon=True)
+        self._wthread.start()
 
     @property
     def wal(self) -> WriteAheadLog:
@@ -129,18 +156,61 @@ class EngineDurability:
         return [w.offset for w in self.wals]
 
     # ---- write-ahead ----
-    def append(self, tick: int, sources, shard: Optional[int] = None):
-        """Log one tick's sources (single-shard) or one shard's slice.
-        Must run *before* the tick executes (write-ahead)."""
+    def _writer_loop(self):
+        while True:
+            job = self._wq.get()
+            if job is None:
+                self._wq.task_done()
+                return
+            try:
+                job()
+            except Exception as e:
+                self._werrs.append(e)
+            finally:
+                self._wq.task_done()
+
+    def _do_append(self, tick: int, sources, shard: int):
+        # writer-thread body: the original synchronous append
         if not self.cfg.barrier:
             # barrier-less frontiers backdate by replay_slack ticks, so
             # only a sliding window of pre-append offsets is needed
-            self._tick_offsets.setdefault(int(tick), self._offsets())
+            self._tick_offsets.setdefault(tick, self._offsets())
             for t in [t for t in self._tick_offsets
-                      if t < int(tick) - 2 * self.slack]:
+                      if t < tick - 2 * self.slack]:
                 del self._tick_offsets[t]
         if sources:
-            self.wals[shard or 0].append(tick, sources)
+            self.wals[shard].append(tick, sources)
+
+    def append(self, tick: int, sources, shard: Optional[int] = None):
+        """Log one tick's sources (single-shard) or one shard's slice.
+
+        Asynchronous: the append is handed to the background writer and
+        this call returns immediately — the write-ahead invariant is
+        restored at :meth:`begin_frontier`, whose fence guarantees every
+        append at or before the frontier tick is on disk before the
+        frontier can cover it (DESIGN.md 17).  Blocks only when the
+        bounded writer queue is full (slow-disk backpressure)."""
+        self._wq.put(functools.partial(
+            self._do_append, int(tick), sources,
+            0 if shard is None else int(shard)))
+
+    def append_deferred(self, fn: Callable[[], None]):
+        """Enqueue an arbitrary thunk on the writer thread — the
+        distributed driver uses this to move the device_get of the
+        per-shard source slices off the dispatch path; the thunk calls
+        :meth:`_do_append` per shard itself.  Ordering with respect to
+        plain :meth:`append` calls is FIFO (one queue, one writer)."""
+        self._wq.put(fn)
+
+    def fence(self):
+        """Epoch fence: wait until every enqueued append has hit the
+        WAL, then re-raise any writer error as :class:`WALAppendError`.
+        After the fence the writer queue is empty, so ``_tick_offsets``
+        and the WAL offsets may be read from the driver thread."""
+        self._wq.join()
+        if self._werrs:
+            errs, self._werrs = self._werrs, []
+            raise WALAppendError(errs)
 
     # ---- frontier ----
     def due(self, tick: int, tables=None) -> bool:
@@ -158,14 +228,17 @@ class EngineDurability:
         return any(self.flusher.should_flush(tick, t)
                    for t in tables.values())
 
-    def record_frontier(self, tick: int, meta: Optional[dict] = None):
-        """Drain the flusher (re-raises on store failure), then advance
-        and persist the frontier.  With the barrier the pipeline is
-        empty, so the frontier is exactly ``tick``; without it the
-        frontier is backdated by ``replay_slack`` ticks.  ``meta`` is an
-        opaque driver cursor stored alongside (None keeps the previous
-        one)."""
-        self.flusher.drain()
+    def begin_frontier(self, tick: int):
+        """Phase one of a frontier advance: fence the async writer (so
+        every append the new frontier must cover is on disk and the
+        offset maps are stable), then capture the replay point.  Returns
+        an opaque token for :meth:`commit_frontier`.
+
+        The capture MUST happen here, not at commit: the driver overlaps
+        the commit with the next chunk, whose appends land between begin
+        and commit — offsets read at commit time would let the frontier
+        cover ticks the flushed snapshot never saw."""
+        self.fence()
         if self.cfg.barrier:
             f_tick, f_offs = int(tick), self._offsets()
         else:
@@ -177,6 +250,17 @@ class EngineDurability:
                       for i in range(len(self.wals))]
         self._tick_offsets = {t: o for t, o in self._tick_offsets.items()
                               if t >= f_tick}
+        return (f_tick, f_offs)
+
+    def commit_frontier(self, token, meta: Optional[dict] = None):
+        """Phase two: drain the flusher (re-raises on store failure),
+        then persist the frontier captured by :meth:`begin_frontier`.
+        Blocking — the driver calls this after dispatching the next
+        chunk so the drain overlaps device compute.  ``meta`` is an
+        opaque driver cursor stored alongside (None keeps the previous
+        one)."""
+        f_tick, f_offs = token
+        self.flusher.drain()
         self.frontier = FlushFrontier(
             tick=f_tick,
             wal_offset=f_offs[0] if self.n_shards is None else f_offs,
@@ -185,6 +269,14 @@ class EngineDurability:
         if self.cfg.truncate_wal:
             for w, off in zip(self.wals, f_offs):
                 w.truncate_before(off)
+
+    def record_frontier(self, tick: int, meta: Optional[dict] = None):
+        """Synchronous frontier advance: fence + capture + drain + save
+        in one call (checkpoint/drain/recovery paths; the pipelined hot
+        loop uses begin/commit directly).  With the barrier the pipeline
+        is empty, so the frontier is exactly ``tick``; without it the
+        frontier is backdated by ``replay_slack`` ticks."""
+        self.commit_frontier(self.begin_frontier(tick), meta=meta)
 
     def frontier_offsets(self) -> List[int]:
         off = self.frontier.wal_offset
@@ -205,6 +297,7 @@ class EngineDurability:
         rejoins."""
         assert self.n_shards is not None, \
             "resize() is for per-shard durability (DistributedEngine)"
+        self.fence()   # the writer must not touch WALs we close/append
         offs = self.frontier_offsets()
         if n_shards < len(self.wals):
             for w in self.wals[n_shards:]:
@@ -223,10 +316,15 @@ class EngineDurability:
 
     def close(self):
         try:
-            self.flusher.close()
+            self._wq.join()
+            self._wq.put(None)
+            self._wthread.join(timeout=5)
         finally:
-            for w in self.wals:
-                w.close()
+            try:
+                self.flusher.close()
+            finally:
+                for w in self.wals:
+                    w.close()
 
 
 def merge_replay_ticks(wals: List[WriteAheadLog], offsets: List[int]):

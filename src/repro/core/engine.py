@@ -57,6 +57,13 @@ class EngineConfig:
     # "interpret", "jnp", "ref", or "off" (always the generic path).
     # See core/apply.apply_associative.
     fused: str = "auto"
+    # key plane width, end-to-end: "int32" (default) or "int64".
+    # int64 widens tables, queues, the sketch sample ring, WAL frames
+    # and every kernel entry point, and requires jax_enable_x64 (the
+    # engine refuses to construct otherwise — JAX silently demotes
+    # int64 arrays without it).  Under int64 the hotspot split window
+    # covers the whole 32-bit band (DESIGN.md 12.5 closed).
+    key_dtype: str = "int32"
     # ticks per device-resident scan in run(); 1 = per-tick dispatch
     chunk_size: int = 8
     # durable runtime (WAL + slate flush + crash recovery, DESIGN.md 10);
@@ -107,6 +114,22 @@ def _limit_ingest(batch: "EventBatch", ingest) -> "EventBatch":
     throttling inside a chunk)."""
     rank = jnp.cumsum(batch.valid.astype(jnp.int32)) - 1
     return batch.mask(rank < ingest)
+
+
+def resolve_key_dtype(name) -> np.dtype:
+    """Validate an ``EngineConfig.key_dtype`` / ``DistConfig`` key plane
+    request: int32 or int64, with int64 demanding ``jax_enable_x64``
+    up front (JAX silently demotes int64 arrays without it, which would
+    corrupt keys instead of failing)."""
+    dt = np.dtype(name)
+    if dt not in (np.dtype(np.int32), np.dtype(np.int64)):
+        raise ValueError(f"key_dtype must be int32 or int64, got {name!r}")
+    if dt.itemsize > 4 and not jax.config.jax_enable_x64:
+        raise RuntimeError(
+            "key_dtype=int64 requires jax_enable_x64: set "
+            "JAX_ENABLE_X64=1 (or jax.config.update('jax_enable_x64', "
+            "True)) before building the engine")
+    return dt
 
 
 @partial(jax.jit, static_argnames=("impl",))
@@ -188,6 +211,7 @@ class Engine:
     def __init__(self, workflow: Workflow, config: EngineConfig = None):
         self.wf = workflow
         self.cfg = config or EngineConfig()
+        self.key_dtype = resolve_key_dtype(self.cfg.key_dtype)
         # serializes concurrent readers against the donating dispatches
         # in run(): donated state buffers are deleted the moment a chunk
         # is dispatched, so a read racing the chunk would touch freed
@@ -209,16 +233,23 @@ class Engine:
                 self.cfg.telemetry, batch_size=self.cfg.batch_size)
             self._salts = self.telemetry.salts
 
+    @property
+    def key_bits(self) -> int:
+        return int(self.key_dtype.itemsize) * 8
+
     # ---- state ----
     def init_state(self) -> Dict[str, Any]:
+        kd = self.key_dtype
         queues = {}
         for op in self.wf.operators:
             queues[op.name] = q_mod.make_queue(self.cfg.queue_capacity,
-                                               op.in_value_spec)
+                                               op.in_value_spec,
+                                               key_dtype=kd)
         tables = {}
         for up in self.wf.updaters():
             tables[up.name] = tbl.make_table(up.table_capacity,
-                                             up.slate_spec())
+                                             up.slate_spec(),
+                                             key_dtype=kd)
         z = jnp.zeros((), jnp.int32)
         state = {
             "queues": queues,
@@ -231,7 +262,7 @@ class Engine:
         if self.cfg.telemetry is not None:
             tc = self.cfg.telemetry
             state["sketch"] = sk_mod.make_sketch(tc.depth, tc.width,
-                                                 tc.sample)
+                                                 tc.sample, key_dtype=kd)
         # constants are interned by XLA; donation needs distinct buffers
         return jax.tree.map(lambda x: jnp.array(x, copy=True), state)
 
@@ -451,18 +482,38 @@ class Engine:
         t = source_offset
         end = source_offset + n_ticks
         eng_tick = int(jax.device_get(state["tick"])) if self.dur else 0
+        # pipelined write path (DESIGN.md section 17): boundary work
+        # splits into a cheap *begin* at the boundary (snapshot copies,
+        # WAL epoch fence) and a blocking *commit* resolved right after
+        # the NEXT chunk is dispatched, so store writes and telemetry
+        # transfers overlap device compute instead of serializing the
+        # tick path.
+        pending_flush = None    # in-flight flush epoch (begin'd, not committed)
+        pending_obs = None      # in-flight telemetry transfer
         while t < end:
             n = min(chunk - t % chunk, end - t)
             per_tick = [source_fn(t + i, ingest) for i in range(n)]
             if self.dur:
                 for i, srcs in enumerate(per_tick):
-                    self.dur.append(eng_tick + i, srcs)
+                    self.dur.append(eng_tick + i, srcs)  # async writer
             # the chunk dispatch donates (deletes) the buffers a handle
             # reader may be touching; hold the read lock from dispatch
             # until the fresh state is republished
             with self.read_lock:
                 state, outs, info = self.run_chunk(
                     state, stack_sources(per_tick), n)
+                # chunk is in flight: resolve the previous boundary's
+                # deferred work while the device computes
+                if pending_flush is not None:
+                    self._flush_commit(pending_flush)
+                    pending_flush = None
+                    if handle is not None:
+                        handle.on_frontier_advance()
+                if pending_obs is not None:
+                    report = self.telemetry.finish_observe(pending_obs)
+                    pending_obs = None
+                    if handle is not None:
+                        handle.on_telemetry(report)
                 for i in range(n):
                     outputs.append(jax.tree.map(lambda x, i=i: x[i],
                                                 outs))
@@ -481,23 +532,34 @@ class Engine:
                 t += n
                 eng_tick += n
                 if self.dur and self.dur.due(eng_tick, state["tables"]):
-                    state, eng_tick = self._flush_boundary(
+                    state, eng_tick, pending_flush = self._flush_begin(
                         state, eng_tick, meta={"source_tick": t})
-                    if handle is not None:
-                        handle.on_frontier_advance()
                 if (self.telemetry is not None
                         and t - obs_mark >= self.cfg.telemetry.window):
-                    # windowed reading + sketch aging: piggybacks on the
-                    # chunk boundary we are already synced at
-                    report = self.telemetry.observe(self, state)
-                    if handle is not None:
-                        handle.on_telemetry(report)
+                    # start the boundary transfer; the report resolves
+                    # after the next chunk's dispatch (one-chunk lag)
+                    pending_obs = self.telemetry.begin_observe(self,
+                                                               state)
                     state = dict(state)
                     state["sketch"] = sk_mod.decay(
                         state["sketch"], self.cfg.telemetry.decay)
                     obs_mark = t
                 if handle is not None:
                     handle.state = state
+        # trailing deferred work: the run must not return with an
+        # uncommitted frontier or an unresolved report
+        if pending_flush is not None:
+            self._flush_commit(pending_flush)
+            if handle is not None:
+                handle.on_frontier_advance()
+        if pending_obs is not None:
+            report = self.telemetry.finish_observe(pending_obs)
+            if handle is not None:
+                handle.on_telemetry(report)
+        if self.dur:
+            # run() is a durable unit: every source batch it consumed is
+            # on disk (and append errors surface) before control returns
+            self.dur.fence()
         return state, outputs
 
     def drain(self, state, max_ticks: int = 64):
@@ -521,20 +583,51 @@ class Engine:
             d += 1
         return state, d
 
-    def _flush_boundary(self, state, eng_tick: int, meta=None):
-        """Drain (per config), flush every updater table, record the
-        frontier once the store writes are durable.  ``meta`` is the
-        driver cursor stored with the frontier (run() records the source
-        index so a --recover driver can resume its stream even after
-        full WAL truncation)."""
+    def _flush_begin(self, state, eng_tick: int, meta=None):
+        """First half of a flush boundary: drain (per config), start the
+        device->host snapshot of every dirty table (tables come back
+        marked clean immediately), and fence the WAL writer to pin the
+        frontier's replay point *before* any later tick appends.  The
+        blocking store-side work lives in :meth:`_flush_commit`, which
+        the driver calls after the next chunk's dispatch so it overlaps
+        device compute.  Returns ``(state, eng_tick, pending)``."""
         dur = self.dur
         if dur.cfg.barrier:
             state, d = self._drain_queues(state, dur.cfg.drain_ticks_max)
             eng_tick += d
+        state = dict(state)
+        tables = dict(state["tables"])
+        snaps = []
         for up in self.wf.updaters():
-            state["tables"][up.name] = dur.flusher.flush_table(
-                up.name, state["tables"][up.name], ttl=up.ttl)
-        dur.record_frontier(eng_tick, meta=meta)
+            token, cleared = flush_mod.begin_dirty_snapshot(
+                tables[up.name])
+            tables[up.name] = cleared
+            snaps.append((up.name, up.ttl, token))
+        state["tables"] = tables
+        f_token = dur.begin_frontier(eng_tick)
+        return state, eng_tick, (snaps, f_token, meta)
+
+    def _flush_commit(self, pending):
+        """Second half: resolve the snapshots to host rows, hand them to
+        the flusher, and commit the frontier once the store writes are
+        durable (raises :class:`FlushError` without saving otherwise).
+        ``meta`` is the driver cursor stored with the frontier (run()
+        records the source index so a --recover driver can resume its
+        stream even after full WAL truncation)."""
+        snaps, f_token, meta = pending
+        dur = self.dur
+        for name, ttl, token in snaps:
+            keys, ts, vals = flush_mod.finish_dirty_snapshot(token)
+            dur.flusher.flush_rows(name, keys, ts, vals, ttl=ttl)
+        dur.commit_frontier(f_token, meta=meta)
+
+    def _flush_boundary(self, state, eng_tick: int, meta=None):
+        """Synchronous flush boundary (checkpoint / shutdown / tests):
+        begin + commit back to back — no overlap, identical durability
+        semantics."""
+        state, eng_tick, pending = self._flush_begin(state, eng_tick,
+                                                     meta=meta)
+        self._flush_commit(pending)
         return state, eng_tick
 
     def checkpoint(self, state):
@@ -575,7 +668,7 @@ class Engine:
                 up.name, now=f_tick if up.ttl else None)
             if not recs:
                 continue
-            ks = np.asarray(sorted(recs), np.int32)
+            ks = np.asarray(sorted(recs), self.key_dtype)
             ts = np.asarray([recs[int(k)][0] for k in ks], np.int32)
             slates = jax.tree.map(
                 lambda *rows: np.stack(rows),
@@ -620,7 +713,8 @@ class Engine:
         """Fetch one slate from the device table (the HTTP slate-read
         path reuses this)."""
         table = state["tables"][updater]
-        slot, found = tbl.lookup(table, jnp.asarray([key], jnp.int32))
+        slot, found = tbl.lookup(table,
+                                 jnp.asarray([key], self.key_dtype))
         if not bool(found[0]):
             return None
         s = int(slot[0])
@@ -634,7 +728,7 @@ class Engine:
         dicts (``None`` for missing keys).  ``impl`` picks the lookup
         backend (kernels/slate_lookup: "auto"/"pallas"/"interpret"/
         "jnp")."""
-        keys = np.asarray(keys, np.int32).reshape(-1)
+        keys = np.asarray(keys, self.key_dtype).reshape(-1)
         if keys.size == 0:
             return []
         table = state["tables"][updater]

@@ -30,32 +30,47 @@ class EventBatch:
         return int(self.key.shape[0])
 
     def count(self):
-        return jnp.sum(self.valid.astype(jnp.int32))
+        # pinned accumulator: jnp.sum widens int32 under x64, which
+        # would leak int64 into the scan carry (queue/table counters)
+        return jnp.sum(self.valid, dtype=jnp.int32)
 
     # ---- constructors ----
     @staticmethod
-    def empty(capacity: int, value_spec: Dict[str, Any]) -> "EventBatch":
+    def empty(capacity: int, value_spec: Dict[str, Any],
+              key_dtype=jnp.int32) -> "EventBatch":
         """value_spec: pytree of (shape_suffix, dtype)."""
         value = jax.tree.map(
             lambda s: jnp.zeros((capacity,) + tuple(s[0]), s[1]),
             value_spec, is_leaf=_is_spec_leaf)
         z = jnp.zeros((capacity,), jnp.int32)
-        return EventBatch(sid=z, ts=z, key=z, value=value,
+        return EventBatch(sid=z, ts=z,
+                          key=jnp.zeros((capacity,), key_dtype),
+                          value=value,
                           valid=jnp.zeros((capacity,), bool))
 
     @staticmethod
-    def of(key, value, *, ts=None, sid=None, valid=None) -> "EventBatch":
-        key = jnp.asarray(key, jnp.int32)
+    def of(key, value, *, ts=None, sid=None, valid=None,
+           key_dtype=None) -> "EventBatch":
+        if key_dtype is None:
+            # arrays keep their key width; bare sequences default to
+            # int32 (stable even when jax_enable_x64 widens literals)
+            kd = getattr(key, "dtype", None)
+            key_dtype = kd if kd is not None \
+                and np.dtype(kd).kind in "iu" else jnp.int32
+        key = jnp.asarray(key, key_dtype)
         b = key.shape[0]
+        # scalars broadcast to the batch (ts=3 means "whole batch at
+        # tick 3", not a 0-d array that breaks take())
+        full = lambda v, dt: jnp.broadcast_to(jnp.asarray(v, dt), (b,))
         return EventBatch(
             sid=jnp.zeros((b,), jnp.int32) if sid is None
-            else jnp.asarray(sid, jnp.int32),
+            else full(sid, jnp.int32),
             ts=jnp.arange(b, dtype=jnp.int32) if ts is None
-            else jnp.asarray(ts, jnp.int32),
+            else full(ts, jnp.int32),
             key=key,
             value=jax.tree.map(jnp.asarray, value),
             valid=jnp.ones((b,), bool) if valid is None
-            else jnp.asarray(valid, bool),
+            else full(valid, bool),
         )
 
     # ---- transforms (all shape-static) ----
@@ -85,19 +100,19 @@ class EventBatch:
         """Deterministic (key, ts) order; invalid rows sink to the end.
         This realizes the paper's 'events fed in increasing timestamp
         order with deterministic tie-breaking' per updater.  Stable
-        passes give a lexicographic (key, ts) sort without 64-bit keys.
-        The middle pass pushes invalid rows behind valid ones *within*
-        the sink key group too, so a genuine event with key 2**31 - 1
-        (the sink value) keeps its valid run contiguous — the updater
-        paths write a run's total at its last valid row."""
+        passes give a lexicographic (key, ts) sort without widening the
+        key.  The middle pass pushes invalid rows behind valid ones
+        *within* the sink key group too, so a genuine event at the key
+        dtype's max (the sink value) keeps its valid run contiguous —
+        the updater paths write a run's total at its last valid row."""
+        sink = jnp.asarray(jnp.iinfo(self.key.dtype).max, self.key.dtype)
         by_ts = self.take(jnp.argsort(self.ts, stable=True))
         by_val = by_ts.take(jnp.argsort(~by_ts.valid, stable=True))
-        invalid_key = jnp.where(by_val.valid, by_val.key,
-                                jnp.int32(2**31 - 1))
+        invalid_key = jnp.where(by_val.valid, by_val.key, sink)
         out = by_val.take(jnp.argsort(invalid_key, stable=True))
         # rewrite invalid rows' keys to the sink value so the key array is
         # truly sorted (downstream run detection relies on it)
-        skey = jnp.where(out.valid, out.key, jnp.int32(2**31 - 1))
+        skey = jnp.where(out.valid, out.key, sink)
         return EventBatch(out.sid, out.ts, skey, out.value, out.valid)
 
     # ---- host-side helpers ----

@@ -43,9 +43,27 @@ def mix32(x):
     return x
 
 
+def fold_u32(key):
+    """Fold a key array to uint32: xor-fold for 64-bit keys, identity
+    cast otherwise — 32-bit hashing stays bit-identical."""
+    if np.dtype(key.dtype).itemsize > 4:
+        u = key.astype(jnp.uint64)
+        return (u ^ (u >> jnp.uint64(32))).astype(U32)
+    return key.astype(U32)
+
+
 def hash_key(key, salt: int = 0):
-    """Hash int32/uint32 keys (+salt) to uint32."""
-    return mix32(key.astype(U32) ^ U32(salt & 0xFFFFFFFF))
+    """Hash integer keys (+salt) to uint32; 64-bit keys are xor-folded
+    first so every hash consumer sees the full key band."""
+    return mix32(fold_u32(key) ^ U32(salt & 0xFFFFFFFF))
+
+
+def fold_u32_np(x: np.ndarray) -> np.ndarray:
+    """Host mirror of :func:`fold_u32`."""
+    if x.dtype.itemsize > 4:
+        u = x.astype(np.uint64)
+        return (u ^ (u >> np.uint64(32))).astype(np.uint32)
+    return x.astype(np.uint32)
 
 
 def _mix32_np(x: np.ndarray) -> np.ndarray:
@@ -195,10 +213,14 @@ class HashRing:
         return self._table_cache
 
     def owners(self, keys: np.ndarray, dest_salt: int) -> np.ndarray:
-        """Host-side routing (migration planning): shard id per key."""
+        """Host-side routing (migration planning): shard id per key.
+        Arrays keep their key width (int64 keys route on the folded
+        hash); bare sequences default to int32."""
         rh, rs = self.table()
+        k = keys if hasattr(keys, "dtype") \
+            else np.asarray(keys, np.int32)
         return np.asarray(jax.device_get(
-            route(jnp.asarray(keys, jnp.int32), dest_salt, rh, rs)))
+            route(jnp.asarray(k), dest_salt, rh, rs)))
 
 
 def route(keys, dest_salt: int, ring_hashes, ring_shards):

@@ -46,44 +46,54 @@ class SplitSlateReadError(RuntimeError):
     (no ``read_slate``/workflow surface) or an unknown updater."""
 
 
-def split_window(ways: int) -> int:
+def split_window(ways: int, bits: int = 32) -> int:
     """Largest ``L`` such that every ``|k| < L`` splits W ways with
-    sub-keys confined to ``(-2**30, 2**30)`` — wrap-free int32."""
+    sub-keys confined to ``(-2**(bits-2), 2**(bits-2))`` — wrap-free in
+    the key dtype.  Under ``bits=64`` the window covers the entire
+    int32 band, so every 32-bit-valued key splits and merges exactly
+    (the DESIGN 12.5 mid band is gone)."""
     if ways < 1:
         raise ValueError(f"ways must be >= 1, got {ways}")
-    return (1 << 30) // ways
+    return (1 << (bits - 2)) // ways
+
+
+def _key_bits(dtype) -> int:
+    return np.dtype(dtype).itemsize * 8
 
 
 def split_keys(keys, ts, ways: int, nonce=None):
     """key -> key*W + r with r pseudo-random per event (salted by ts and
     a per-row nonce so a hot key's events spread across all W sub-keys
-    even within one microbatch).  Keys outside ``split_window(ways)``
-    pass through unsplit (overflow-safe; see module docstring)."""
+    even within one microbatch).  Keys outside
+    ``split_window(ways, bits)`` — bits taken from the key dtype — pass
+    through unsplit (overflow-safe; see module docstring)."""
+    kd = keys.dtype
     if nonce is None:
         nonce = jnp.arange(keys.shape[0], dtype=jnp.int32)
     mixin = keys ^ (ts * jnp.int32(-1640531535)) ^ \
         (nonce * jnp.int32(40503))  # 2654435761 as signed int32
-    r = (hash_key(mixin, salt=0x51717) % jnp.uint32(ways)).astype(
-        jnp.int32)
-    w = jnp.int32(split_window(ways))
-    # |k| < w without jnp.abs (abs(-2**31) wraps in int32)
+    r = (hash_key(mixin, salt=0x51717) % jnp.uint32(ways)).astype(kd)
+    w = jnp.asarray(split_window(ways, _key_bits(kd)), kd)
+    # |k| < w without jnp.abs (abs of the dtype min wraps)
     in_window = (keys > -w) & (keys < w)
-    return jnp.where(in_window, keys * jnp.int32(ways) + r, keys)
+    return jnp.where(in_window, keys * jnp.asarray(ways, kd) + r, keys)
 
 
 def merge_keys(split, ways: int):
     """Exact inverse of :func:`split_keys` for every key inside the
-    split window and every ``|k| >= 2**30`` (the int32 extremes); see
-    the module docstring for the mid band."""
-    bound = jnp.int32(split_window(ways) * ways)   # <= 2**30, no wrap
+    split window and every ``|k| >= 2**(bits-2)`` (the dtype extremes);
+    see the module docstring for the mid band."""
+    kd = split.dtype
+    # <= 2**(bits-2), no wrap
+    bound = jnp.asarray(split_window(ways, _key_bits(kd)) * ways, kd)
     in_image = (split > -bound) & (split < bound)
-    return jnp.where(in_image, split // jnp.int32(ways), split)
+    return jnp.where(in_image, split // jnp.asarray(ways, kd), split)
 
 
-def subkeys_of(key: int, ways: int) -> List[int]:
+def subkeys_of(key: int, ways: int, bits: int = 32) -> List[int]:
     """The sub-keys a key's events may have been rewritten to (host
     side, for reads).  Mirrors :func:`split_keys` exactly."""
-    if abs(int(key)) < split_window(ways):
+    if abs(int(key)) < split_window(ways, bits):
         return [int(key) * ways + r for r in range(ways)]
     return [int(key)]
 
@@ -138,8 +148,9 @@ def read_split_slate(engine, state, updater: str, key: int, ways: int,
     # engine's read_slate re-acquires) so a mid-loop reconfigure cannot
     # hand back a mix of pre- and post-migration partials
     lock = getattr(engine, "read_lock", None) or nullcontext()
+    bits = int(getattr(engine, "key_bits", 32))
     with lock:
-        for sub in subkeys_of(key, ways):
+        for sub in subkeys_of(key, ways, bits):
             s = read(state, updater, sub)
             if s is not None:
                 partials.append(s)

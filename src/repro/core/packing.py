@@ -59,10 +59,16 @@ def pack_spec(slate_spec) -> PackSpec:
     rows = []
     width = 0
     for shape, dtype in leaves:
+        dt = jnp.dtype(dtype)
+        if dt.itemsize > 4:
+            raise TypeError(
+                f"pack_spec: 64-bit slate leaf {dt} cannot ride the "
+                f"fused path's f32 lanes exactly; keep slate values at "
+                f"<= 32 bits (only *keys* widen under key_dtype=int64)")
         w = 1
         for s in shape:
             w *= int(s)
-        rows.append((tuple(int(s) for s in shape), jnp.dtype(dtype), w))
+        rows.append((tuple(int(s) for s in shape), dt, w))
         width += w
     padded = max(LANE_ALIGN,
                  -(-width // LANE_ALIGN) * LANE_ALIGN)

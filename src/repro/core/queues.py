@@ -37,9 +37,11 @@ class QueueState:
         return self.buf.capacity
 
 
-def make_queue(capacity: int, value_spec) -> QueueState:
+def make_queue(capacity: int, value_spec,
+               key_dtype=jnp.int32) -> QueueState:
     z = jnp.zeros((), jnp.int32)
-    return QueueState(buf=EventBatch.empty(capacity, value_spec),
+    return QueueState(buf=EventBatch.empty(capacity, value_spec,
+                                           key_dtype=key_dtype),
                       head=z, size=z, dropped=z, peak=z)
 
 
@@ -88,7 +90,7 @@ def dequeue(q: QueueState, batch: int) -> Tuple[QueueState, EventBatch]:
         value=jax.tree.map(lambda a: a[idx], q.buf.value),
         valid=q.buf.valid[idx] & take,
     )
-    n_taken = jnp.sum(take.astype(jnp.int32))
+    n_taken = jnp.sum(take, dtype=jnp.int32)  # pinned: x64-stable carry
     # clear validity of consumed slots (hygiene for debugging)
     cleared = q.buf.valid.at[jnp.where(take, idx, Q)].set(False, mode="drop")
     nq = QueueState(buf=EventBatch(q.buf.sid, q.buf.ts, q.buf.key,

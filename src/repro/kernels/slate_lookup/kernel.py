@@ -59,9 +59,55 @@ def _lookup_kernel(query_ref, cand_ref, tkeys_ref, vals_ref,
     jax.lax.fori_loop(0, Q, body, 0)
 
 
+def _lookup_kernel_wide(qlo_ref, qhi_ref, cand_ref, klo_ref, khi_ref,
+                        vals_ref, slot_ref, found_ref, rows_ref, *,
+                        P: int, Q: int, D: int):
+    """64-bit-key variant: TPU SMEM scalars are 32-bit, so wide keys
+    arrive pre-split into (lo, hi) int32 planes and a hit is equality
+    on both planes — bit-exact int64 comparison without int64 in the
+    kernel."""
+    def body(qi, _):
+        def probe(p, carry):
+            slot, found = carry
+            c = cand_ref[p, qi]
+            klo = pl.load(klo_ref, (pl.dslice(c, 1),))[0]
+            khi = pl.load(khi_ref, (pl.dslice(c, 1),))[0]
+            hit = (klo == qlo_ref[qi]) & (khi == qhi_ref[qi])
+            # first hit wins (matches table.lookup's first_true)
+            slot = jnp.where(hit & ~found, c, slot)
+            return slot, found | hit
+
+        slot, found = jax.lax.fori_loop(
+            0, P, probe, (jnp.int32(-1), jnp.bool_(False)))
+        slot_ref[qi] = slot
+        found_ref[qi] = found.astype(jnp.int32)
+
+        @pl.when(found)
+        def _():
+            row = pl.load(vals_ref, (pl.dslice(slot, 1), slice(None)))
+            pl.store(rows_ref, (pl.dslice(qi, 1), slice(None)), row)
+
+        @pl.when(~found)
+        def _():
+            pl.store(rows_ref, (pl.dslice(qi, 1), slice(None)),
+                     jnp.zeros((1, D), vals_ref.dtype))
+
+        return 0
+
+    jax.lax.fori_loop(0, Q, body, 0)
+
+
 def supported(table_vals, query) -> bool:
     return (table_vals.ndim == 2 and table_vals.shape[1] % 8 == 0
             and query.shape[0] <= MAX_Q)
+
+
+def _split_planes(a):
+    """Integer [N] -> (lo, hi) int32 bit planes (exact for 64-bit)."""
+    u = a.astype(jnp.uint64)
+    lo = u.astype(jnp.uint32).astype(jnp.int32)
+    hi = (u >> jnp.uint64(32)).astype(jnp.uint32).astype(jnp.int32)
+    return lo, hi
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
@@ -96,4 +142,41 @@ def slate_lookup(table_keys, query, cand, table_vals, *,
         interpret=interpret,
     )(query.astype(jnp.int32), cand.astype(jnp.int32), table_keys,
       table_vals)
+    return slot, found.astype(bool), rows
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def slate_lookup_wide(table_keys, query, cand, table_vals, *,
+                      interpret: bool = False):
+    """64-bit-key entry: like :func:`slate_lookup` but ``table_keys`` /
+    ``query`` are int64, compared inside the kernel as (lo, hi) int32
+    bit planes."""
+    Q = query.shape[0]
+    P = cand.shape[0]
+    D = table_vals.shape[1]
+    qlo, qhi = _split_planes(query)
+    klo, khi = _split_planes(table_keys)
+    kernel = functools.partial(_lookup_kernel_wide, P=P, Q=Q, D=D)
+    slot, found, rows = pl.pallas_call(
+        kernel,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),       # query lo
+            pl.BlockSpec(memory_space=pltpu.SMEM),       # query hi
+            pl.BlockSpec(memory_space=pltpu.SMEM),       # cand
+            pl.BlockSpec(memory_space=pltpu.ANY),        # table keys lo
+            pl.BlockSpec(memory_space=pltpu.ANY),        # table keys hi
+            pl.BlockSpec(memory_space=pltpu.ANY),        # table vals
+        ],
+        out_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Q,), jnp.int32),
+            jax.ShapeDtypeStruct((Q,), jnp.int32),
+            jax.ShapeDtypeStruct((Q, D), table_vals.dtype),
+        ],
+        interpret=interpret,
+    )(qlo, qhi, cand.astype(jnp.int32), klo, khi, table_vals)
     return slot, found.astype(bool), rows

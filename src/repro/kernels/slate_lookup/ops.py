@@ -10,6 +10,7 @@
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 
 from repro.kernels.slate_lookup import ref as _ref
 
@@ -32,6 +33,12 @@ def slate_lookup(table_keys, query, table_vals, *, impl: str = "auto"):
         if _k.supported(table_vals, query):
             from repro.slates.table import _probe_seq
             cand = _probe_seq(query, int(table_keys.shape[0]))
+            # 64-bit keys enter the plane-split variant (SMEM scalars
+            # are 32-bit); same probe chain, bit-exact comparison
+            if jnp.dtype(query.dtype).itemsize > 4:
+                return _k.slate_lookup_wide(
+                    table_keys, query, cand, table_vals,
+                    interpret=(impl == "interpret"))
             return _k.slate_lookup(table_keys, query, cand, table_vals,
                                    interpret=(impl == "interpret"))
         impl = "jnp"

@@ -40,8 +40,14 @@ def _slate_kernel(keys_ref, deltas_ref, slots_ref, table_in_ref,
             else vals + contrib
 
     # scatter run totals into slate rows (read-modify-write)
+    # slice indices must share one dtype with the literal starts the
+    # slice(None) dims produce — the canonical int: int32 on TPU, int64
+    # when interpret runs under x64
+    idt = jnp.int64 if jax.config.jax_enable_x64 else jnp.int32
+
     def body(i, _):
-        slot = slots_ref[i]
+        i = jnp.asarray(i, idt)
+        slot = jnp.asarray(slots_ref[i], idt)
 
         @pl.when(slot >= 0)
         def _():

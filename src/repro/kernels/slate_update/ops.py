@@ -9,8 +9,20 @@
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 
 from repro.kernels.slate_update import ref as _ref
+
+
+def _segment_ids(keys_sorted):
+    """Map sorted wide keys to int32 segment ids.  The kernel consumes
+    keys only through adjacent-equality (run boundaries), which segment
+    ids over a sorted vector preserve exactly — so int64 keys ride the
+    int32 kernel losslessly."""
+    boundary = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32),
+         (keys_sorted[1:] != keys_sorted[:-1]).astype(jnp.int32)])
+    return jnp.cumsum(boundary)
 
 
 def slate_update(keys_sorted, deltas, slots, table_vals, *,
@@ -20,7 +32,10 @@ def slate_update(keys_sorted, deltas, slots, table_vals, *,
     if impl in ("pallas", "interpret"):
         from repro.kernels.slate_update import kernel as _k
         if _k.supported(deltas):
-            return _k.slate_update(keys_sorted, deltas, slots, table_vals,
+            ks = keys_sorted
+            if jnp.dtype(ks.dtype).itemsize > 4:
+                ks = _segment_ids(ks)
+            return _k.slate_update(ks, deltas, slots, table_vals,
                                    interpret=(impl == "interpret"), op=op)
         impl = "ref"
     if impl != "ref":

@@ -86,21 +86,50 @@ class FlushFrontier:
                              meta=d.get("meta"))
 
 
-def dirty_snapshot(table: tbl.SlateTable):
-    """Host copies of (keys, ts, slates) for dirty slots, and the cleared
-    table.  The device->host fetch is the only sync point; serialization
-    and disk I/O run on the flusher thread."""
-    dirty = np.asarray(jax.device_get(table.dirty))
-    keys = np.asarray(jax.device_get(table.keys))
-    ts = np.asarray(jax.device_get(table.ts))
-    idx = np.nonzero(dirty & (keys != -1))[0]
-    vals = jax.tree.map(lambda v: np.asarray(jax.device_get(v))[idx],
-                        table.vals)
+def begin_dirty_snapshot(table: tbl.SlateTable):
+    """Start the device->host fetch for a flush snapshot.
+
+    Device-side copies are taken first (so the token stays valid after
+    the next chunk's donation deletes the table buffers) and their host
+    transfer is kicked off asynchronously; :func:`finish_dirty_snapshot`
+    resolves the token to host rows whenever the driver is ready —
+    typically after the next chunk has been dispatched, so the transfer
+    and the serialization behind it overlap device compute.  Returns
+    ``(token, cleared_table)``; the cleared table (dirty bits dropped)
+    is usable immediately."""
+    token = (jnp.copy(table.dirty), jnp.copy(table.keys),
+             jnp.copy(table.ts), jax.tree.map(jnp.copy, table.vals))
+    for leaf in jax.tree.leaves(token):
+        copy_async = getattr(leaf, "copy_to_host_async", None)
+        if copy_async is not None:
+            copy_async()
     cleared = tbl.SlateTable(
         keys=table.keys, ts=table.ts,
         dirty=jnp.zeros_like(table.dirty),
         vals=table.vals, dropped=table.dropped)
-    return keys[idx], ts[idx], vals, cleared
+    return token, cleared
+
+
+def finish_dirty_snapshot(token):
+    """Resolve an in-flight snapshot to host ``(keys, ts, vals)`` of the
+    dirty occupied slots (the flusher's row format)."""
+    dirty_d, keys_d, ts_d, vals_d = token
+    dirty = np.asarray(jax.device_get(dirty_d))
+    keys = np.asarray(jax.device_get(keys_d))
+    ts = np.asarray(jax.device_get(ts_d))
+    idx = np.nonzero(dirty & (keys != -1))[0]
+    vals = jax.tree.map(lambda v: np.asarray(jax.device_get(v))[idx],
+                        vals_d)
+    return keys[idx], ts[idx], vals
+
+
+def dirty_snapshot(table: tbl.SlateTable):
+    """Host copies of (keys, ts, slates) for dirty slots, and the cleared
+    table — the synchronous begin+finish composition; serialization and
+    disk I/O still run on the flusher thread."""
+    token, cleared = begin_dirty_snapshot(table)
+    keys, ts, vals = finish_dirty_snapshot(token)
+    return keys, ts, vals, cleared
 
 
 def restore_into(table: tbl.SlateTable, keys: np.ndarray, slates,
@@ -115,7 +144,7 @@ def restore_into(table: tbl.SlateTable, keys: np.ndarray, slates,
     """
     if len(keys) == 0:
         return table
-    k = jnp.asarray(keys, jnp.int32)
+    k = jnp.asarray(keys, table.keys.dtype)
     valid = jnp.ones((len(keys),), bool)
     table, slot, found, placed = tbl.insert_or_find(table, k, valid)
     vals = jax.tree.map(jnp.asarray, slates)
@@ -238,7 +267,12 @@ class Flusher:
 
 
 def _rows_of(vals, n: int):
-    """Split a pytree of [n, ...] arrays into n per-key pytrees."""
+    """Split a pytree of [n, ...] arrays into n per-key pytrees.  One
+    iteration pass per leaf (``list`` walks the leading axis once)
+    instead of n fancy-index calls per leaf."""
     leaves, treedef = jax.tree.flatten(vals)
-    return [jax.tree.unflatten(treedef, [lf[i] for lf in leaves])
-            for i in range(n)]
+    if not leaves:
+        return [jax.tree.unflatten(treedef, []) for _ in range(n)]
+    per_leaf = [list(lf) for lf in leaves]
+    return [jax.tree.unflatten(treedef, list(row))
+            for row in zip(*per_leaf)]

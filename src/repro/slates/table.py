@@ -29,7 +29,7 @@ INSERT_ROUNDS = 4   # bounded retry rounds for batch insert
 @jax.tree_util.register_dataclass
 @dataclass
 class SlateTable:
-    keys: jnp.ndarray      # int32 [C], EMPTY = free
+    keys: jnp.ndarray      # int32/int64 [C], EMPTY = free
     ts: jnp.ndarray        # int32 [C] last-update tick (TTL)
     dirty: jnp.ndarray     # bool [C] updated since last flush
     vals: Any              # pytree, leaves [C, ...]
@@ -43,13 +43,14 @@ class SlateTable:
         return jnp.sum((self.keys != EMPTY).astype(jnp.int32))
 
 
-def make_table(capacity: int, value_spec: Dict[str, Any]) -> SlateTable:
+def make_table(capacity: int, value_spec: Dict[str, Any],
+               key_dtype=jnp.int32) -> SlateTable:
     """value_spec: pytree of (shape_suffix tuple, dtype)."""
     vals = jax.tree.map(
         lambda s: jnp.zeros((capacity,) + tuple(s[0]), s[1]),
         value_spec, is_leaf=_is_spec_leaf)
     return SlateTable(
-        keys=jnp.full((capacity,), EMPTY, jnp.int32),
+        keys=jnp.full((capacity,), EMPTY, key_dtype),
         ts=jnp.zeros((capacity,), jnp.int32),
         dirty=jnp.zeros((capacity,), bool),
         vals=vals,
@@ -124,7 +125,7 @@ def insert_or_find(table: SlateTable, query, valid) -> Tuple[
         pending = pending & ~success
         keys_arr = keys_try
 
-    dropped = table.dropped + jnp.sum(pending.astype(jnp.int32))
+    dropped = table.dropped + jnp.sum(pending, dtype=jnp.int32)
     new_table = SlateTable(keys=keys_arr, ts=table.ts, dirty=table.dirty,
                            vals=table.vals, dropped=dropped)
     return new_table, slot, found, placed
@@ -170,7 +171,8 @@ def write_slates(table: SlateTable, slot, ok, new_vals, tick) -> SlateTable:
 def expire_ttl(table: SlateTable, now, ttl: int) -> SlateTable:
     """Garbage-collect slates idle for > ttl ticks (paper section 4.2)."""
     dead = (table.keys != EMPTY) & (now - table.ts > ttl)
-    keys = jnp.where(dead, EMPTY, table.keys)
+    keys = jnp.where(dead, jnp.asarray(EMPTY, table.keys.dtype),
+                     table.keys)
     dirty = jnp.where(dead, False, table.dirty)
     return SlateTable(keys=keys, ts=table.ts, dirty=dirty, vals=table.vals,
                       dropped=table.dropped)

@@ -22,6 +22,7 @@ from dataclasses import dataclass
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.telemetry import sketch as sk_mod
@@ -189,15 +190,39 @@ class MetricsRegistry:
         ``device_get`` of the aggregate tree (the piggyback transfer),
         then ``observe_raw``.  Heavy hitters are estimated from the
         state's sketch when present (summed over shards)."""
+        return self.finish_observe(self.begin_observe(engine, state))
+
+    def begin_observe(self, engine, state):
+        """Phase 1 of the double-buffered boundary reading: assemble the
+        aggregate tree, copy it out of the soon-to-be-donated state
+        buffers, and start the device->host transfer.  Returns a pending
+        token; the driver resolves it with :meth:`finish_observe` after
+        the *next* chunk is dispatched so the transfer overlaps device
+        compute (one-chunk report lag)."""
+        tree = self._tree(engine, state, with_heavy=True)
+        # device-side copies escape the donation of `state` by the next
+        # chunk dispatch; the async copy then drains in the background
+        tree = jax.tree.map(jnp.copy, tree)
+        for leaf in jax.tree.leaves(tree):
+            copy_async = getattr(leaf, "copy_to_host_async", None)
+            if copy_async is not None:
+                copy_async()
+        return (engine, tree)
+
+    def finish_observe(self, pending) -> TelemetryReport:
+        """Phase 2: resolve the transfer and fold the reading into the
+        window state (the ``observe_raw`` path)."""
+        engine, tree = pending
+        host = jax.device_get(tree)
         (tick, events, qsize, qpeak, dropped, occ, heavy,
-         active, shed, deferred) = self._read(engine, state,
+         active, shed, deferred) = self._post(engine, host,
                                               with_heavy=True)
         return self.observe_raw(
             tick=tick, events=events, queue_depth=qsize,
             queue_peak=qpeak, dropped=dropped, occupancy=occ,
             active=active, heavy=heavy, shed=shed, deferred=deferred)
 
-    def _read(self, engine, state, *, with_heavy: bool):
+    def _tree(self, engine, state, *, with_heavy: bool):
         upd = {u.name for u in engine.wf.updaters()}
         tree = {
             "tick": state["tick"],
@@ -219,8 +244,14 @@ class MetricsRegistry:
             tree["deferred"] = state["deferred"]
         if with_heavy and "sketch" in state:
             tree["sk"] = state["sketch"]
-        host = jax.device_get(tree)            # the one boundary sync
+        return tree
 
+    def _read(self, engine, state, *, with_heavy: bool):
+        tree = self._tree(engine, state, with_heavy=with_heavy)
+        host = jax.device_get(tree)            # the one boundary sync
+        return self._post(engine, host, with_heavy=with_heavy)
+
+    def _post(self, engine, host, *, with_heavy: bool):
         def shards(x):
             return np.atleast_1d(np.asarray(x, np.float64))
 

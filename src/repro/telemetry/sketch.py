@@ -25,7 +25,7 @@ from typing import Any, Dict, List, Tuple
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.hashing import _mix32_np, mix32
+from repro.core.hashing import _mix32_np, fold_u32, fold_u32_np, mix32
 from repro.kernels.countmin import countmin_update
 
 
@@ -35,21 +35,24 @@ def make_salts(depth: int, seed: int = 0x7E1E) -> np.ndarray:
     return _mix32_np(rows * np.uint32(0x85EBCA6B) + np.uint32(seed))
 
 
-def make_sketch(depth: int, width: int, sample: int) -> Dict[str, Any]:
-    """Fresh sketch state (no leading shard dim; engines broadcast)."""
+def make_sketch(depth: int, width: int, sample: int,
+                key_dtype=jnp.int32) -> Dict[str, Any]:
+    """Fresh sketch state (no leading shard dim; engines broadcast).
+    The sample ring carries raw keys, so it shares the key dtype."""
     return {
         "counts": jnp.zeros((depth, width), jnp.int32),
         "total": jnp.zeros((), jnp.int32),
-        "sample": jnp.zeros((sample,), jnp.int32),
+        "sample": jnp.zeros((sample,), key_dtype),
         "sample_n": jnp.zeros((), jnp.int32),
     }
 
 
 def columns(keys, salts: np.ndarray, width: int):
-    """[B] int32 keys -> [depth, B] int32 hashed columns (jit-safe;
+    """[B] integer keys -> [depth, B] int32 hashed columns (jit-safe;
     one broadcast avalanche over all rows at once — bitwise the same
-    as per-row ``hash_key(keys, salt)``, which ``estimate`` uses)."""
-    h = mix32(keys.astype(jnp.uint32)[None, :]
+    as per-row ``hash_key(keys, salt)``, which ``estimate`` uses;
+    64-bit keys enter through the same xor-fold)."""
+    h = mix32(fold_u32(keys)[None, :]
               ^ jnp.asarray(salts, jnp.uint32)[:, None])
     return (h % jnp.uint32(width)).astype(jnp.int32)
 
@@ -105,11 +108,15 @@ def estimate(counts: np.ndarray, keys, salts: np.ndarray) -> np.ndarray:
     (``_mix32_np`` is bitwise ``hash_key``): the readout path must not
     add device dispatches beyond the boundary snapshot itself."""
     counts = np.asarray(counts)
-    keys = np.atleast_1d(np.asarray(keys, np.int32))
+    # arrays keep their key width (the fold matches the device path);
+    # bare sequences default to int32
+    if not (isinstance(keys, np.ndarray) and keys.dtype.kind in "iu"):
+        keys = np.asarray(keys, np.int32)
+    keys = np.atleast_1d(keys)
     width = counts.shape[1]
     ests = []
     for d, s in enumerate(salts):
-        cols = _mix32_np(keys.astype(np.uint32) ^ np.uint32(s))
+        cols = _mix32_np(fold_u32_np(keys) ^ np.uint32(s))
         ests.append(counts[d, cols % np.uint32(width)])
     return np.min(np.stack(ests), axis=0)
 
@@ -118,7 +125,7 @@ def candidates(sample: np.ndarray, sample_n: int) -> np.ndarray:
     """Distinct keys currently resident in the sample ring."""
     sample = np.asarray(sample)
     n = min(int(sample_n), sample.shape[0])
-    return np.unique(sample[:n]) if n else np.zeros(0, np.int32)
+    return np.unique(sample[:n]) if n else np.zeros(0, sample.dtype)
 
 
 def heavy_hitters(counts: np.ndarray, sample: np.ndarray, sample_n: int,

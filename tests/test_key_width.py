@@ -1,0 +1,258 @@
+"""64-bit key plane, end-to-end (DESIGN.md 12.5 closure).
+
+``EngineConfig(key_dtype="int64")`` widens event keys, slate tables,
+the WAL frames, the sketch sample, and the kernel entry points behind
+one switch.  Contracts under test:
+
+- construction-time validation: int64 without ``jax_enable_x64`` is a
+  hard error (silent demotion would corrupt keys), bad dtypes rejected;
+- int32 behavior is bit-identical whether or not x64 is globally on
+  (bare python key sequences must not widen);
+- bitwise slate parity between ``key_dtype=int32`` and ``int64`` runs
+  over the same in-band key stream, on jnp and interpret backends;
+- keys beyond the int32 band (> 2**31) route, aggregate, flush,
+  recover, and read back exactly;
+- ``hotspot.split_window`` arithmetic is exact across the full 64-bit
+  band (the documented 12.5 mid-band inexactness).
+
+The x64-dependent tests skip unless ``JAX_ENABLE_X64=1`` (CI runs them
+in the dedicated x64 lane).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.engine import Engine, EngineConfig, resolve_key_dtype
+from repro.core.event import EventBatch
+from repro.core.workflow import Workflow
+from tests.conftest import CountingUpdater, PassThroughMapper
+from tests.test_recovery import table_dict, assert_tables_bitwise_equal
+
+X64 = bool(jax.config.jax_enable_x64)
+needs_x64 = pytest.mark.skipif(
+    not X64, reason="int64 keys need JAX_ENABLE_X64=1 (x64 CI lane)")
+
+
+def _wf():
+    return Workflow([PassThroughMapper(), CountingUpdater()],
+                    external_streams=("S1",))
+
+
+def _engine(fused="jnp", key_dtype="int32", **kw):
+    return Engine(_wf(), EngineConfig(batch_size=32, queue_capacity=128,
+                                      chunk_size=4, fused=fused,
+                                      key_dtype=key_dtype, **kw))
+
+
+def _source(key_dtype, lift=0, until=None):
+    """In-band random keys, optionally lifted beyond the int32 band.
+    Ticks at/after ``until`` emit nothing (drain ticks, so queued
+    mapper output reaches the updater before we scan the table)."""
+    def src(t, ingest=None):
+        n = 24 if until is None or t < until else 0
+        rng = np.random.default_rng(300 + t)
+        keys = rng.integers(0, 48, size=n).astype(key_dtype) + lift
+        xs = rng.integers(0, 9, size=n).astype(np.int32)
+        return {"S1": EventBatch.of(key=keys, value={"x": np.asarray(xs)},
+                                    ts=np.full(n, t, np.int32))}
+    return src
+
+
+# ---------------------------------------------------------------------------
+# construction-time validation
+# ---------------------------------------------------------------------------
+
+def test_key_dtype_rejected_without_x64():
+    if X64:
+        pytest.skip("x64 lane: demotion cannot happen here")
+    with pytest.raises(RuntimeError, match="jax_enable_x64"):
+        _engine(key_dtype="int64")
+
+
+def test_key_dtype_rejects_non_integer():
+    with pytest.raises(ValueError, match="int32 or int64"):
+        resolve_key_dtype("float32")
+    with pytest.raises(ValueError, match="int32 or int64"):
+        _engine(key_dtype="uint8")
+
+
+def test_int32_default_unchanged():
+    eng = _engine()
+    state = eng.init_state()
+    assert state["tables"]["U1"].keys.dtype == jnp.int32
+    assert state["queues"]["M1"].buf.key.dtype == jnp.int32
+    assert eng.key_bits == 32
+
+
+def test_bare_sequences_stay_int32():
+    """Python-list keys must not widen under x64 — int32 runs stay
+    bit-identical whether or not the flag is globally on."""
+    b = EventBatch.of(key=[1, 2, 3], value={"x": np.zeros(3, np.int32)})
+    assert b.key.dtype == jnp.int32
+    assert b.ts.dtype == jnp.int32
+
+
+# ---------------------------------------------------------------------------
+# bitwise parity: int32 vs int64 over the same in-band stream
+# ---------------------------------------------------------------------------
+
+@needs_x64
+@pytest.mark.parametrize("fused", ["jnp", "interpret"])
+def test_bitwise_slate_parity_across_key_widths(fused):
+    base = None
+    for kd in ("int32", "int64"):
+        eng = _engine(fused=fused, key_dtype=kd)
+        state, _ = eng.run(eng.init_state(), _source(np.dtype(kd)), 12)
+        tables = table_dict(state, "U1")
+        if base is None:
+            base = tables
+        else:
+            assert_tables_bitwise_equal(base, tables)
+
+
+@needs_x64
+@pytest.mark.parametrize("fused", ["jnp", "interpret"])
+def test_wide_keys_beyond_int32_band(fused):
+    """Keys above 2**31 aggregate and read back exactly — no fold
+    collisions in-table, no silent truncation anywhere on the path."""
+    lift = np.int64(3) << 32
+    eng = _engine(fused=fused, key_dtype="int64")
+    state, _ = eng.run(eng.init_state(),
+                       _source(np.int64, lift=lift, until=12), 16)
+    tables = table_dict(state, "U1")
+    assert tables and all(int(k) >= int(lift) for k in tables)
+    # per-key ground truth from the raw stream
+    truth = {}
+    for t in range(12):
+        b = _source(np.int64, lift=lift)(t)["S1"]
+        for k, x in zip(np.asarray(b.key), np.asarray(b.value["x"])):
+            c, s = truth.get(int(k), (0, 0.0))
+            truth[int(k)] = (c + 1, s + float(x))
+    assert set(tables) == set(truth)
+    for k, (c, s) in truth.items():
+        assert int(tables[k]["count"]) == c
+        assert float(tables[k]["sum"]) == s
+    # the batched read path agrees with the table scan
+    ks = sorted(tables)
+    rows = eng.read_slates(state, "U1", np.asarray(ks, np.int64))
+    for k, row in zip(ks, rows):
+        assert row is not None
+        assert int(row["count"]) == int(tables[k]["count"])
+
+
+@needs_x64
+def test_wide_key_durable_recovery_parity(tmp_path):
+    """int64 keys survive the full durability loop: WAL frames keep the
+    width, flushed slates restore, replay is bitwise exact."""
+    from repro.core.durability import DurabilityConfig
+    from repro.slates.flush import FlushConfig, FlushPolicy
+
+    lift = np.int64(5) << 33
+
+    def build(d):
+        return Engine(_wf(), EngineConfig(
+            batch_size=32, queue_capacity=128, chunk_size=4, fused="jnp",
+            key_dtype="int64",
+            durability=DurabilityConfig(dir=d, flush=FlushConfig(
+                policy=FlushPolicy.EVERY_K, every_k=8))))
+
+    src = _source(np.int64, lift=lift)
+    ea = build(str(tmp_path / "a"))
+    sa, _ = ea.run(ea.init_state(), src, 24)
+    base = table_dict(sa, "U1")
+    ea.close()
+
+    eb = build(str(tmp_path / "b"))
+    sb, _ = eb.run(eb.init_state(), src, 12)
+    assert eb.dur.frontier.tick > 0
+    del sb
+    eb.close()
+
+    eb2 = build(str(tmp_path / "b"))
+    s2 = eb2.recover()
+    s2, _ = eb2.run(s2, src, 12, source_offset=12)
+    rec = table_dict(s2, "U1")
+    eb2.close()
+    assert_tables_bitwise_equal(base, rec)
+
+
+# ---------------------------------------------------------------------------
+# kernel entry points: interpret-mode wide lookup, segment-id update
+# ---------------------------------------------------------------------------
+
+@needs_x64
+def test_slate_lookup_wide_interpret_matches_ref():
+    from repro.kernels.slate_lookup import ops as lk_ops
+    from repro.slates import table as tbl
+
+    t = tbl.make_table(64, {"v": ((8,), jnp.float32)}, key_dtype=jnp.int64)
+    keys = (jnp.arange(1, 9, dtype=jnp.int64) << 33) + 7
+    t, slot, _, placed = tbl.insert_or_find(
+        t, keys, jnp.ones((8,), bool))
+    assert bool(placed.all())
+    vals = {"v": jnp.arange(64, dtype=jnp.float32).reshape(8, 8)}
+    t = tbl.write_slates(t, slot, placed, vals,
+                         jnp.zeros((8,), jnp.int32))
+    query = jnp.concatenate([keys[:4], keys[:4] + 1])   # 4 hits, 4 misses
+    s_ref, f_ref, r_ref = lk_ops.slate_lookup(
+        t.keys, query, t.vals["v"], impl="ref")
+    s_k, f_k, r_k = lk_ops.slate_lookup(
+        t.keys, query, t.vals["v"], impl="interpret")
+    np.testing.assert_array_equal(np.asarray(f_ref), np.asarray(f_k))
+    np.testing.assert_array_equal(np.asarray(s_ref), np.asarray(s_k))
+    np.testing.assert_array_equal(np.asarray(r_ref), np.asarray(r_k))
+
+
+@needs_x64
+def test_segment_ids_preserve_wide_runs():
+    """The fused update kernel sees sorted int64 keys as int32 segment
+    ids; adjacent-equality (all the kernel uses) must be preserved even
+    for keys whose low 32 bits collide."""
+    from repro.kernels.slate_update.ops import _segment_ids
+    keys = jnp.asarray([1, 1, 1 + (1 << 32), 1 + (1 << 32), 2 << 40],
+                       jnp.int64)
+    seg = np.asarray(_segment_ids(keys))
+    assert seg.dtype == np.int32
+    assert (seg[:-1] != seg[1:]).tolist() == \
+        (np.asarray(keys[:-1]) != np.asarray(keys[1:])).tolist()
+
+
+# ---------------------------------------------------------------------------
+# hashing + hotspot arithmetic across the full band
+# ---------------------------------------------------------------------------
+
+@needs_x64
+def test_fold_matches_int32_hash_in_band():
+    """In-band keys hash identically at both widths, so int32 and int64
+    runs route/probe/sketch the same — the parity tests' substrate."""
+    from repro.core.hashing import hash_key
+    ks32 = jnp.asarray([0, 1, 7, 2**31 - 1], jnp.int32)
+    h32 = np.asarray(hash_key(ks32, salt=13))
+    h64 = np.asarray(hash_key(ks32.astype(jnp.int64), salt=13))
+    np.testing.assert_array_equal(h32, h64)
+
+
+def test_split_window_exact_across_band():
+    """DESIGN.md 12.5 closure: the split/merge window arithmetic is
+    exact at 64-bit — pure int math, no x64 flag needed."""
+    from repro.core.hotspot import split_window
+    for ways in (2, 3, 4, 7):
+        w32, w64 = split_window(ways, 32), split_window(ways, 64)
+        assert w32 == (1 << 30) // ways
+        assert w64 == (1 << 62) // ways
+        # every in-window key splits below the next key's window start
+        assert (w32 - 1) * ways + (ways - 1) < w32 * ways
+        assert (w64 - 1) * ways + (ways - 1) < w64 * ways
+
+
+@needs_x64
+def test_split_merge_roundtrip_wide():
+    from repro.core import hotspot
+    keys = jnp.asarray([0, 5, 1 << 40, (1 << 60) // 3], jnp.int64)
+    ts = jnp.arange(keys.shape[0], dtype=jnp.int32)
+    for ways in (2, 4):
+        sub = hotspot.split_keys(keys, ts, ways)
+        assert sub.dtype == jnp.int64
+        back = hotspot.merge_keys(sub, ways)
+        np.testing.assert_array_equal(np.asarray(back), np.asarray(keys))
