@@ -44,6 +44,11 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 GUARDED = ("latency_per_tick", "tick_dispatch_chunked32",
            "slate_read_qps", "ml_mapper_throughput",
            "wal_append_per_tick", "throughput_associative_events")
+# budget guards: metric must stay within frac * reference *within the
+# same measurement attempt* — no baseline or anchor normalization
+# needed, so tiny paired-delta metrics (too noisy for the 15% ratio
+# guard) still get a hard CI ceiling.
+BUDGETS = {"histogram_update_overhead": ("latency_per_tick", 0.05)}
 ANCHOR = "guard_calibration"
 ROOT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..")
 
@@ -80,6 +85,7 @@ def measure():
     bench.bench_ml_mapper_throughput()
     bench.bench_event_throughput()
     bench.bench_durability()
+    bench.bench_histogram_overhead()
     bench.bench_guard_calibration()
     out = {n: u for n, u, _ in bench.ROWS}
     bench.ROWS.clear()
@@ -88,19 +94,29 @@ def measure():
 
 def pin(attempts: int = 3) -> int:
     """Merge guard-context measurements (best of ``attempts``) into the
-    pinned baseline under ``guard:``-prefixed keys."""
+    pinned baseline under ``guard:``-prefixed keys.
+
+    Pinning is *ratio-consistent*: the stored value for each metric is
+    its best observed metric/anchor ratio **within a single attempt**,
+    rescaled by the pinned anchor.  Taking the min of each metric and
+    the min of the anchor independently across attempts would pair a
+    fast metric from one attempt with a fast anchor from another —
+    biasing every baseline ratio low, so the check (which always
+    compares within one attempt) flakes whenever the anchor and the
+    dispatch-bound metrics jitter out of phase."""
     base, path = load_baseline()
     if base is None:
         print(f"bench guard: no baseline to pin ({path or 'BENCH_*.json'})")
         return 1
-    best = {}
-    for _ in range(attempts):
-        cur = measure()
-        for name, us in cur.items():
-            best[name] = min(best.get(name, float("inf")), us)
-    for name in GUARDED + (ANCHOR,):
-        base[f"guard:{name}"] = round(best[name], 2)
-        print(f"  pinned guard:{name} = {best[name]:.2f}us")
+    runs = [measure() for _ in range(attempts)]
+    anchor = sorted(r[ANCHOR] for r in runs)[len(runs) // 2]   # median
+    base[f"guard:{ANCHOR}"] = round(anchor, 2)
+    print(f"  pinned guard:{ANCHOR} = {anchor:.2f}us (median)")
+    for name in GUARDED + tuple(BUDGETS):
+        ratio = min(r[name] / r[ANCHOR] for r in runs)
+        base[f"guard:{name}"] = round(ratio * anchor, 2)
+        print(f"  pinned guard:{name} = {ratio * anchor:.2f}us "
+              f"(best in-attempt ratio x median anchor)")
     with open(path, "w") as f:
         json.dump(base, f, indent=2, sort_keys=True)
     print(f"bench guard: pinned guard-context baseline into {path}")
@@ -136,13 +152,33 @@ def main() -> int:
                   f"normalized ratio {ratio:.3f} vs {path} ({mark})")
             if ratio > 1 + tol:
                 bad.append(m)
+        for m, (ref, frac) in BUDGETS.items():
+            # hard ceiling within the same attempt: cur vs frac * ref,
+            # both measured moments apart on the same machine — no
+            # baseline, no anchor, no cross-runner normalization
+            ratio = cur[m] / max(1e-9, frac * cur[ref])
+            worst[m] = min(worst.get(m, float("inf")), ratio)
+            mark = "FAIL" if ratio > 1.0 else "ok"
+            print(f"  [{attempt}/{attempts}] {m}: {cur[m]:.2f}us, "
+                  f"{100 * cur[m] / max(1e-9, cur[ref]):.1f}% of {ref} "
+                  f"(budget {frac:.0%}) ({mark})")
+            if ratio > 1.0:
+                bad.append(m)
         if not bad:
             print(f"bench guard: pass (tol {tol:.0%})")
             return 0
-    fails = [m for m, r in worst.items() if r > 1 + tol]
-    print(f"bench guard: FAIL — {fails} regressed > {tol:.0%} in every "
-          f"attempt (best normalized ratios "
-          f"{ {m: round(worst[m], 3) for m in fails} })")
+    # no attempt was clean across the board — but "regression" means a
+    # metric that failed in EVERY attempt (per-metric best ratio), not
+    # "no single attempt where all N noisy metrics lined up at once"
+    fails = [m for m, r in worst.items()
+             if r > (1.0 if m in BUDGETS else 1 + tol)]
+    if not fails:
+        print(f"bench guard: pass (tol {tol:.0%}; every metric cleared "
+              f"in at least one of {attempts} attempts)")
+        return 0
+    print(f"bench guard: FAIL — {fails} regressed in every attempt "
+          f"(best ratios { {m: round(worst[m], 3) for m in fails} }; "
+          f"ratio-guard tol {tol:.0%}, budget guards hard)")
     return 1
 
 

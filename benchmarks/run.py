@@ -642,35 +642,12 @@ def bench_elasticity():
 # closed loop (square-wave load -> shard count trace, subprocess)
 # ----------------------------------------------------------------------
 
-def bench_telemetry_overhead():
-    """Added per-tick cost of the sketch, measured on the chunk path
-    (32 scanned ticks amortize dispatch noise 32x) with the on/off
-    timings interleaved — separately-constructed engines drift by more
-    than the quantity under measurement otherwise."""
-    from repro.core.engine import stack_sources
-    from repro.telemetry.metrics import TelemetryConfig
-    lat = next((u for n, u, _ in ROWS if n == "latency_per_tick"), None)
-    rng = np.random.default_rng(11)
-    T = 32
-    stacked = stack_sources([{"S1": zipf_batch(rng, 256, tick=t)}
-                             for t in range(T)])
-
-    def make(tc):
-        eng, state = counting_engine(batch_size=256,
-                                     queue_capacity=2048, telemetry=tc)
-        box = {"s": state}
-
-        def chunk():
-            box["s"], _, _ = eng.run_chunk(box["s"], stacked)
-            jax.block_until_ready(box["s"]["tick"])
-
-        for _ in range(3):
-            chunk()
-        return chunk
-
-    c_off, c_on = make(None), make(TelemetryConfig(impl="ref"))
+def _paired_delta(c_off, c_on, T, rounds=50):
+    """Median of paired on-off chunk deltas, pair order alternating:
+    adjacent pairs cancel slow drift, alternation cancels position
+    bias — best-of-n does neither.  Returns us per tick."""
     deltas = []
-    for i in range(50):
+    for i in range(rounds):
         first, second = (c_off, c_on) if i % 2 == 0 else (c_on, c_off)
         t0 = time.perf_counter()
         first()
@@ -678,14 +655,96 @@ def bench_telemetry_overhead():
         second()
         d = (time.perf_counter() - t1) - (t1 - t0)
         deltas.append(d if i % 2 == 0 else -d)
-    # median of paired on-off deltas, pair order alternating: adjacent
-    # pairs cancel slow drift, alternation cancels position bias —
-    # best-of-n does neither
-    delta = max(0.0, float(np.median(deltas)) * 1e6 / T)
+    return max(0.0, float(np.median(deltas)) * 1e6 / T)
+
+
+def _chunk_stepper(stacked, tc):
+    eng, state = counting_engine(batch_size=256, queue_capacity=2048,
+                                 telemetry=tc)
+    box = {"s": state}
+
+    def chunk():
+        box["s"], _, _ = eng.run_chunk(box["s"], stacked)
+        jax.block_until_ready(box["s"]["tick"])
+
+    for _ in range(3):
+        chunk()
+    return chunk
+
+
+def bench_telemetry_overhead():
+    """Added per-tick cost of the sketch, measured on the chunk path
+    (32 scanned ticks amortize dispatch noise 32x) with the on/off
+    timings interleaved — separately-constructed engines drift by more
+    than the quantity under measurement otherwise.  Latency histograms
+    stay off on both sides so only the sketch moves (they get their
+    own row below)."""
+    from repro.core.engine import stack_sources
+    from repro.telemetry.metrics import TelemetryConfig
+    lat = next((u for n, u, _ in ROWS if n == "latency_per_tick"), None)
+    rng = np.random.default_rng(11)
+    T = 32
+    stacked = stack_sources([{"S1": zipf_batch(rng, 256, tick=t)}
+                             for t in range(T)])
+    c_off = _chunk_stepper(stacked, None)
+    c_on = _chunk_stepper(stacked, TelemetryConfig(impl="ref",
+                                                   latency_buckets=0))
+    delta = _paired_delta(c_off, c_on, T)
     pct = f"{100 * delta / lat:.1f}% of latency_per_tick" if lat else "?"
     row("countmin_update_overhead", delta,
         f"count-min sketch in the jitted chunk tick: +{delta:.1f}us "
         f"({pct}; target <= 5%)")
+
+
+def bench_histogram_overhead():
+    """Added per-tick cost of the device latency histograms (DESIGN.md
+    18): telemetry-on engines with and without ``latency_buckets``,
+    same interleaved paired-delta protocol as the sketch row so only
+    the per-arc histogram update moves.  Budget-guarded in CI
+    (benchmarks/guard.py BUDGETS: <= 5% of latency_per_tick)."""
+    from repro.core.engine import stack_sources
+    from repro.telemetry.metrics import TelemetryConfig
+    lat = next((u for n, u, _ in ROWS if n == "latency_per_tick"), None)
+    rng = np.random.default_rng(11)
+    T = 32
+    stacked = stack_sources([{"S1": zipf_batch(rng, 256, tick=t)}
+                             for t in range(T)])
+    c_off = _chunk_stepper(stacked, TelemetryConfig(impl="ref",
+                                                    latency_buckets=0))
+    c_on = _chunk_stepper(stacked, TelemetryConfig(impl="ref"))
+    delta = _paired_delta(c_off, c_on, T)
+    pct = f"{100 * delta / lat:.1f}% of latency_per_tick" if lat else "?"
+    row("histogram_update_overhead", delta,
+        f"per-arc latency histogram in the jitted chunk tick: "
+        f"+{delta:.1f}us ({pct}; target <= 5%)")
+
+
+def bench_event_latency():
+    """End-to-end event latency from the device histograms under a
+    backlogged feed (ingest 2x the per-tick batch budget, so queue
+    delay grows through the window) — the paper's < 2 s claim mapped
+    to source ticks, read at one chunk boundary with zero added
+    syncs."""
+    from repro.telemetry.metrics import TelemetryConfig
+    T = 32
+    # window < T: the first window's histogram delta is zero by the
+    # mark convention, so quantiles come from the later (backlogged)
+    # windows
+    eng, state = counting_engine(
+        batch_size=256, queue_capacity=1 << 14,
+        telemetry=TelemetryConfig(impl="ref", window=T // 4))
+    rng = np.random.default_rng(17)
+
+    def src(t, _mx):
+        return {"S1": zipf_batch(rng, 512, tick=t)}
+
+    state, _ = eng.run(state, src, T)
+    rep = eng.telemetry.last or eng.telemetry.observe(eng, state)
+    row("event_latency_p99", rep.event_latency_p99,
+        f"p50/p90/p99 = {rep.event_latency_p50:.1f}/"
+        f"{rep.event_latency_p90:.1f}/{rep.event_latency_p99:.1f} "
+        f"source ticks at updater dequeue (windowed device histogram, "
+        f"backlogged 2x feed)")
 
 
 _CLOSED_LOOP_CODE = r"""
@@ -909,14 +968,15 @@ def _ml_cfg():
     return _ML_CFG
 
 
-def bench_ml_mapper_throughput():
-    """Events/s through a FLOP-heavy ModelMapper stage + semantic top-k
-    updater — the full streaming-ML tick (embed, score, fused max slate
-    scatter), guarded in CI."""
+def _run_ml_mapper(key_dtype: str = "int32"):
+    """The streaming-ML tick (embed, score, fused max slate scatter) at
+    bench scale; shared by the default row and the x64 subprocess.
+    Returns ``(B, us_per_tick)``."""
     from repro import App, EventBatch, RuntimeConfig
     from repro.api import ops
     cfg = _ml_cfg()
     SEQ, B = 8, 64
+    kd = np.dtype(key_dtype)
     app = App("bench_ml")
     app.source("events", {"tokens": ((SEQ,), jnp.int32),
                           "item": ((), jnp.int32)})
@@ -925,13 +985,13 @@ def bench_ml_mapper_throughput():
             subscribes=("events",))
     app.stream("scored").update(ops.semantic_topk(
         k=4, n_slots=32, table_capacity=256))
-    h = app.start(RuntimeConfig(batch_size=B))
+    h = app.start(RuntimeConfig(batch_size=B, key_dtype=key_dtype))
     rng = np.random.default_rng(12)
     batches = []
     for t in range(8):
         toks = rng.integers(1, cfg.vocab_size, (B, SEQ)).astype(np.int32)
         item = rng.integers(1, 1 << 10, B).astype(np.int32)
-        topic = rng.integers(0, 64, B).astype(np.int32)
+        topic = rng.integers(0, 64, B).astype(kd)
         batches.append({"events": EventBatch.of(
             key=topic, value={"tokens": toks, "item": item},
             ts=np.full(B, t, np.int32))})
@@ -944,10 +1004,55 @@ def bench_ml_mapper_throughput():
         jax.block_until_ready(box["s"]["tick"])
 
     us = _time(step, n=15)
+    app.close()
+    return B, us
+
+
+def bench_ml_mapper_throughput():
+    """Events/s through a FLOP-heavy ModelMapper stage + semantic top-k
+    updater — the full streaming-ML tick (embed, score, fused max slate
+    scatter), guarded in CI."""
+    B, us = _run_ml_mapper()
     row("ml_mapper_throughput", us,
         f"{B/(us/1e6):.0f} events/s: 2-layer model inference "
         f"(bucket=8 microbatches) + fused max slate tick")
-    app.close()
+
+
+_X64_CODE = r"""
+import os
+os.environ["JAX_ENABLE_X64"] = "1"
+from benchmarks import run as bench
+B, us = bench._run_ml_mapper(key_dtype="int64")
+print(f"X64,{us:.2f},{B}")
+"""
+
+
+def bench_ml_mapper_throughput_x64():
+    """The same streaming-ML tick under ``jax_enable_x64`` with int64
+    keys, in a subprocess (the flag is process-global) — the measured
+    cost of the wide-key mode on an f32 model path, answering the PR-9
+    open item: compare against ``ml_mapper_throughput`` before
+    defaulting any workload to 64-bit keys."""
+    import subprocess
+    root = os.path.join(os.path.dirname(__file__), "..")
+    r = subprocess.run(
+        [sys.executable, "-c", _X64_CODE], capture_output=True,
+        text=True, timeout=560,
+        env={**os.environ,
+             "PYTHONPATH": os.pathsep.join(
+                 [root, os.path.join(root, "src")])})
+    if r.returncode != 0:      # pragma: no cover - surfacing CI breakage
+        raise RuntimeError(f"x64 ml-mapper bench failed:\n{r.stderr}")
+    base = next((u for n, u, _ in ROWS
+                 if n == "ml_mapper_throughput"), None)
+    for line in r.stdout.splitlines():
+        if line.startswith("X64,"):
+            _, us, B = line.split(",")
+            us, B = float(us), int(B)
+            vs = (f", {us / base:.2f}x the int32/f32 row" if base else "")
+            row("ml_mapper_throughput_x64", us,
+                f"{B/(us/1e6):.0f} events/s with jax_enable_x64 + "
+                f"int64 keys (same model, subprocess){vs}")
 
 
 def bench_semantic_topk():
@@ -1081,12 +1186,15 @@ def main() -> None:
     bench_failover()
     bench_elasticity()
     bench_telemetry_overhead()
+    bench_histogram_overhead()
+    bench_event_latency()
     bench_closed_loop()
     bench_wal()
     bench_durability()
     bench_latency_breakdown()
     bench_serving()
     bench_ml_mapper_throughput()
+    bench_ml_mapper_throughput_x64()
     bench_semantic_topk()
     bench_serve_lm_app()
     bench_guard_calibration()

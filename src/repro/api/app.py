@@ -294,7 +294,8 @@ class App:
 
     def run(self, source_fn, n_ticks: int, *,
             runtime: Optional[RuntimeConfig] = None, drain=0,
-            recover: bool = False, source_offset: int = 0, **run_kw):
+            recover: bool = False, source_offset: int = 0,
+            trace_path: Optional[str] = None, **run_kw):
         """Drive the app for ``n_ticks``:
         ``source_fn(tick, max_events) -> {stream: EventBatch}``
         (``[n_shards, B]``-leading batches when distributed).  ``drain``
@@ -308,7 +309,12 @@ class App:
         runtimes only), the drive loop grows/shrinks the active shard
         set and rebalances the weighted ring mid-run — ``source_fn``
         must then size its batches by the live
-        ``app.engine.n_shards`` (DESIGN.md section 12)."""
+        ``app.engine.n_shards`` (DESIGN.md section 12).
+
+        ``trace_path`` exports the engine's span trace (Chrome trace
+        JSON, Perfetto-loadable) there after the run — needs
+        ``TelemetryConfig(trace=True)`` on the runtime (DESIGN.md
+        18.3)."""
         h = self.start(runtime, recover=recover)
         outputs: list = []
         if n_ticks:
@@ -327,6 +333,8 @@ class App:
         if drain:
             max_ticks = 64 if drain is True else int(drain)
             h.state, _ = self.engine.drain(h.state, max_ticks=max_ticks)
+        if trace_path is not None:
+            self.export_trace(trace_path)
         return outputs
 
     # ---- introspection (state threading owned here) -----------------
@@ -358,6 +366,17 @@ class App:
                 f"RuntimeConfig(telemetry=TelemetryConfig()) or an "
                 f"autoscale=LoadAutoscaler(...)")
         return reg.last or reg.observe(h.engine, h.state)
+
+    def export_trace(self, path: str) -> str:
+        """Write the engine's span trace to ``path`` as Chrome trace
+        JSON (``chrome://tracing`` / Perfetto).  Requires the engine to
+        have been started with ``TelemetryConfig(trace=True)``."""
+        tracer = getattr(self._live().engine, "tracer", None)
+        if tracer is None:
+            raise RuntimeError(
+                f"app {self.name!r} runs without tracing — pass "
+                f"RuntimeConfig(telemetry=TelemetryConfig(trace=True))")
+        return tracer.export(path)
 
     def serve(self, port: int = 0):
         """Start the HTTP slate server (paper section 4.4) bound to the

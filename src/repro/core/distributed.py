@@ -52,9 +52,11 @@ from repro.core.queues import OverflowPolicy
 from repro.core.workflow import Workflow
 from repro.slates import flush as flush_mod
 from repro.slates import table as tbl
+from repro.telemetry import latency as lat_mod
 from repro.telemetry import sketch as sk_mod
 from repro.telemetry.controller import LoadAutoscaler
 from repro.telemetry.metrics import MetricsRegistry, TelemetryConfig
+from repro.telemetry.trace import ControlLog, Tracer, null_span
 
 
 def _axis_size(axis_names) -> int:
@@ -439,10 +441,16 @@ class DistributedEngine:
             tele = self.cfg.autoscale.telemetry or TelemetryConfig()
         self.tele_cfg = tele
         self.telemetry: Optional[MetricsRegistry] = None
+        self.tracer: Optional[Tracer] = None
+        self._ctl_log: Optional[ControlLog] = None
         if tele is not None:
             self.telemetry = MetricsRegistry(
                 tele, batch_size=self.cfg.batch_size)
             self._salts = self.telemetry.salts
+            if tele.trace:
+                self.tracer = Tracer()
+            if tele.control_log:
+                self._ctl_log = ControlLog(tele.control_log)
         # hot-key split set: fixed-shape runtime input of the tick, so
         # split/unsplit swap contents without recompiling (ring-style).
         # Opt-in (explicit capacity, or a skew-enabled controller):
@@ -462,6 +470,11 @@ class DistributedEngine:
     @property
     def key_bits(self) -> int:
         return int(self.key_dtype.itemsize) * 8
+
+    def _span(self, name: str, **args):
+        """Tracer span when tracing is on, else a free no-op."""
+        return self.tracer.span(name, **args) if self.tracer \
+            else null_span(**args)
 
     # ---- state ----
     def init_state(self):
@@ -494,6 +507,11 @@ class DistributedEngine:
             state["sketch"] = per_shard(partial(
                 sk_mod.make_sketch, tc.depth, tc.width, tc.sample,
                 key_dtype=kd))
+            if tc.latency_buckets > 0:
+                state["lat_hist"] = per_shard(partial(
+                    lat_mod.make_hist,
+                    [u.name for u in self.wf.updaters()],
+                    tc.latency_buckets))
         state = jax.tree.map(lambda x: jnp.array(x, copy=True), state)
         return jax.device_put(state, self._shard_tree(state))
 
@@ -520,6 +538,10 @@ class DistributedEngine:
         sketch = None
         if "sketch" in state:
             sketch = {k: v[0] for k, v in state["sketch"].items()}
+        lat_hist = None
+        if "lat_hist" in state:
+            lat_hist = {k: jax.tree.map(lambda x: x[0], v)
+                        for k, v in state["lat_hist"].items()}
         sources = {k: jax.tree.map(lambda x: x[0], v)
                    for k, v in sources.items()}
         outputs: Dict[str, List[EventBatch]] = {}
@@ -576,6 +598,14 @@ class DistributedEngine:
                 sketch = sk_mod.sketch_update(
                     sketch, batch.key, batch.valid, self._salts,
                     impl=self.tele_cfg.impl)
+            if lat_hist is not None and isinstance(op, Updater):
+                # per-shard event age at dequeue (DESIGN.md 18): for a
+                # terminal updater this is end-to-end event-time-to-
+                # slate-visibility — same parity contract as the sketch
+                lat_hist[op.name] = lat_mod.hist_update(
+                    lat_hist[op.name], tick, batch.ts, batch.valid,
+                    n_buckets=self.tele_cfg.latency_buckets,
+                    impl=self.tele_cfg.impl)
             if isinstance(op, Mapper):
                 outs = op.map_batch(batch)
                 for s, b in outs.items():
@@ -617,6 +647,9 @@ class DistributedEngine:
         }
         if sketch is not None:
             new_state["sketch"] = {k: v[None] for k, v in sketch.items()}
+        if lat_hist is not None:
+            new_state["lat_hist"] = {k: lift(v)
+                                     for k, v in lat_hist.items()}
         return new_state, {k: lift(v) for k, v in out_batches.items()}
 
     def _two_choice(self, batch, primary, dest_op, ring_hashes,
@@ -924,7 +957,8 @@ class DistributedEngine:
                                          start_tick=t, handle=handle)
             outputs.extend(outs)
             t += n
-            report = self.telemetry.observe(self, state)
+            with self._span("telemetry_observe", tick=t):
+                report = self.telemetry.observe(self, state)
             if "sketch" in state:
                 state = dict(state)
                 state["sketch"] = sk_mod.decay(state["sketch"],
@@ -933,9 +967,9 @@ class DistributedEngine:
                 report, n_active=len(self.active_shards), limit=limit,
                 can_split=(self.dur is None and self._hot_capacity > 0),
                 already_split=tuple(self.split_key_set()))
+            rep = None
             if action is not None and t < end:
                 t0 = time.perf_counter()
-                rep = None
                 if action.kind == "scale":
                     state, rep = self.scale(state, action.target,
                                             drain_max=pol.drain_max)
@@ -955,6 +989,24 @@ class DistributedEngine:
                     pol.on_change(rep)
                 if handle is not None:
                     handle.state = state
+            if self._ctl_log is not None:
+                self._ctl_log.log({
+                    "tick": t,
+                    "pressure": [float(x) for x in
+                                 np.asarray(report.pressure).ravel()],
+                    "event_latency_p99": report.event_latency_p99,
+                    "queue_depth": float(
+                        np.asarray(report.queue_depth).sum()),
+                    "n_active": len(self.active_shards),
+                    "action": None if action is None else {
+                        "kind": action.kind, "target": action.target,
+                        "keys": [int(k) for k in action.keys],
+                        "reason": action.reason},
+                    "applied": None if rep is None else {
+                        "path": rep.path, "pause_s": rep.pause_s,
+                        "moved_rows": rep.moved_rows,
+                        "bytes_moved": rep.bytes_moved},
+                })
         self.tick_cursor = t
         return state, outputs
 
@@ -993,12 +1045,15 @@ class DistributedEngine:
                 eng_tick += 1
                 if self.dur is not None and self.dur.due(
                         eng_tick, state["tables"]):
-                    state, eng_tick = self._flush_boundary(
-                        state, eng_tick, meta={"source_tick": src_t})
+                    with self._span("flush_boundary", tick=eng_tick,
+                                    source_tick=src_t):
+                        state, eng_tick = self._flush_boundary(
+                            state, eng_tick, meta={"source_tick": src_t})
                     if handle is not None:
                         handle.on_frontier_advance()
                 if observe and src_t - obs_mark >= self.tele_cfg.window:
-                    report = self.telemetry.observe(self, state)
+                    with self._span("telemetry_observe", tick=src_t):
+                        report = self.telemetry.observe(self, state)
                     if handle is not None:
                         handle.on_telemetry(report)
                     state = dict(state)
@@ -1038,6 +1093,7 @@ class DistributedEngine:
         re-routes every replayed event with the current ring."""
         dur = self.dur
         assert dur is not None, "attach_durability first"
+        t_recover = time.perf_counter()
         frontier = frontier or dur.frontier
         f_tick = int(frontier.tick)
         offs = list(frontier.wal_offset) \
@@ -1059,51 +1115,58 @@ class DistributedEngine:
         state = jax.device_get(self.init_state())
         state["tick"] = np.full((self.n_shards,), f_tick, np.int32)
         rh, rs = self.ring.table()
-        for up in self.wf.updaters():
-            recs = dur.store.scan_records(
-                up.name, now=f_tick if up.ttl else None)
-            if not recs:
-                continue
-            ks = np.asarray(sorted(recs), self.key_dtype)
-            shard_of = np.asarray(jax.device_get(
-                route(jnp.asarray(ks), _salt(up.name), rh, rs)))
-            t = state["tables"][up.name]
-            per_shard = []
-            for sh in range(self.n_shards):
-                local = jax.tree.map(lambda x: jnp.asarray(x[sh]), t)
-                sel = np.nonzero(shard_of == sh)[0]
-                if len(sel):
-                    ts = np.asarray([recs[int(k)][0] for k in ks[sel]],
-                                    np.int32)
-                    slates = jax.tree.map(
-                        lambda *r: np.stack(r),
-                        *[recs[int(k)][1] for k in ks[sel]])
-                    local = flush_mod.restore_into(local, ks[sel],
-                                                   slates, ts)
-                per_shard.append(jax.device_get(local))
-            state["tables"][up.name] = jax.tree.map(
-                lambda *xs: np.stack(xs), *per_shard)
-        state = jax.tree.map(jnp.asarray, state,
-                             is_leaf=lambda x: isinstance(x, np.ndarray))
-        state = jax.device_put(state, self._shard_tree(state))
+        with self._span("recover_restore", frontier=f_tick):
+            for up in self.wf.updaters():
+                recs = dur.store.scan_records(
+                    up.name, now=f_tick if up.ttl else None)
+                if not recs:
+                    continue
+                ks = np.asarray(sorted(recs), self.key_dtype)
+                shard_of = np.asarray(jax.device_get(
+                    route(jnp.asarray(ks), _salt(up.name), rh, rs)))
+                t = state["tables"][up.name]
+                per_shard = []
+                for sh in range(self.n_shards):
+                    local = jax.tree.map(lambda x: jnp.asarray(x[sh]), t)
+                    sel = np.nonzero(shard_of == sh)[0]
+                    if len(sel):
+                        ts = np.asarray(
+                            [recs[int(k)][0] for k in ks[sel]], np.int32)
+                        slates = jax.tree.map(
+                            lambda *r: np.stack(r),
+                            *[recs[int(k)][1] for k in ks[sel]])
+                        local = flush_mod.restore_into(local, ks[sel],
+                                                       slates, ts)
+                    per_shard.append(jax.device_get(local))
+                state["tables"][up.name] = jax.tree.map(
+                    lambda *xs: np.stack(xs), *per_shard)
+            state = jax.tree.map(
+                jnp.asarray, state,
+                is_leaf=lambda x: isinstance(x, np.ndarray))
+            state = jax.device_put(state, self._shard_tree(state))
 
         cur = f_tick
-        try:
-            for tk, by_shard in merge_replay_ticks(
-                    list(dur.wals) + extra_wals, offs):
-                if tk < f_tick:
-                    continue
-                if len(offs) > self.n_shards:
-                    by_shard = self._fold_shard_sources(by_shard)
-                while cur < tk:
-                    state = self._step_empty(state)
+        with self._span("recover_replay", frontier=f_tick) as sp:
+            try:
+                for tk, by_shard in merge_replay_ticks(
+                        list(dur.wals) + extra_wals, offs):
+                    if tk < f_tick:
+                        continue
+                    if len(offs) > self.n_shards:
+                        by_shard = self._fold_shard_sources(by_shard)
+                    while cur < tk:
+                        state = self._step_empty(state)
+                        cur += 1
+                    state, _ = self.step(state, self._stack_shard_sources(
+                        by_shard))
                     cur += 1
-                state, _ = self.step(state, self._stack_shard_sources(
-                    by_shard))
-                cur += 1
-        finally:
-            for w in extra_wals:
-                w.close()
+            finally:
+                for w in extra_wals:
+                    w.close()
+            sp["replayed_ticks"] = cur - f_tick
+        if self.telemetry is not None:
+            self.telemetry.note_recovery(
+                time.perf_counter() - t_recover)
         return state
 
     def _fold_shard_sources(self, by_shard: Dict[int, Dict[str, Any]]
@@ -1154,6 +1217,8 @@ class DistributedEngine:
     def close(self):
         if self.dur is not None:
             self.dur.close()
+        if self._ctl_log is not None:
+            self._ctl_log.close()
 
     # ---- failure / elasticity (host side; master of section 4.3) ----
     def fail_shard(self, state, shard: int):
@@ -1404,10 +1469,20 @@ class DistributedEngine:
         still bound to pre-migration (freed) state.
         """
         with self.read_lock:
-            state, report = self._reconfigure_impl(
-                state, grow_to=grow_to, activate=activate,
-                deactivate=deactivate, weights=weights,
-                drain_max=drain_max, force_compact=force_compact)
+            with self._span("reconfigure") as sp:
+                state, report = self._reconfigure_impl(
+                    state, grow_to=grow_to, activate=activate,
+                    deactivate=deactivate, weights=weights,
+                    drain_max=drain_max, force_compact=force_compact)
+                # reconcile the report's measured pause with the traced
+                # span: pause_s was clocked inside the impl, so the
+                # span's dur (same region plus handle repoint) must
+                # bound it from above — a cheap invariant the trace
+                # tests assert
+                sp["pause_s"] = report.pause_s
+                sp["path"] = report.path
+                sp["n_shards"] = report.n_shards
+                sp["drain_ticks"] = report.drain_ticks
             if self._live_handle is not None:
                 self._live_handle.state = state
         return state, report

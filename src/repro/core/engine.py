@@ -21,6 +21,7 @@ front of every enqueue.
 from __future__ import annotations
 
 import threading
+import time
 from collections import deque
 from contextlib import nullcontext
 from dataclasses import dataclass, field
@@ -41,8 +42,10 @@ from repro.core.queues import OverflowPolicy
 from repro.core.workflow import Workflow
 from repro.slates import flush as flush_mod
 from repro.slates import table as tbl
+from repro.telemetry import latency as lat_mod
 from repro.telemetry import sketch as sk_mod
 from repro.telemetry.metrics import MetricsRegistry, TelemetryConfig
+from repro.telemetry.trace import Tracer, null_span
 
 
 @dataclass
@@ -198,11 +201,26 @@ class StateHandle:
         if self.cache is not None:
             self.cache.invalidate()
 
+    def metrics_text(self) -> str:
+        """Prometheus text exposition of the engine's current counters,
+        latest telemetry window, and cumulative latency histograms —
+        rendered from snapshots the registry already holds plus one
+        ``stats()`` read (no hot-path cost beyond that)."""
+        from repro.telemetry.prom import render_prometheus
+        reg = getattr(self.engine, "telemetry", None)
+        return render_prometheus(
+            stats=self.stats(),
+            report=reg.last if reg is not None else None,
+            hist=reg.hist_cum if reg is not None else None,
+            n_buckets=(reg.cfg.latency_buckets
+                       if reg is not None else lat_mod.N_BUCKETS))
+
     def serve(self, port: int = 0):
         """Start an HTTP slate server bound to this handle."""
         from repro.slates.http import SlateServer
         return SlateServer(read_fn=self.read_slate, stats_fn=self.stats,
-                           read_many_fn=self.read_slates, port=port)
+                           read_many_fn=self.read_slates,
+                           metrics_fn=self.metrics_text, port=port)
 
 
 class Engine:
@@ -228,10 +246,18 @@ class Engine:
                                         self.cfg.queue_capacity,
                                         self.cfg.batch_size)
         self.telemetry: Optional[MetricsRegistry] = None
+        self.tracer: Optional[Tracer] = None
         if self.cfg.telemetry is not None:
             self.telemetry = MetricsRegistry(
                 self.cfg.telemetry, batch_size=self.cfg.batch_size)
             self._salts = self.telemetry.salts
+            if self.cfg.telemetry.trace:
+                self.tracer = Tracer()
+
+    def _span(self, name: str, **args):
+        """Tracer span when tracing is on, else a free no-op."""
+        return self.tracer.span(name, **args) if self.tracer \
+            else null_span(**args)
 
     @property
     def key_bits(self) -> int:
@@ -263,6 +289,10 @@ class Engine:
             tc = self.cfg.telemetry
             state["sketch"] = sk_mod.make_sketch(tc.depth, tc.width,
                                                  tc.sample, key_dtype=kd)
+            if tc.latency_buckets > 0:
+                state["lat_hist"] = lat_mod.make_hist(
+                    [u.name for u in self.wf.updaters()],
+                    tc.latency_buckets)
         # constants are interned by XLA; donation needs distinct buffers
         return jax.tree.map(lambda x: jnp.array(x, copy=True), state)
 
@@ -276,6 +306,8 @@ class Engine:
         deferred_total = state["deferred"]
         tick = state["tick"]
         sketch = state.get("sketch")
+        lat_hist = dict(state["lat_hist"]) if "lat_hist" in state \
+            else None
         outputs: Dict[str, List[EventBatch]] = {}
 
         def deliver_all(items: List[Tuple[str, EventBatch]]):
@@ -321,6 +353,14 @@ class Engine:
                 sketch = sk_mod.sketch_update(
                     sketch, batch.key, batch.valid, self._salts,
                     impl=cfg.telemetry.impl)
+            if lat_hist is not None and isinstance(op, Updater):
+                # event-latency telemetry (DESIGN.md 18): the event's
+                # age at dequeue, binned into this arc's power-of-two
+                # histogram — same parity contract as the sketch
+                lat_hist[op.name] = lat_mod.hist_update(
+                    lat_hist[op.name], tick, batch.ts, batch.valid,
+                    n_buckets=cfg.telemetry.latency_buckets,
+                    impl=cfg.telemetry.impl)
             if isinstance(op, Mapper):
                 outs = op.map_batch(batch)
                 for s, b in outs.items():
@@ -365,6 +405,8 @@ class Engine:
         }
         if sketch is not None:
             new_state["sketch"] = sketch
+        if lat_hist is not None:
+            new_state["lat_hist"] = lat_hist
         return new_state, out_batches
 
     # ---- multi-tick chunk (jit: one dispatch, one sync per chunk) ----
@@ -500,17 +542,21 @@ class Engine:
             # reader may be touching; hold the read lock from dispatch
             # until the fresh state is republished
             with self.read_lock:
-                state, outs, info = self.run_chunk(
-                    state, stack_sources(per_tick), n)
+                with self._span("chunk_dispatch", tick=t, n_ticks=n):
+                    state, outs, info = self.run_chunk(
+                        state, stack_sources(per_tick), n)
                 # chunk is in flight: resolve the previous boundary's
                 # deferred work while the device computes
                 if pending_flush is not None:
-                    self._flush_commit(pending_flush)
+                    with self._span("flush_commit"):
+                        self._flush_commit(pending_flush)
                     pending_flush = None
                     if handle is not None:
                         handle.on_frontier_advance()
                 if pending_obs is not None:
-                    report = self.telemetry.finish_observe(pending_obs)
+                    with self._span("observe_finish"):
+                        report = self.telemetry.finish_observe(
+                            pending_obs)
                     pending_obs = None
                     if handle is not None:
                         handle.on_telemetry(report)
@@ -532,14 +578,17 @@ class Engine:
                 t += n
                 eng_tick += n
                 if self.dur and self.dur.due(eng_tick, state["tables"]):
-                    state, eng_tick, pending_flush = self._flush_begin(
-                        state, eng_tick, meta={"source_tick": t})
+                    with self._span("flush_begin", tick=t):
+                        state, eng_tick, pending_flush = \
+                            self._flush_begin(state, eng_tick,
+                                              meta={"source_tick": t})
                 if (self.telemetry is not None
                         and t - obs_mark >= self.cfg.telemetry.window):
                     # start the boundary transfer; the report resolves
                     # after the next chunk's dispatch (one-chunk lag)
-                    pending_obs = self.telemetry.begin_observe(self,
-                                                               state)
+                    with self._span("observe_begin", tick=t):
+                        pending_obs = self.telemetry.begin_observe(
+                            self, state)
                     state = dict(state)
                     state["sketch"] = sk_mod.decay(
                         state["sketch"], self.cfg.telemetry.decay)
@@ -549,17 +598,20 @@ class Engine:
         # trailing deferred work: the run must not return with an
         # uncommitted frontier or an unresolved report
         if pending_flush is not None:
-            self._flush_commit(pending_flush)
+            with self._span("flush_commit"):
+                self._flush_commit(pending_flush)
             if handle is not None:
                 handle.on_frontier_advance()
         if pending_obs is not None:
-            report = self.telemetry.finish_observe(pending_obs)
+            with self._span("observe_finish"):
+                report = self.telemetry.finish_observe(pending_obs)
             if handle is not None:
                 handle.on_telemetry(report)
         if self.dur:
             # run() is a durable unit: every source batch it consumed is
             # on disk (and append errors surface) before control returns
-            self.dur.fence()
+            with self._span("wal_fence"):
+                self.dur.fence()
         return state, outputs
 
     def drain(self, state, max_ticks: int = 64):
@@ -661,20 +713,22 @@ class Engine:
         f_off = frontier.wal_offset
         f_off = f_off[0] if isinstance(f_off, (list, tuple)) else f_off
 
+        t_recover = time.perf_counter()
         state = self.init_state()
         state["tick"] = jnp.asarray(f_tick, jnp.int32)
-        for up in self.wf.updaters():
-            recs = store.scan_records(
-                up.name, now=f_tick if up.ttl else None)
-            if not recs:
-                continue
-            ks = np.asarray(sorted(recs), self.key_dtype)
-            ts = np.asarray([recs[int(k)][0] for k in ks], np.int32)
-            slates = jax.tree.map(
-                lambda *rows: np.stack(rows),
-                *[recs[int(k)][1] for k in ks])
-            state["tables"][up.name] = flush_mod.restore_into(
-                state["tables"][up.name], ks, slates, ts)
+        with self._span("recover_restore", frontier=f_tick):
+            for up in self.wf.updaters():
+                recs = store.scan_records(
+                    up.name, now=f_tick if up.ttl else None)
+                if not recs:
+                    continue
+                ks = np.asarray(sorted(recs), self.key_dtype)
+                ts = np.asarray([recs[int(k)][0] for k in ks], np.int32)
+                slates = jax.tree.map(
+                    lambda *rows: np.stack(rows),
+                    *[recs[int(k)][1] for k in ks])
+                state["tables"][up.name] = flush_mod.restore_into(
+                    state["tables"][up.name], ks, slates, ts)
 
         # replay, preserving the per-tick batch structure (gaps in the
         # log — drain ticks, empty-source ticks — replay as empty ticks)
@@ -690,18 +744,24 @@ class Engine:
                     state, stack_sources(group), len(group))
                 replayed += len(group)
 
-        cur = f_tick
-        for tk, srcs in wal.replay(from_offset=f_off):
-            if tk < f_tick:
-                continue
-            while cur < tk:
-                pending.append({})
+        with self._span("recover_replay", frontier=f_tick) as sp:
+            cur = f_tick
+            for tk, srcs in wal.replay(from_offset=f_off):
+                if tk < f_tick:
+                    continue
+                while cur < tk:
+                    pending.append({})
+                    cur += 1
+                pending.append(srcs)
                 cur += 1
-            pending.append(srcs)
-            cur += 1
-            if len(pending) >= 4 * chunk:
-                flush_pending()
-        flush_pending()
+                if len(pending) >= 4 * chunk:
+                    flush_pending()
+            flush_pending()
+            sp["replayed_ticks"] = replayed
+        # the migration path measures pause_s around _reconfigure; the
+        # crash path surfaces its restore+replay wall time the same way
+        if self.telemetry is not None:
+            self.telemetry.note_recovery(time.perf_counter() - t_recover)
         return state
 
     def close(self):

@@ -1,0 +1,3 @@
+from repro.kernels.histogram.ops import histogram_update
+
+__all__ = ["histogram_update"]

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the latency-histogram update.
+
+Like the count-min oracle, the whole backend is one exact integer
+scatter-add, so every impl agrees bitwise — the histogram is
+telemetry, but a nondeterministic one would break the "histogram on
+vs off" parity contract (DESIGN.md section 18).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def histogram_update(counts, cols, add):
+    """counts: [rows, width] int32; cols: [rows, B] int32 bucket per
+    row; add: [B] int32 increment per event (0 for invalid rows).
+    Returns counts with every (row, bucket) bumped by its event's
+    increment — duplicate buckets accumulate.  Same flat 1D ravelled
+    scatter as the count-min oracle (the scatter is the whole cost)."""
+    rows, width = counts.shape
+    flat = (cols
+            + (jnp.arange(rows, dtype=jnp.int32) * width)[:, None])
+    amt = jnp.broadcast_to(add.astype(counts.dtype)[None, :], cols.shape)
+    return counts.ravel().at[flat.ravel()].add(
+        amt.ravel()).reshape(rows, width)

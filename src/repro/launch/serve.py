@@ -262,7 +262,23 @@ class ServingEngine:
             return None
 
         return SlateServer(read_fn=read_fn, stats_fn=self.stats,
-                           port=port)
+                           metrics_fn=self.metrics_text, port=port)
+
+    def metrics_text(self) -> str:
+        """Prometheus exposition for the serving engine: decode-side
+        counters plus the windowed TelemetryReport, same renderer as
+        the stream engine's ``/metrics`` (DESIGN.md 18.4)."""
+        from repro.telemetry.prom import render_prometheus
+        stats = {
+            "tick": self.tick,
+            "processed": {"decode": self._tokens_cum},
+            "queue_dropped": {"admission": self.shed},
+            "table_occupancy": {"slots": int(self.active.sum())
+                                / max(1, self.scfg.n_slots)},
+            "finished": len(self.finished),
+            "queued": len(self.queue),
+        }
+        return render_prometheus(stats=stats, report=self.telemetry.last)
 
     def stats(self) -> Dict[str, Any]:
         lat = [r.done_tick - r.arrived_tick for r in self.finished

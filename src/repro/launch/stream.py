@@ -85,11 +85,16 @@ def make_app(args) -> App:
             scale_at=dict(args.scale_at or ()),
             rebalance_every=args.rebalance_every,
             on_change=on_change)
+    telemetry = None
+    if getattr(args, "trace", None):
+        from repro.telemetry import TelemetryConfig
+        telemetry = TelemetryConfig(trace=True)
     app.start(RuntimeConfig(batch_size=args.batch,
                             queue_capacity=args.batch * 4,
                             chunk_size=args.chunk,
                             shards=args.shards,
                             autoscale=autoscale,
+                            telemetry=telemetry,
                             durable_dir=args.dir,
                             flush_every=args.flush_every,
                             truncate_wal=args.truncate_wal),
@@ -177,6 +182,10 @@ def main(argv=None):
                     help="restore slates + replay WAL before running")
     ap.add_argument("--serve", action="store_true",
                     help="HTTP slate server live during the run")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="record engine phase spans and export them as "
+                         "Chrome trace JSON (open in Perfetto) after "
+                         "the run")
     args = ap.parse_args(argv)
     if args.autoscale is not None and args.shards < 2:
         ap.error("--autoscale needs --shards >= 2 (a distributed "
@@ -225,6 +234,13 @@ def main(argv=None):
         print(f"CRASH at source tick {args.crash_at} (state dropped; "
               f"rerun with --recover)")
         return   # no close(): unflushed slates die with the process
+
+    if args.trace:
+        path = app.export_trace(args.trace)
+        with open(path) as f:          # verify it round-trips as JSON
+            n_spans = len(json.load(f)["traceEvents"])
+        print(f"trace: {n_spans} span(s) -> {path} "
+              f"(load in Perfetto / chrome://tracing)")
 
     print(json.dumps(app.stats(), indent=2))
     if args.autoscale is not None:

@@ -7,6 +7,7 @@ from the durable key-value store to ensure an up-to-date reply."
 GET /slate/<updater>/<key>     -> JSON slate (from the device table)
 GET /slates/<updater>?keys=a,b -> batched read: {"slates": {key: slate|null}}
 GET /status                    -> engine stats JSON
+GET /metrics                   -> Prometheus text exposition (0.0.4)
 """
 from __future__ import annotations
 
@@ -36,8 +37,10 @@ class SlateServer:
     def __init__(self, read_fn: Callable[[str, int], Any],
                  stats_fn: Callable[[], Any], port: int = 0,
                  read_many_fn: Optional[Callable[[str, list], list]]
-                 = None):
-        handler = self._make_handler(read_fn, stats_fn, read_many_fn)
+                 = None,
+                 metrics_fn: Optional[Callable[[], str]] = None):
+        handler = self._make_handler(read_fn, stats_fn, read_many_fn,
+                                     metrics_fn)
         self.httpd = ThreadingHTTPServer(("127.0.0.1", port), handler)
         self.port = self.httpd.server_address[1]
         self._thread = threading.Thread(target=self.httpd.serve_forever,
@@ -45,7 +48,8 @@ class SlateServer:
         self._thread.start()
 
     @staticmethod
-    def _make_handler(read_fn, stats_fn, read_many_fn=None):
+    def _make_handler(read_fn, stats_fn, read_many_fn=None,
+                      metrics_fn=None):
         class Handler(BaseHTTPRequestHandler):
             def log_message(self, *a):  # quiet
                 pass
@@ -58,12 +62,29 @@ class SlateServer:
                 self.end_headers()
                 self.wfile.write(raw)
 
+            def _send_text(self, code: int, text: str, ctype: str):
+                raw = text.encode()
+                self.send_response(code)
+                self.send_header("Content-Type", ctype)
+                self.send_header("Content-Length", str(len(raw)))
+                self.end_headers()
+                self.wfile.write(raw)
+
             def do_GET(self):
                 url = urlparse(self.path)
                 parts = [p for p in url.path.split("/") if p]
                 try:
                     if parts[:1] == ["status"]:
                         self._send(200, stats_fn())
+                    elif parts[:1] == ["metrics"]:
+                        if metrics_fn is None:
+                            self._send(404,
+                                       {"error": "metrics not enabled"})
+                        else:
+                            self._send_text(
+                                200, metrics_fn(),
+                                "text/plain; version=0.0.4; "
+                                "charset=utf-8")
                     elif len(parts) == 3 and parts[0] == "slate":
                         slate = read_fn(parts[1], int(parts[2]))
                         if slate is None:

@@ -15,6 +15,9 @@ Three layers, observe -> decide -> act:
 from repro.telemetry.controller import Action, LoadAutoscaler
 from repro.telemetry.metrics import (MetricsRegistry, TelemetryConfig,
                                      TelemetryReport)
+from repro.telemetry.prom import render_prometheus
+from repro.telemetry.trace import ControlLog, Tracer
 
-__all__ = ["Action", "LoadAutoscaler", "MetricsRegistry",
-           "TelemetryConfig", "TelemetryReport"]
+__all__ = ["Action", "ControlLog", "LoadAutoscaler", "MetricsRegistry",
+           "TelemetryConfig", "TelemetryReport", "Tracer",
+           "render_prometheus"]

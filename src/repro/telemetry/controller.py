@@ -66,6 +66,13 @@ class LoadAutoscaler:
     max_shards: int = 0         # 0 = bounded by visible devices
     scale_factor: int = 2       # grow/shrink multiplier per action
     skew: float = 0.0           # top-key share threshold (0 = no splits)
+    # latency watermark (DESIGN.md 18): >0 drives the *scale-up* streak
+    # from ``report.event_latency_p99`` (source ticks) instead of mean
+    # pressure — a fast-data service is operated off its tail latency,
+    # and the tail can breach an SLO while mean backlog still looks
+    # healthy.  Scale-down keeps the pressure watermark (a quiet p99
+    # says nothing about how much headroom the fleet has).
+    p99_high: float = 0.0
     rebalance_ratio: float = 0.0  # max/mean pressure ratio (0 = off)
     gain: float = 0.5           # heat -> weight damping for rebalance
     drain_max: int = 64         # drain-barrier bound per action
@@ -104,7 +111,10 @@ class LoadAutoscaler:
                 / report.window_s)))
         # streaks accumulate even during cooldown — a persistent
         # condition should fire the moment the cooldown expires
-        self._hi = self._hi + 1 if mean > self.high else 0
+        p99 = float(getattr(report, "event_latency_p99", 0.0) or 0.0)
+        hi_cond = p99 > self.p99_high if self.p99_high > 0.0 \
+            else mean > self.high
+        self._hi = self._hi + 1 if hi_cond else 0
         self._lo = self._lo + 1 if mean < self.low else 0
         if self._cool > 0:
             self._cool -= 1
@@ -127,10 +137,12 @@ class LoadAutoscaler:
         if self._hi >= self.dwell:
             target = min(limit, n_active * self.scale_factor)
             if target > n_active:
+                why = (f"p99 latency {p99:.0f} ticks > {self.p99_high:g}"
+                       if self.p99_high > 0.0
+                       else f"pressure {mean:.2f} > high {self.high}")
                 return self._fire(Action(
                     kind="scale", target=target,
-                    reason=f"pressure {mean:.2f} > high {self.high} "
-                           f"for {self._hi} windows"))
+                    reason=f"{why} for {self._hi} windows"))
         if self._lo >= self.dwell:
             target = max(self.min_shards, n_active // self.scale_factor)
             if target < n_active:

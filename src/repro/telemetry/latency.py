@@ -1,0 +1,124 @@
+"""Per-arc latency histograms: device state + host readout.
+
+The device side answers "how old is each event when an updater dequeues
+it?" without any per-event host traffic: one power-of-two-bucket
+histogram per updater arc, updated inside the jitted tick from
+``engine_tick - event.ts`` (``kernels/histogram``).  Bucket ``b`` holds
+latencies in ``[2^(b-1), 2^b)`` (bucket 0 is exactly {0}); the binning
+is the integer bit-length ``32 - clz(lat)``, so bucket edges are exact
+— no float log2 jitter at powers of two — and the top bucket saturates.
+
+For a source-fed updater the reading is queue delay; for the terminal
+updater of a map/update chain it is the paper's end-to-end
+event-time-to-slate-visibility.  The report pools all arcs for the
+``event_latency_p*`` quantiles and keeps per-arc ``queue_delay_p99``.
+
+Host side (``quantile``) interpolates percentiles from *windowed*
+bucket-count deltas at chunk boundaries only — the counters ride the
+same ``begin_observe``/``finish_observe`` device_get the drivers
+already pay for (DESIGN.md 18), so the hot path gains zero syncs.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.histogram import histogram_update
+
+# Logical power-of-two buckets; 32 covers the full int32 latency range
+# (bucket 31 holds >= 2^30 ticks).  The device row is padded up to the
+# TPU lane width so the Pallas one-hot kernel stays engaged.
+N_BUCKETS = 32
+LANE = 128
+
+
+def pad_width(n_buckets: int) -> int:
+    """Device row width: logical buckets padded to a lane multiple.
+    The padded tail is never hit (bucketize saturates below it)."""
+    return ((max(1, n_buckets) + LANE - 1) // LANE) * LANE
+
+
+def make_hist(arcs: Sequence[str], n_buckets: int) -> Dict[str, Any]:
+    """Fresh histogram state, one row per updater arc (no leading
+    shard dim; engines broadcast).  ``sum`` accumulates total latency
+    ticks for the Prometheus ``_sum`` series — int32, pinned so x64
+    mode cannot widen the scan carry."""
+    w = pad_width(n_buckets)
+    return {a: {"counts": jnp.zeros((1, w), jnp.int32),
+                "sum": jnp.zeros((), jnp.int32)}
+            for a in arcs}
+
+
+def bucketize(lat, n_buckets: int):
+    """[B] int32 latencies -> [B] int32 bucket indices (jit-safe).
+
+    Integer bit-length binning: 0 -> 0, 1 -> 1, [2,4) -> 2, [4,8) -> 3,
+    ... [2^(b-1), 2^b) -> b, clamped to the saturating top bucket.
+    ``clz`` keeps the edges bitwise exact — float ``log2`` misplaces
+    counts at large powers of two."""
+    lat = jnp.maximum(lat, 0).astype(jnp.int32)
+    b = jnp.int32(32) - jax.lax.clz(lat)
+    return jnp.minimum(b, jnp.int32(n_buckets - 1))
+
+
+def hist_update(h, tick, ts, valid, *, n_buckets: int,
+                impl: str = "auto"):
+    """Fold one dequeued batch into one arc's histogram — called inside
+    the jitted tick; shape-static and sync-free.  ``tick - ts`` is the
+    event's age in source ticks at dequeue (clamped at 0 for
+    future-stamped events)."""
+    lat = jnp.maximum(tick - ts, 0).astype(jnp.int32)
+    cols = bucketize(lat, n_buckets)[None, :]          # [1, B]
+    add = valid.astype(jnp.int32)
+    return {
+        "counts": histogram_update(h["counts"], cols, add, impl=impl),
+        "sum": h["sum"] + jnp.sum(jnp.where(valid, lat, 0),
+                                  dtype=jnp.int32),
+    }
+
+
+# ---- host-side readout (chunk-boundary snapshots) --------------------
+
+def bucket_lo(b: int) -> int:
+    """Inclusive lower edge of bucket b (in ticks)."""
+    return 0 if b <= 0 else 1 << (b - 1)
+
+
+def bucket_hi(b: int) -> int:
+    """Exclusive upper edge of bucket b (in ticks)."""
+    return 1 << b
+
+
+def quantile(counts: np.ndarray, q: float, *, n_buckets: int) -> float:
+    """Interpolated quantile from (windowed) bucket counts.
+
+    Standard histogram interpolation: find the bucket holding rank
+    ``q * N`` and place the quantile linearly within its ``[lo, hi)``
+    edge interval.  The saturating top bucket has no finite upper edge,
+    so mass landing there reports the bucket's lower edge (the
+    Prometheus ``histogram_quantile`` convention for +Inf)."""
+    counts = np.asarray(counts, np.float64).ravel()[:n_buckets]
+    total = counts.sum()
+    if total <= 0:
+        return 0.0
+    target = q * total
+    cum = 0.0
+    for b, c in enumerate(counts):
+        if c <= 0:
+            continue
+        if cum + c >= target:
+            if b >= n_buckets - 1:
+                return float(bucket_lo(b))
+            lo, hi = bucket_lo(b), bucket_hi(b)
+            frac = min(1.0, max(0.0, (target - cum) / c))
+            return float(lo + (hi - lo) * frac)
+        cum += c
+    return float(bucket_lo(n_buckets - 1))
+
+
+def quantiles(counts: np.ndarray, qs: Sequence[float], *,
+              n_buckets: int):
+    return [quantile(counts, q, n_buckets=n_buckets) for q in qs]

@@ -18,13 +18,14 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.telemetry import latency as lat_mod
 from repro.telemetry import sketch as sk_mod
 
 
@@ -50,6 +51,12 @@ class TelemetryConfig:
     alpha: float = 0.5        # EMA smoothing of windowed readings
     top_k: int = 8            # heavy hitters reported per window
     seed: int = 0x7E1E        # sketch salt seed
+    # latency observability (DESIGN.md 18): power-of-two event-latency
+    # buckets per updater arc, updated inside the jitted tick.  0
+    # disables the histogram state entirely.
+    latency_buckets: int = 32
+    trace: bool = False       # host-side span tracer on the drive loop
+    control_log: Optional[str] = None  # autoscaler decision JSONL path
 
 
 @dataclass
@@ -78,6 +85,15 @@ class TelemetryReport:
     # re-queued by sequential hotspot backpressure — both this window
     shed_delta: Any = 0.0         # [n_shards] when the engine reports it
     deferred_delta: Any = 0.0
+    # end-to-end latency (DESIGN.md section 18): quantiles interpolated
+    # from the windowed device-histogram deltas, pooled over arcs; the
+    # per-arc p99 keeps the queue-delay breakdown ("which arc's queue
+    # is eating the latency").  All in source ticks.
+    event_latency_p50: float = 0.0
+    event_latency_p90: float = 0.0
+    event_latency_p99: float = 0.0
+    queue_delay_p99: Any = field(default_factory=dict)
+    recovery_replay_s: float = 0.0  # last recover() restore+replay secs
 
     def to_dict(self) -> Dict[str, Any]:
         """JSON-safe form (the HTTP status surface)."""
@@ -108,6 +124,11 @@ class MetricsRegistry:
         self._pause_ema = 0.0
         self._bytes_ema = 0.0
         self._obs_t: Optional[float] = None
+        self._recovery_s = 0.0
+        # cumulative per-arc latency histograms from the last boundary
+        # read (arc -> {"counts", "sum"}) — the /metrics exposition
+        # renders these as native Prometheus _bucket/_sum/_count series
+        self.hist_cum: Dict[str, Any] = {}
 
     # ---- engine-agnostic core ---------------------------------------
     def observe_raw(self, *, tick: int, events: np.ndarray,
@@ -116,7 +137,8 @@ class MetricsRegistry:
                     active: Sequence[int],
                     heavy: List[Tuple[int, int]] = (),
                     shed: Optional[np.ndarray] = None,
-                    deferred: Optional[np.ndarray] = None
+                    deferred: Optional[np.ndarray] = None,
+                    hist: Optional[Dict[str, Any]] = None
                     ) -> TelemetryReport:
         """Fold one boundary reading (cumulative counters) into the
         window state and return the report.  ``events`` / ``queue_peak``
@@ -136,7 +158,8 @@ class MetricsRegistry:
         m = self._mark
         if m is None or m["events"].shape != events.shape:
             m = {"tick": tick, "events": events, "peak": queue_peak,
-                 "dropped": dropped, "shed": shed, "deferred": deferred}
+                 "dropped": dropped, "shed": shed, "deferred": deferred,
+                 "hist": hist}
         if self._ema_ev is None or self._ema_ev.shape != events.shape:
             # EMAs survive a same-shape rebase: only the *window marks*
             # restart at migrations — zeroing smoothed pressure there
@@ -166,9 +189,31 @@ class MetricsRegistry:
             if 0.0 < self.cfg.decay < 1.0 else total
         hh = [(k, est, min(1.0, est / norm) if norm else 0.0)
               for k, est in heavy]
+        # latency quantiles from windowed histogram deltas: pooled over
+        # arcs for the end-to-end figure, per-arc for queue-delay p99
+        nb = self.cfg.latency_buckets
+        lat_p = [0.0, 0.0, 0.0]
+        arc_p99: Dict[str, float] = {}
+        if hist and nb > 0:
+            mh = m.get("hist") or {}
+            pooled = None
+            for a, h in hist.items():
+                cum = np.asarray(h["counts"], np.float64)
+                prev = mh.get(a)
+                d = np.clip(cum - np.asarray(prev["counts"],
+                                             np.float64), 0.0, None) \
+                    if prev is not None \
+                    and np.shape(prev["counts"]) == cum.shape \
+                    else np.zeros_like(cum)
+                arc_p99[a] = lat_mod.quantile(d, 0.99, n_buckets=nb)
+                pooled = d if pooled is None else pooled + d
+            if pooled is not None:
+                lat_p = lat_mod.quantiles(pooled, (0.5, 0.9, 0.99),
+                                          n_buckets=nb)
+            self.hist_cum = hist
         self._mark = {"tick": tick, "events": events, "peak": queue_peak,
                       "dropped": dropped, "shed": shed,
-                      "deferred": deferred}
+                      "deferred": deferred, "hist": hist}
         now = time.perf_counter()
         window_s = (now - self._obs_t) if self._obs_t is not None else 0.0
         self._obs_t = now
@@ -181,7 +226,10 @@ class MetricsRegistry:
             migration_pause_s=self._pause_ema,
             window_s=window_s,
             migration_bytes_moved=self._bytes_ema,
-            shed_delta=shed_d, deferred_delta=def_d)
+            shed_delta=shed_d, deferred_delta=def_d,
+            event_latency_p50=lat_p[0], event_latency_p90=lat_p[1],
+            event_latency_p99=lat_p[2], queue_delay_p99=arc_p99,
+            recovery_replay_s=self._recovery_s)
         return self.last
 
     # ---- stream-engine adapter --------------------------------------
@@ -215,12 +263,13 @@ class MetricsRegistry:
         engine, tree = pending
         host = jax.device_get(tree)
         (tick, events, qsize, qpeak, dropped, occ, heavy,
-         active, shed, deferred) = self._post(engine, host,
-                                              with_heavy=True)
+         active, shed, deferred, hist) = self._post(engine, host,
+                                                    with_heavy=True)
         return self.observe_raw(
             tick=tick, events=events, queue_depth=qsize,
             queue_peak=qpeak, dropped=dropped, occupancy=occ,
-            active=active, heavy=heavy, shed=shed, deferred=deferred)
+            active=active, heavy=heavy, shed=shed, deferred=deferred,
+            hist=hist)
 
     def _tree(self, engine, state, *, with_heavy: bool):
         upd = {u.name for u in engine.wf.updaters()}
@@ -244,6 +293,8 @@ class MetricsRegistry:
             tree["deferred"] = state["deferred"]
         if with_heavy and "sketch" in state:
             tree["sk"] = state["sketch"]
+        if "lat_hist" in state:
+            tree["hist"] = state["lat_hist"]
         return tree
 
     def _read(self, engine, state, *, with_heavy: bool):
@@ -290,9 +341,19 @@ class MetricsRegistry:
         shed = shards(host["shed"]) if "shed" in host else None
         deferred = shards(host["deferred"]) if "deferred" in host \
             else None
+        hist = None
+        if "hist" in host:
+            # per-arc [1, W] rows (leading shard dim on the distributed
+            # engine) -> one global [W] row + total latency sum per arc
+            hist = {}
+            for a, h in host["hist"].items():
+                c = np.asarray(h["counts"])
+                w = c.shape[-1]
+                hist[a] = {"counts": c.reshape(-1, w).sum(axis=0),
+                           "sum": float(np.asarray(h["sum"]).sum())}
         return (tick, events, summed(host["qsize"]),
                 summed(host["qpeak"]), dropped, summed(host["occ"]),
-                heavy, active, shed, deferred)
+                heavy, active, shed, deferred, hist)
 
     # ---- window management ------------------------------------------
     def rebase(self, engine, state):
@@ -301,13 +362,21 @@ class MetricsRegistry:
         no report, no heavy-hitter estimation, and the EMAs are left
         untouched (folding an artificial post-drain zero reading into
         them would bias the controller toward premature scale-down)."""
-        tick, events, _, qpeak, dropped, _, _, _, shed, deferred = \
-            self._read(engine, state, with_heavy=False)
+        (tick, events, _, qpeak, dropped, _, _, _, shed, deferred,
+         hist) = self._read(engine, state, with_heavy=False)
         z = np.zeros_like(events)
         self._mark = {"tick": tick, "events": events, "peak": qpeak,
                       "dropped": dropped,
                       "shed": z if shed is None else shed,
-                      "deferred": z if deferred is None else deferred}
+                      "deferred": z if deferred is None else deferred,
+                      "hist": hist}
+
+    def note_recovery(self, seconds: float):
+        """Record the last ``recover()`` wall time (restore + WAL
+        replay across shards) — surfaced as ``recovery_replay_s`` on
+        the report; the migration path's ``pause_s`` equivalent for
+        the crash-recovery path."""
+        self._recovery_s = float(seconds)
 
     def note_pause(self, seconds: float, bytes_moved: int = 0):
         """Record a reconfigure pause and the payload it re-homed
